@@ -1,0 +1,64 @@
+"""Paper Fig. 6 + Table III: per-batch time series around a worker kill at
+batch 205, recovery overhead, and post-recovery epoch time — FTPipeHD
+(re-partition + weight redistribution) vs ResPipe (successor takes over).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.runtime.devices import (DeviceSpec, WorkloadProfile,
+                                   uniform_bandwidth)
+from repro.runtime.simulator import PipelineSimulator, SimConfig
+
+
+def run(num_batches: int = 300, fail_at: int = 205):
+    prof = WorkloadProfile.mobilenetv2(batch=256)
+    devs = DeviceSpec.paper_trio()
+    bw = uniform_bandwidth(3)
+    res = {}
+    for policy in ("ftpipehd", "respipe"):
+        sim = PipelineSimulator(SimConfig(devs, prof, bw, policy=policy,
+                                          num_batches=num_batches))
+        res[policy] = sim.run(fail=(1, fail_at))
+
+    ft, rp = res["ftpipehd"], res["respipe"]
+    pre = slice(150, 200)
+    post = slice(fail_at + 45, num_batches - 10)
+    ft_post = float(np.median(ft.batch_times[post]))
+    rp_post = float(np.median(rp.batch_times[post]))
+    epoch_ft = ft_post * num_batches / 60.0
+    epoch_rp = rp_post * num_batches / 60.0
+    return [
+        ("fault/pre_fault_batch_s_ft", float(np.median(ft.batch_times[pre])),
+         "paper: ~2.1s"),
+        ("fault/pre_fault_batch_s_rp", float(np.median(rp.batch_times[pre])),
+         ""),
+        ("fault/recovery_overhead_ft_s", ft.recovery_overhead,
+         "paper: 2.24s"),
+        ("fault/recovery_overhead_rp_s", rp.recovery_overhead,
+         "paper: 0.13s"),
+        ("fault/post_fault_batch_s_ft", ft_post, ""),
+        ("fault/post_fault_batch_s_rp", rp_post, ""),
+        ("fault/epoch_after_recovery_ft_min", epoch_ft, "paper: 8.57min"),
+        ("fault/epoch_after_recovery_rp_min", epoch_rp, "paper: 59.18min"),
+        ("fault/post_recovery_speedup", rp_post / ft_post,
+         "paper: 6.9x"),
+    ]
+
+
+def time_series(num_batches: int = 300, fail_at: int = 205):
+    """The Fig. 6 per-batch series (for examples/fault_tolerance_demo)."""
+    prof = WorkloadProfile.mobilenetv2(batch=256)
+    devs = DeviceSpec.paper_trio()
+    bw = uniform_bandwidth(3)
+    out = {}
+    for policy in ("ftpipehd", "respipe"):
+        sim = PipelineSimulator(SimConfig(devs, prof, bw, policy=policy,
+                                          num_batches=num_batches))
+        out[policy] = sim.run(fail=(1, fail_at))
+    return out
+
+
+if __name__ == "__main__":
+    for n, v, d in run():
+        print(f"{n},{v},{d}")

@@ -1,0 +1,84 @@
+"""Paper Fig. 4: convergence with vs without weight aggregation under async
+pipeline semantics (3 stages). Real training of a small classifier on the
+synthetic class-conditional dataset; reports final train loss/accuracy for
+both, at the paper-style aggressive learning rate where staleness bites.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.synthetic import SyntheticClassification, class_batches
+from repro.optim import sgd_init, sgd_update
+from repro.runtime.semantics import AsyncTrainingExecutor
+
+
+def _mlp(key, dims=(64, 64, 64, 64, 10), d_in=64):
+    params = []
+    for d in dims:
+        key, k = jax.random.split(key)
+        params.append({"w": jax.random.normal(k, (d_in, d)) / np.sqrt(d_in),
+                       "b": jnp.zeros(d)})
+        d_in = d
+    return params
+
+
+def _loss(layers, batch):
+    x, y = batch
+    h = x.reshape(x.shape[0], -1)
+    for i, p in enumerate(layers):
+        h = h @ p["w"] + p["b"]
+        if i < len(layers) - 1:
+            h = jax.nn.relu(h)
+    lp = jax.nn.log_softmax(h)
+    return -jnp.mean(jnp.take_along_axis(lp, y[:, None], 1))
+
+
+def _acc(layers, batch):
+    x, y = batch
+    h = x.reshape(x.shape[0], -1)
+    for i, p in enumerate(layers):
+        h = h @ p["w"] + p["b"]
+        if i < len(layers) - 1:
+            h = jax.nn.relu(h)
+    return float(jnp.mean(jnp.argmax(h, -1) == y))
+
+
+def run(num_batches: int = 300, lrs=(0.05, 0.03)):
+    ds = SyntheticClassification(num_classes=10, image_hw=8, channels=1,
+                                 noise=0.8)
+    batches = [(jnp.asarray(x), jnp.asarray(y))
+               for x, y in class_batches(ds, 64, num_batches, seed=0)]
+    val = [(jnp.asarray(x), jnp.asarray(y))
+           for x, y in class_batches(ds, 256, 4, seed=99)]
+    rows = []
+    for lr in lrs:
+        out = {}
+        for agg in (0, 3):
+            params = _mlp(jax.random.PRNGKey(0))
+            ex = AsyncTrainingExecutor(
+                _loss, num_stages=3, assignment=[2, 2, 1],
+                update_fn=lambda p, g, s: sgd_update(p, g, s, lr=lr),
+                opt_state=sgd_init(params), aggregate_every=agg)
+            final, losses = ex.run(params, batches)
+            acc = float(np.mean([_acc(final, b) for b in val]))
+            out[agg] = (float(np.mean(losses[-20:])), acc)
+        tag = f"lr{lr}"
+        rows += [
+            (f"aggregation/{tag}/final_loss_without", out[0][0],
+             "paper-style SGD m=0.9 wd=4e-5"),
+            (f"aggregation/{tag}/final_loss_with", out[3][0], ""),
+            (f"aggregation/{tag}/val_acc_without", out[0][1],
+             "paper: 80.78% on CIFAR10"),
+            (f"aggregation/{tag}/val_acc_with", out[3][1],
+             "paper: 82.38% on CIFAR10"),
+            (f"aggregation/{tag}/acc_gain", out[3][1] - out[0][1],
+             "paper gain: +1.6pt"),
+        ]
+    return rows
+
+
+if __name__ == "__main__":
+    for n, v, d in run():
+        print(f"{n},{v},{d}")

@@ -1,0 +1,35 @@
+"""Continuous-batching serving demo: requests of different lengths share
+decode slots; each stream is bit-identical to standalone generation.
+
+    PYTHONPATH=src python examples/continuous_batching.py
+"""
+import jax
+
+from repro.configs import get_config
+from repro.models import model as model_lib
+from repro.serving import ServingEngine
+
+
+def main():
+    cfg = get_config("qwen2-1.5b").reduced(num_layers=2, vocab_size=128)
+    params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(cfg, params, max_slots=2, cache_len=48)
+
+    prompts = [[5, 9, 2], [7], [11, 3, 3, 1], [42, 17]]
+    uids = [eng.submit(p, max_new_tokens=8) for p in prompts]
+    print(f"submitted {len(prompts)} requests into {eng.max_slots} slots")
+
+    steps = 0
+    done = {}
+    while len(done) < len(uids) and steps < 200:
+        for r in eng.step():
+            done[r.uid] = r.generated
+            print(f"  step {steps:3d}: request {r.uid} finished -> "
+                  f"{r.generated}")
+        steps += 1
+    print(f"drained in {steps} engine steps "
+          f"(token-level interleaving across slots)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Dynamic model partition demo (paper Fig. 5 setting): watch the partition
+points move as the central node learns each device's real capacity, and the
+per-batch time drop.
+
+    PYTHONPATH=src python examples/heterogeneous_partition.py
+"""
+import numpy as np
+
+from repro.core.partition import solve_partition, uniform_partition
+from repro.runtime.devices import (DeviceSpec, WorkloadProfile,
+                                   uniform_bandwidth)
+from repro.runtime.simulator import (PipelineSimulator, SimConfig,
+                                     single_device_time)
+
+
+def main():
+    prof = WorkloadProfile.mobilenetv2(batch=256)
+    devs = DeviceSpec.paper_trio()          # capacities 1.0, 1.0, 10.0
+    print("devices:", [(d.name, d.capacity) for d in devs])
+
+    u = uniform_partition(prof.num_layers, 3)
+    print(f"\ninitial (homogeneous assumption): counts={u.counts}")
+    opt = solve_partition(prof.exec_times, prof.out_bytes,
+                          np.array([1.0, 1.0, 10.0]),
+                          np.array([10e6 / 8] * 2))
+    print(f"capacity-aware DP:                 counts={opt.counts} "
+          f"(slow device starved, bottleneck {opt.bottleneck:.2f}s)")
+
+    for policy in ("ftpipehd", "pipedream"):
+        sim = PipelineSimulator(SimConfig(devs, prof, uniform_bandwidth(3),
+                                          policy=policy, num_batches=300))
+        r = sim.run()
+        print(f"\n{policy}:")
+        for b, pts in r.partitions:
+            counts = np.diff(np.concatenate([[-1], pts])).tolist()
+            print(f"  from batch {b:4d}: layers/stage = {counts}")
+        print(f"  steady per-batch {r.steady_batch_time():.2f}s; "
+              f"epoch total {r.total_time:.0f}s")
+    single = single_device_time(prof, 1.0, 300)
+    print(f"\nsingle fastest device epoch: {single:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.checkpoint.store import CheckpointStore, save_pytree, restore_pytree
+from repro.checkpoint.replication_store import ReplicatedCheckpointer

@@ -1,0 +1,63 @@
+"""Chain + global replication as a checkpointing layer (TPU-native mapping
+of paper §III-E — see DESIGN.md §2).
+
+Per-stage weight shards are replicated (a) to the next stage's slot
+("chain": survives any single stage loss) and (b) to a global store
+("global": survives arbitrary losses). ``recover_stage`` prefers the fresher
+replica, exactly mirroring ``core.replication.ReplicaStore.recover``.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+
+from repro.core.replication import chain_target, should_chain, should_global
+
+
+class ReplicatedCheckpointer:
+    def __init__(self, num_stages: int, chain_every: int = 50,
+                 global_every: int = 100):
+        self.num_stages = num_stages
+        self.chain_every = chain_every
+        self.global_every = global_every
+        self._chain: dict[int, tuple[int, Any]] = {}
+        self._global: dict[int, tuple[int, Any]] = {}
+
+    def maybe_replicate(self, batch: int, stage_weights: Callable[[int], Any]):
+        """Call once per batch; snapshots per-stage weights on schedule.
+        Returns (did_chain, did_global) for cost accounting."""
+        did_c = should_chain(batch, self.chain_every)
+        did_g = should_global(batch, self.global_every)
+        if did_c:
+            for s in range(self.num_stages):
+                self._chain[s] = (batch, jax.tree.map(lambda a: a,
+                                                      stage_weights(s)))
+        if did_g:
+            for s in range(self.num_stages):
+                self._global[s] = (batch, jax.tree.map(lambda a: a,
+                                                       stage_weights(s)))
+        return did_c, did_g
+
+    def recover_stage(self, stage: int,
+                      lost_stages: set[int]) -> Optional[tuple[int, Any, str]]:
+        holder = chain_target(stage, self.num_stages)
+        if stage in self._chain and holder not in lost_stages:
+            b, w = self._chain[stage]
+            g = self._global.get(stage)
+            if g is None or g[0] <= b:
+                return b, w, "chain"
+        if stage in self._global:
+            b, w = self._global[stage]
+            return b, w, "global"
+        return None
+
+    def latest_consistent_batch(self, lost_stages: set[int]) -> int:
+        """Newest batch for which EVERY stage has a recoverable replica."""
+        best = -1
+        for s in range(self.num_stages):
+            r = self.recover_stage(s, lost_stages)
+            if r is None:
+                return -1
+            best = r[0] if best < 0 else min(best, r[0])
+        return best

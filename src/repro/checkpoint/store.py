@@ -1,0 +1,89 @@
+"""Pytree checkpointing to disk (msgpack + raw numpy buffers).
+
+The central node's own fault protection (paper §III-E: "saving the training
+states and model weights to the disk periodically").
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save_pytree(path: str, tree: Any, meta: dict | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    leaves, treedef = _flatten(tree)
+    manifest = {"treedef": str(treedef), "meta": meta or {},
+                "leaves": [{"shape": list(np.shape(l)),
+                            "dtype": str(np.asarray(l).dtype)} for l in leaves]}
+    with open(path + ".json", "w") as f:
+        json.dump(manifest, f)
+    with open(path + ".bin", "wb") as f:
+        for l in leaves:
+            f.write(np.ascontiguousarray(np.asarray(l)).tobytes())
+
+
+def restore_pytree(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (shapes must match)."""
+    leaves, treedef = _flatten(like)
+    with open(path + ".json") as f:
+        manifest = json.load(f)
+    assert len(manifest["leaves"]) == len(leaves), "structure mismatch"
+    out = []
+    with open(path + ".bin", "rb") as f:
+        for l, spec in zip(leaves, manifest["leaves"]):
+            arr = np.frombuffer(
+                f.read(int(np.prod(spec["shape"]) or 1)
+                       * np.dtype(spec["dtype"]).itemsize),
+                dtype=spec["dtype"]).reshape(spec["shape"])
+            assert list(np.shape(l)) == spec["shape"], (np.shape(l), spec)
+            out.append(jax.numpy.asarray(arr))
+    return jax.tree.unflatten(treedef, out)
+
+
+class CheckpointStore:
+    """Step-indexed checkpoint directory with retention."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    def _path(self, step: int) -> str:
+        return os.path.join(self.directory, f"ckpt_{step:08d}")
+
+    def save(self, step: int, tree: Any, meta: dict | None = None) -> str:
+        p = self._path(step)
+        save_pytree(p, tree, {"step": step, **(meta or {})})
+        self._gc()
+        return p
+
+    def steps(self) -> list[int]:
+        out = []
+        for fn in os.listdir(self.directory):
+            if fn.startswith("ckpt_") and fn.endswith(".json"):
+                out.append(int(fn[5:13]))
+        return sorted(out)
+
+    def restore_latest(self, like: Any):
+        steps = self.steps()
+        if not steps:
+            return None, -1
+        return restore_pytree(self._path(steps[-1]), like), steps[-1]
+
+    def _gc(self):
+        steps = self.steps()
+        for s in steps[:-self.keep]:
+            for ext in (".json", ".bin"):
+                try:
+                    os.remove(self._path(s) + ext)
+                except FileNotFoundError:
+                    pass

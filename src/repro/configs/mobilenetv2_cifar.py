@@ -1,0 +1,18 @@
+"""The paper's own workload: MobileNetV2 on CIFAR10/MNIST. [arXiv:1801.04381]
+
+Used by the edge-cluster simulator and the paper-reproduction benchmarks,
+not part of the 40-combo TPU dry-run matrix (see DESIGN.md §6).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mobilenetv2-cifar",
+    family="conv",
+    source="arXiv:1801.04381 (paper §IV-B)",
+    num_layers=19,          # 1 stem + 17 inverted-residual + 1 head conv
+    d_model=32,             # stem channels
+    vocab_size=10,          # classes
+    act="relu6",
+    pipeline_stages=3,      # the paper's 3-device setting
+    tensor_parallel=1,
+)

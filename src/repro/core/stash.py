@@ -1,0 +1,61 @@
+"""Weight stashing + the paper's weight aggregation (§III-C).
+
+``VersionedWeights`` is a ring of weight versions, pytree-agnostic. The edge
+simulator gives each worker one (depth n - stage); the TPU train state keeps
+depth ``cfg.stash_depth`` (default 2, PipeDream-2BW-style — see DESIGN.md §2).
+
+Aggregation: average the live versions ("n-i independent concurrent
+trainings") and collapse the ring onto the mean — the paper's Fig. 2
+version-jump (ver 3 -> 4 after aggregating) corresponds to ``aggregate()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_mean(trees: list[Any]):
+    return jax.tree.map(lambda *xs: sum(x.astype(jnp.float32) for x in xs)
+                        .astype(xs[0].dtype) / len(xs), *trees)
+
+
+@dataclasses.dataclass
+class VersionedWeights:
+    depth: int
+    versions: dict[int, Any] = dataclasses.field(default_factory=dict)
+    head: int = 0                       # newest version number
+
+    def put(self, version: int, params: Any) -> None:
+        self.versions[version] = params
+        self.head = max(self.head, version)
+        self._prune()
+
+    def get(self, version: int) -> Any:
+        """Fetch the stashed version; falls back to the nearest available
+        older version (PipeDream semantics: never use a *newer* one)."""
+        if version in self.versions:
+            return self.versions[version]
+        older = [v for v in self.versions if v <= version]
+        if older:
+            return self.versions[max(older)]
+        return self.versions[min(self.versions)]
+
+    def newest(self) -> Any:
+        return self.versions[self.head]
+
+    def live_versions(self) -> list[int]:
+        return sorted(self.versions)
+
+    def aggregate(self) -> Any:
+        """Average all live versions and collapse the ring (paper §III-C)."""
+        mean = tree_mean([self.versions[v] for v in sorted(self.versions)])
+        self.head += 1                   # aggregation bumps the version
+        self.versions = {self.head: mean}
+        return mean
+
+    def _prune(self) -> None:
+        while len(self.versions) > self.depth:
+            del self.versions[min(self.versions)]

@@ -1,0 +1,2 @@
+from repro.data.synthetic import (SyntheticClassification, SyntheticLM,
+                                  class_batches, lm_batches)

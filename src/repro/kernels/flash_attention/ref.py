@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_reference(q, k, v, *, causal: bool = True, window: int = 0,
+                        scale: float | None = None):
+    """q: [B, H, Sq, dh]; k, v: [B, Hkv, Skv, dh] (GQA). Dense softmax."""
+    B, H, Sq, dh = q.shape
+    _, Hkv, Skv, _ = k.shape
+    scale = scale if scale is not None else dh ** -0.5
+    rep = H // Hkv
+    k = jnp.repeat(k, rep, axis=1)
+    v = jnp.repeat(v, rep, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

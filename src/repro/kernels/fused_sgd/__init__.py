@@ -1,0 +1,2 @@
+from repro.kernels.fused_sgd.ops import fused_sgd, fused_sgd_tree
+from repro.kernels.fused_sgd.ref import sgd_reference

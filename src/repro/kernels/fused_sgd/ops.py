@@ -1,0 +1,46 @@
+"""Jit'd wrappers: flat-array update + whole-pytree update (flatten, pad,
+single fused kernel launch, unflatten)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.fused_sgd.kernel import fused_sgd_kernel
+
+
+def fused_sgd(p, g, m, *, lr, momentum=0.9, weight_decay=4e-5,
+              block=65536, interpret=True):
+    """Flat [N] update. Pads to the block size internally."""
+    (N,) = p.shape
+    blk = min(block, max(256, N))
+    pad = (-N) % blk
+    if pad:
+        p_, g_, m_ = (jnp.pad(a, (0, pad)) for a in (p, g, m))
+    else:
+        p_, g_, m_ = p, g, m
+    po, mo = fused_sgd_kernel(p_, g_, m_, lr=lr, momentum=momentum,
+                              weight_decay=weight_decay, block=blk,
+                              interpret=interpret)
+    return po[:N], mo[:N]
+
+
+def fused_sgd_tree(params, grads, mom, *, lr, momentum=0.9,
+                   weight_decay=4e-5, interpret=True):
+    """Whole-pytree fused update: one kernel launch over the concatenation."""
+    leaves_p, treedef = jax.tree.flatten(params)
+    leaves_g = jax.tree.leaves(grads)
+    leaves_m = jax.tree.leaves(mom)
+    sizes = [int(np.prod(l.shape)) for l in leaves_p]
+    flat = lambda ls: jnp.concatenate(
+        [l.reshape(-1).astype(jnp.float32) for l in ls])
+    po, mo = fused_sgd(flat(leaves_p), flat(leaves_g), flat(leaves_m), lr=lr,
+                       momentum=momentum, weight_decay=weight_decay,
+                       interpret=interpret)
+    outs_p, outs_m, off = [], [], 0
+    for l, n in zip(leaves_p, sizes):
+        outs_p.append(po[off:off + n].reshape(l.shape).astype(l.dtype))
+        outs_m.append(mo[off:off + n].reshape(l.shape))
+        off += n
+    return jax.tree.unflatten(treedef, outs_p), \
+        jax.tree.unflatten(treedef, outs_m)

@@ -1,0 +1,11 @@
+"""Oracle: textbook SGD+momentum+weight-decay update."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sgd_reference(p, g, m, *, lr, momentum=0.9, weight_decay=4e-5):
+    g = g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32)
+    m_new = momentum * m.astype(jnp.float32) + g
+    return (p.astype(jnp.float32) - lr * m_new).astype(p.dtype), \
+        m_new.astype(m.dtype)

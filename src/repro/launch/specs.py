@@ -1,0 +1,134 @@
+"""ShapeDtypeStruct stand-ins (weak-type-correct, shardable, no allocation)
+for every model input, per (architecture x input shape x mesh).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig, TrainConfig
+from repro.models import model as model_lib
+from repro.pipeline.sharding import (cache_specs, data_axes,
+                                     model_param_specs)
+
+
+def _sds(tree_shapes, tree_specs, mesh):
+    return jax.tree.map(
+        lambda s, spec: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(mesh, spec)),
+        tree_shapes, tree_specs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def shape_overrides(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """Per-shape config adjustments (DESIGN.md §4): long-context decode gets
+    a sliding window on every attention (SSM/hybrid state carries the long
+    range); whisper's decoder is capped at its positional budget."""
+    if shape.name == "long_500k" and cfg.family != "audio":
+        if cfg.family not in ("ssm",):
+            cfg = cfg.with_overrides(sliding_window=8192)
+    return cfg
+
+
+def decode_cache_len(cfg: ModelConfig, shape: InputShape) -> int:
+    if cfg.family == "audio":
+        return min(shape.seq_len, cfg.max_target_positions)
+    if cfg.sliding_window:
+        return min(shape.seq_len, cfg.sliding_window)
+    return shape.seq_len
+
+
+def batch_data_sharded(mesh, global_batch: int) -> bool:
+    n = 1
+    for a in data_axes(mesh):
+        n *= mesh.shape[a]
+    return global_batch % n == 0 and global_batch >= n
+
+
+def params_sds(cfg: ModelConfig, mesh, key=None):
+    shapes = jax.eval_shape(
+        lambda: model_lib.init_params(jax.random.PRNGKey(0), cfg))
+    return _sds(shapes, model_param_specs(cfg), mesh)
+
+
+def state_sds(cfg: ModelConfig, mesh, tc: TrainConfig):
+    p = params_sds(cfg, mesh)
+    repl = NamedSharding(mesh, P())
+    if tc.optimizer == "sgd":
+        opt = {"momentum": jax.tree.map(lambda s: s, p)}
+    else:
+        opt = {"m": p, "v": jax.tree.map(lambda s: s, p),
+               "count": jax.ShapeDtypeStruct((), jnp.int32, sharding=repl)}
+    return {"params": p, "stash": jax.tree.map(lambda s: s, p),
+            "opt_state": opt,
+            "step": jax.ShapeDtypeStruct((), jnp.int32, sharding=repl)}
+
+
+def train_batch_sds(cfg: ModelConfig, shape: InputShape, mesh):
+    dspec = data_axes(mesh)
+    B, S = shape.global_batch, shape.seq_len
+    tok_sh = NamedSharding(mesh, P(dspec, None))
+    act_sh = NamedSharding(mesh, P(dspec, None, None))
+    if cfg.family == "audio":
+        return {"frames": jax.ShapeDtypeStruct(
+                    (B, cfg.num_audio_frames, cfg.d_model), jnp.bfloat16,
+                    sharding=act_sh),
+                "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32,
+                                               sharding=tok_sh),
+                "labels": jax.ShapeDtypeStruct((B, S), jnp.int32,
+                                               sharding=tok_sh)}
+    batch = {}
+    S_text = S
+    if cfg.num_prefix_tokens:
+        S_text = S - cfg.num_prefix_tokens
+        batch["prefix"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_prefix_tokens, cfg.d_model), jnp.bfloat16,
+            sharding=act_sh)
+    batch["tokens"] = jax.ShapeDtypeStruct((B, S_text), jnp.int32,
+                                           sharding=tok_sh)
+    batch["labels"] = jax.ShapeDtypeStruct(
+        (B, S if cfg.num_prefix_tokens else S_text), jnp.int32,
+        sharding=tok_sh)
+    return batch
+
+
+def decode_inputs_sds(cfg: ModelConfig, shape: InputShape, mesh):
+    """(token, caches, pos, kv_source?) stand-ins for serve_step."""
+    sharded = batch_data_sharded(mesh, shape.global_batch)
+    dspec = data_axes(mesh) if sharded else None
+    B = shape.global_batch
+    W = decode_cache_len(cfg, shape)
+    layout = (cfg.decoder_slot_layout if cfg.family == "audio"
+              else cfg.slot_layout)
+    cache_shapes = jax.eval_shape(
+        lambda: model_lib.init_caches(cfg, batch=B, cache_len=W,
+                                      layout=layout, dtype=jnp.bfloat16))
+    cache_sp = [cache_specs(t, cfg, dspec) for t in layout]
+    caches = [_sds(cs, sp, mesh) for cs, sp in zip(cache_shapes, cache_sp)]
+    token = jax.ShapeDtypeStruct((B, 1), jnp.int32,
+                                 sharding=NamedSharding(mesh, P(dspec, None)))
+    pos = jax.ShapeDtypeStruct((), jnp.int32,
+                               sharding=NamedSharding(mesh, P()))
+    out = {"token": token, "caches": caches, "pos": pos,
+           "data_sharded": sharded}
+    if cfg.family == "audio":
+        out["kv_source"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_audio_frames, cfg.d_model), jnp.bfloat16,
+            sharding=NamedSharding(mesh, P(dspec, None, None)))
+    return out
+
+
+def prefill_batch_sds(cfg: ModelConfig, shape: InputShape, mesh):
+    return train_batch_sds(cfg, shape, mesh)
+
+
+def prefill_caches_sds(cfg: ModelConfig, shape: InputShape, mesh):
+    """Stage-stacked caches sized for the full sequence (chunked prefill)."""
+    dspec = data_axes(mesh)
+    cache_shapes = jax.eval_shape(
+        lambda: model_lib.init_caches(cfg, batch=shape.global_batch,
+                                      cache_len=shape.seq_len,
+                                      dtype=jnp.bfloat16))
+    cache_sp = [cache_specs(t, cfg, dspec) for t in cfg.slot_layout]
+    return [_sds(cs, sp, mesh) for cs, sp in zip(cache_shapes, cache_sp)]

@@ -1,0 +1,440 @@
+"""Slot blocks: the uniform per-layer interface the pipeline engine consumes.
+
+Every slot type implements:
+    init(key, cfg, dtype)                       -> params (full, unsharded)
+    apply(p, x, ctx)                            -> (y, aux)      full-sequence
+    init_cache(cfg, batch, cache_len, dtype)    -> cache (global shapes)
+    step(p, x, cache, ctx)                      -> (y, new_cache) one token
+
+Pad slots (pipeline padding, see DESIGN.md §3) are realized by ``ctx.active``:
+the stage wrapper blends ``active*y + (1-active)*x`` so a padded slot is an
+exact identity. Partial outputs are psum'd over ``ctx.tp`` *inside* the block
+(residual adds need full sums).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_lib
+from repro.models import mamba2 as m2
+from repro.models import modules
+from repro.models import moe as moe_lib
+from repro.models import xlstm
+from repro.models.tp import TP
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockCtx:
+    cfg: ModelConfig
+    positions: Any = None          # [B, S] int32 (full-seq modes)
+    pos: Any = None                # scalar int32 (decode)
+    tp: TP = TP.none()
+    dtype: Any = jnp.bfloat16
+    causal: bool = True
+    window: int = 0                # sliding-window size (0 = full)
+    kv_source: Any = None          # encoder output for cross-attention
+    active: Any = 1.0              # pad-slot gate (0.0 or 1.0)
+
+
+def _mlp_init(key, cfg: ModelConfig, dtype, gated=True, d_ff=None):
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"w_up": modules.dense_init(ks[0], d, ff, dtype=dtype),
+         "w_down": modules.dense_init(ks[1], ff, d, dtype=dtype)}
+    if gated:
+        p["w_gate"] = modules.dense_init(ks[2], d, ff, dtype=dtype)
+    return p
+
+
+def _mlp(p, x, cfg, dtype):
+    act = modules.activation(cfg.act)
+    u = modules.dense(p["w_up"], x, dtype)
+    if "w_gate" in p:
+        u = act(modules.dense(p["w_gate"], x, dtype)) * u
+    else:
+        u = act(u)
+    return modules.dense(p["w_down"], u, dtype)
+
+
+def _blend(active, y, x):
+    return active * y + (1.0 - active) * x
+
+
+def _blend_cache(active, new, old):
+    return jax.tree.map(
+        lambda a, b: (active * a.astype(jnp.float32)
+                      + (1.0 - active) * b.astype(jnp.float32)).astype(b.dtype),
+        new, old)
+
+
+# ------------------------------ dense -----------------------------------
+
+class Dense:
+    @staticmethod
+    def init(key, cfg, dtype=jnp.float32):
+        ks = jax.random.split(key, 4)
+        return {"ln1": modules.norm_init(cfg.d_model, dtype=dtype),
+                "attn": attn_lib.init_attention(ks[0], cfg, dtype),
+                "ln2": modules.norm_init(cfg.d_model, dtype=dtype),
+                "mlp": _mlp_init(ks[1], cfg, dtype)}
+
+    @staticmethod
+    def apply(p, x, ctx: BlockCtx):
+        cfg = ctx.cfg
+        a = attn_lib.attention(p["attn"], modules.rmsnorm(p["ln1"], x, cfg.norm_eps),
+                               cfg=cfg, positions=ctx.positions, causal=ctx.causal,
+                               window=ctx.window, tp=ctx.tp, dtype=ctx.dtype)
+        x = _blend(ctx.active, x + ctx.tp.psum(a), x)
+        mlp = _mlp(p["mlp"], modules.rmsnorm(p["ln2"], x, cfg.norm_eps), cfg, ctx.dtype)
+        x = _blend(ctx.active, x + ctx.tp.psum(mlp), x)
+        return x, 0.0
+
+    @staticmethod
+    def init_cache(cfg, batch, cache_len, dtype=jnp.bfloat16):
+        return {"attn": attn_lib.init_decode_cache(cfg, batch, cache_len,
+                                                   cfg.num_kv_heads, dtype)}
+
+    @staticmethod
+    def step(p, x, cache, ctx: BlockCtx):
+        cfg = ctx.cfg
+        a, nc = attn_lib.decode_attention(
+            p["attn"], modules.rmsnorm(p["ln1"], x, cfg.norm_eps), cache["attn"],
+            cfg=cfg, pos=ctx.pos, tp=ctx.tp, dtype=ctx.dtype)
+        x = _blend(ctx.active, x + ctx.tp.psum(a), x)
+        mlp = _mlp(p["mlp"], modules.rmsnorm(p["ln2"], x, cfg.norm_eps), cfg, ctx.dtype)
+        x = _blend(ctx.active, x + ctx.tp.psum(mlp), x)
+        return x, {"attn": _blend_cache(ctx.active, nc, cache["attn"])}
+
+    @staticmethod
+    def prefill_chunk(p, x, cache, ctx: BlockCtx):
+        cfg = ctx.cfg
+        a, nc = attn_lib.chunk_attention(
+            p["attn"], modules.rmsnorm(p["ln1"], x, cfg.norm_eps),
+            cache["attn"], cfg=cfg, start=ctx.pos, tp=ctx.tp, dtype=ctx.dtype,
+            window=ctx.window)
+        x = _blend(ctx.active, x + ctx.tp.psum(a), x)
+        mlp = _mlp(p["mlp"], modules.rmsnorm(p["ln2"], x, cfg.norm_eps), cfg,
+                   ctx.dtype)
+        x = _blend(ctx.active, x + ctx.tp.psum(mlp), x)
+        return x, {"attn": _blend_cache(ctx.active, nc, cache["attn"])}
+
+
+# ------------------------------- moe ------------------------------------
+
+class Moe:
+    @staticmethod
+    def init(key, cfg, dtype=jnp.float32):
+        ks = jax.random.split(key, 2)
+        return {"ln1": modules.norm_init(cfg.d_model, dtype=dtype),
+                "attn": attn_lib.init_attention(ks[0], cfg, dtype),
+                "ln2": modules.norm_init(cfg.d_model, dtype=dtype),
+                "moe": moe_lib.init_moe(ks[1], cfg, dtype)}
+
+    @staticmethod
+    def apply(p, x, ctx: BlockCtx):
+        cfg = ctx.cfg
+        a = attn_lib.attention(p["attn"], modules.rmsnorm(p["ln1"], x, cfg.norm_eps),
+                               cfg=cfg, positions=ctx.positions, causal=ctx.causal,
+                               window=ctx.window, tp=ctx.tp, dtype=ctx.dtype)
+        x = _blend(ctx.active, x + ctx.tp.psum(a), x)
+        y, aux = moe_lib.moe_ffn(p["moe"], modules.rmsnorm(p["ln2"], x, cfg.norm_eps),
+                                 cfg=cfg, tp=ctx.tp, dtype=ctx.dtype)
+        x = _blend(ctx.active, x + ctx.tp.psum(y), x)
+        return x, aux * ctx.active
+
+    @staticmethod
+    def init_cache(cfg, batch, cache_len, dtype=jnp.bfloat16):
+        return Dense.init_cache(cfg, batch, cache_len, dtype)
+
+    @staticmethod
+    def step(p, x, cache, ctx: BlockCtx):
+        cfg = ctx.cfg
+        a, nc = attn_lib.decode_attention(
+            p["attn"], modules.rmsnorm(p["ln1"], x, cfg.norm_eps), cache["attn"],
+            cfg=cfg, pos=ctx.pos, tp=ctx.tp, dtype=ctx.dtype)
+        x = _blend(ctx.active, x + ctx.tp.psum(a), x)
+        y, _ = moe_lib.moe_ffn(p["moe"], modules.rmsnorm(p["ln2"], x, cfg.norm_eps),
+                               cfg=cfg, tp=ctx.tp, dtype=ctx.dtype)
+        x = _blend(ctx.active, x + ctx.tp.psum(y), x)
+        return x, {"attn": _blend_cache(ctx.active, nc, cache["attn"])}
+
+    @staticmethod
+    def prefill_chunk(p, x, cache, ctx: BlockCtx):
+        cfg = ctx.cfg
+        a, nc = attn_lib.chunk_attention(
+            p["attn"], modules.rmsnorm(p["ln1"], x, cfg.norm_eps),
+            cache["attn"], cfg=cfg, start=ctx.pos, tp=ctx.tp, dtype=ctx.dtype,
+            window=ctx.window)
+        x = _blend(ctx.active, x + ctx.tp.psum(a), x)
+        y, _ = moe_lib.moe_ffn(p["moe"],
+                               modules.rmsnorm(p["ln2"], x, cfg.norm_eps),
+                               cfg=cfg, tp=ctx.tp, dtype=ctx.dtype)
+        x = _blend(ctx.active, x + ctx.tp.psum(y), x)
+        return x, {"attn": _blend_cache(ctx.active, nc, cache["attn"])}
+
+
+# ------------------------------ mamba -----------------------------------
+
+class Mamba:
+    @staticmethod
+    def init(key, cfg, dtype=jnp.float32):
+        return {"ln": modules.norm_init(cfg.d_model, dtype=dtype),
+                "mixer": m2.init_mamba2(key, cfg, dtype)}
+
+    @staticmethod
+    def apply(p, x, ctx: BlockCtx):
+        y = m2.mamba2_mixer(p["mixer"], modules.rmsnorm(p["ln"], x, ctx.cfg.norm_eps),
+                            cfg=ctx.cfg, dtype=ctx.dtype)
+        return _blend(ctx.active, x + y, x), 0.0
+
+    @staticmethod
+    def init_cache(cfg, batch, cache_len, dtype=jnp.bfloat16):
+        return {"mamba": m2.init_mamba2_cache(cfg, batch)}
+
+    @staticmethod
+    def step(p, x, cache, ctx: BlockCtx):
+        y, nc = m2.mamba2_step(p["mixer"],
+                               modules.rmsnorm(p["ln"], x, ctx.cfg.norm_eps),
+                               cache["mamba"], cfg=ctx.cfg, dtype=ctx.dtype)
+        return (_blend(ctx.active, x + y, x),
+                {"mamba": _blend_cache(ctx.active, nc, cache["mamba"])})
+
+    @staticmethod
+    def prefill_chunk(p, x, cache, ctx: BlockCtx):
+        y, nc = m2.mamba2_mixer_chunk(
+            p["mixer"], modules.rmsnorm(p["ln"], x, ctx.cfg.norm_eps),
+            cache["mamba"], cfg=ctx.cfg, dtype=ctx.dtype)
+        return (_blend(ctx.active, x + y, x),
+                {"mamba": _blend_cache(ctx.active, nc, cache["mamba"])})
+
+
+# ------------------------------ hybrid ----------------------------------
+
+class Hybrid:
+    """zamba2 shared-attention slot: mamba2 mixer + attention + MLP."""
+
+    @staticmethod
+    def init(key, cfg, dtype=jnp.float32):
+        ks = jax.random.split(key, 3)
+        return {"mamba": Mamba.init(ks[0], cfg, dtype),
+                "ln_a": modules.norm_init(cfg.d_model, dtype=dtype),
+                "attn": attn_lib.init_attention(ks[1], cfg, dtype),
+                "ln_m": modules.norm_init(cfg.d_model, dtype=dtype),
+                "mlp": _mlp_init(ks[2], cfg, dtype)}
+
+    @staticmethod
+    def apply(p, x, ctx: BlockCtx):
+        cfg = ctx.cfg
+        x, _ = Mamba.apply(p["mamba"], x, ctx)
+        a = attn_lib.attention(p["attn"], modules.rmsnorm(p["ln_a"], x, cfg.norm_eps),
+                               cfg=cfg, positions=ctx.positions, causal=ctx.causal,
+                               window=ctx.window, tp=ctx.tp, dtype=ctx.dtype)
+        x = _blend(ctx.active, x + ctx.tp.psum(a), x)
+        mlp = _mlp(p["mlp"], modules.rmsnorm(p["ln_m"], x, cfg.norm_eps), cfg, ctx.dtype)
+        x = _blend(ctx.active, x + ctx.tp.psum(mlp), x)
+        return x, 0.0
+
+    @staticmethod
+    def init_cache(cfg, batch, cache_len, dtype=jnp.bfloat16):
+        return {"mamba": m2.init_mamba2_cache(cfg, batch),
+                "attn": attn_lib.init_decode_cache(cfg, batch, cache_len,
+                                                   cfg.num_kv_heads, dtype)}
+
+    @staticmethod
+    def step(p, x, cache, ctx: BlockCtx):
+        cfg = ctx.cfg
+        y, ncm = m2.mamba2_step(p["mamba"]["mixer"],
+                                modules.rmsnorm(p["mamba"]["ln"], x, cfg.norm_eps),
+                                cache["mamba"], cfg=cfg, dtype=ctx.dtype)
+        x = _blend(ctx.active, x + y, x)
+        a, nca = attn_lib.decode_attention(
+            p["attn"], modules.rmsnorm(p["ln_a"], x, cfg.norm_eps), cache["attn"],
+            cfg=cfg, pos=ctx.pos, tp=ctx.tp, dtype=ctx.dtype)
+        x = _blend(ctx.active, x + ctx.tp.psum(a), x)
+        mlp = _mlp(p["mlp"], modules.rmsnorm(p["ln_m"], x, cfg.norm_eps), cfg, ctx.dtype)
+        x = _blend(ctx.active, x + ctx.tp.psum(mlp), x)
+        return x, {"mamba": _blend_cache(ctx.active, ncm, cache["mamba"]),
+                   "attn": _blend_cache(ctx.active, nca, cache["attn"])}
+
+    @staticmethod
+    def prefill_chunk(p, x, cache, ctx: BlockCtx):
+        cfg = ctx.cfg
+        y, ncm = m2.mamba2_mixer_chunk(
+            p["mamba"]["mixer"],
+            modules.rmsnorm(p["mamba"]["ln"], x, cfg.norm_eps),
+            cache["mamba"], cfg=cfg, dtype=ctx.dtype)
+        x = _blend(ctx.active, x + y, x)
+        a, nca = attn_lib.chunk_attention(
+            p["attn"], modules.rmsnorm(p["ln_a"], x, cfg.norm_eps),
+            cache["attn"], cfg=cfg, start=ctx.pos, tp=ctx.tp, dtype=ctx.dtype,
+            window=ctx.window)
+        x = _blend(ctx.active, x + ctx.tp.psum(a), x)
+        mlp = _mlp(p["mlp"], modules.rmsnorm(p["ln_m"], x, cfg.norm_eps),
+                   cfg, ctx.dtype)
+        x = _blend(ctx.active, x + ctx.tp.psum(mlp), x)
+        return x, {"mamba": _blend_cache(ctx.active, ncm, cache["mamba"]),
+                   "attn": _blend_cache(ctx.active, nca, cache["attn"])}
+
+
+# ---------------------------- mLSTM/sLSTM -------------------------------
+
+class MLstm:
+    @staticmethod
+    def init(key, cfg, dtype=jnp.float32):
+        return {"ln": modules.norm_init(cfg.d_model, dtype=dtype),
+                "mixer": xlstm.init_mlstm(key, cfg, dtype)}
+
+    @staticmethod
+    def apply(p, x, ctx: BlockCtx):
+        y = xlstm.mlstm_mixer(p["mixer"], modules.rmsnorm(p["ln"], x, ctx.cfg.norm_eps),
+                              cfg=ctx.cfg, dtype=ctx.dtype, tp=ctx.tp)
+        return _blend(ctx.active, x + ctx.tp.psum(y), x), 0.0
+
+    @staticmethod
+    def init_cache(cfg, batch, cache_len, dtype=jnp.bfloat16):
+        return {"mlstm": xlstm.init_mlstm_cache(cfg, batch)}
+
+    @staticmethod
+    def step(p, x, cache, ctx: BlockCtx):
+        y, nc = xlstm.mlstm_step(p["mixer"],
+                                 modules.rmsnorm(p["ln"], x, ctx.cfg.norm_eps),
+                                 cache["mlstm"], cfg=ctx.cfg, dtype=ctx.dtype,
+                                 tp=ctx.tp)
+        return (_blend(ctx.active, x + ctx.tp.psum(y), x),
+                {"mlstm": _blend_cache(ctx.active, nc, cache["mlstm"])})
+
+    @staticmethod
+    def prefill_chunk(p, x, cache, ctx: BlockCtx):
+        y, nc = xlstm.mlstm_mixer_chunk(
+            p["mixer"], modules.rmsnorm(p["ln"], x, ctx.cfg.norm_eps),
+            cache["mlstm"], cfg=ctx.cfg, dtype=ctx.dtype, tp=ctx.tp)
+        return (_blend(ctx.active, x + ctx.tp.psum(y), x),
+                {"mlstm": _blend_cache(ctx.active, nc, cache["mlstm"])})
+
+
+class SLstm:
+    @staticmethod
+    def init(key, cfg, dtype=jnp.float32):
+        return {"ln": modules.norm_init(cfg.d_model, dtype=dtype),
+                "mixer": xlstm.init_slstm(key, cfg, dtype)}
+
+    @staticmethod
+    def apply(p, x, ctx: BlockCtx):
+        y = xlstm.slstm_mixer(p["mixer"], modules.rmsnorm(p["ln"], x, ctx.cfg.norm_eps),
+                              cfg=ctx.cfg, dtype=ctx.dtype, tp=ctx.tp)
+        return _blend(ctx.active, x + ctx.tp.psum(y), x), 0.0
+
+    @staticmethod
+    def init_cache(cfg, batch, cache_len, dtype=jnp.bfloat16):
+        c, n, h, m = xlstm.init_slstm_state(cfg, batch)
+        return {"slstm": {"c": c, "n": n, "h": h, "m": m}}
+
+    @staticmethod
+    def step(p, x, cache, ctx: BlockCtx):
+        st = (cache["slstm"]["c"], cache["slstm"]["n"],
+              cache["slstm"]["h"], cache["slstm"]["m"])
+        y, st2 = xlstm.slstm_step(p["mixer"],
+                                  modules.rmsnorm(p["ln"], x, ctx.cfg.norm_eps),
+                                  st, cfg=ctx.cfg, dtype=ctx.dtype, tp=ctx.tp)
+        nc = {"slstm": {"c": st2[0], "n": st2[1], "h": st2[2], "m": st2[3]}}
+        return (_blend(ctx.active, x + ctx.tp.psum(y), x),
+                _blend_cache(ctx.active, nc, cache))
+
+    @staticmethod
+    def prefill_chunk(p, x, cache, ctx: BlockCtx):
+        y, nc = xlstm.slstm_mixer_chunk(
+            p["mixer"], modules.rmsnorm(p["ln"], x, ctx.cfg.norm_eps),
+            cache["slstm"], cfg=ctx.cfg, dtype=ctx.dtype, tp=ctx.tp)
+        return (_blend(ctx.active, x + ctx.tp.psum(y), x),
+                _blend_cache(ctx.active, {"slstm": nc}, cache))
+
+
+# ----------------------------- enc / dec --------------------------------
+
+class Enc:
+    """Whisper encoder layer: bidirectional self-attn + MLP (LayerNorm)."""
+
+    @staticmethod
+    def init(key, cfg, dtype=jnp.float32):
+        ks = jax.random.split(key, 2)
+        return {"ln1": modules.norm_init(cfg.d_model, bias=True, dtype=dtype),
+                "attn": attn_lib.init_attention(ks[0], cfg, dtype),
+                "ln2": modules.norm_init(cfg.d_model, bias=True, dtype=dtype),
+                "mlp": _mlp_init(ks[1], cfg, dtype, gated=False)}
+
+    @staticmethod
+    def apply(p, x, ctx: BlockCtx):
+        cfg = ctx.cfg
+        a = attn_lib.attention(p["attn"], modules.layernorm(p["ln1"], x, cfg.norm_eps),
+                               cfg=cfg, positions=ctx.positions, causal=False,
+                               tp=ctx.tp, dtype=ctx.dtype)
+        x = _blend(ctx.active, x + ctx.tp.psum(a), x)
+        mlp = _mlp(p["mlp"], modules.layernorm(p["ln2"], x, cfg.norm_eps), cfg,
+                   ctx.dtype)
+        x = _blend(ctx.active, x + ctx.tp.psum(mlp), x)
+        return x, 0.0
+
+    init_cache = Dense.init_cache  # unused (encoder has no decode), kept uniform
+
+    @staticmethod
+    def step(p, x, cache, ctx: BlockCtx):
+        raise NotImplementedError("encoder layers have no decode step")
+
+
+class Dec:
+    """Whisper decoder layer: causal self-attn + cross-attn + MLP."""
+
+    @staticmethod
+    def init(key, cfg, dtype=jnp.float32):
+        ks = jax.random.split(key, 3)
+        return {"ln1": modules.norm_init(cfg.d_model, bias=True, dtype=dtype),
+                "attn": attn_lib.init_attention(ks[0], cfg, dtype),
+                "ln_x": modules.norm_init(cfg.d_model, bias=True, dtype=dtype),
+                "xattn": attn_lib.init_cross_attention(ks[1], cfg, dtype),
+                "ln2": modules.norm_init(cfg.d_model, bias=True, dtype=dtype),
+                "mlp": _mlp_init(ks[2], cfg, dtype, gated=False)}
+
+    @staticmethod
+    def apply(p, x, ctx: BlockCtx):
+        cfg = ctx.cfg
+        a = attn_lib.attention(p["attn"], modules.layernorm(p["ln1"], x, cfg.norm_eps),
+                               cfg=cfg, positions=ctx.positions, causal=True,
+                               tp=ctx.tp, dtype=ctx.dtype)
+        x = _blend(ctx.active, x + ctx.tp.psum(a), x)
+        c = attn_lib.attention(p["xattn"], modules.layernorm(p["ln_x"], x, cfg.norm_eps),
+                               cfg=cfg, positions=ctx.positions,
+                               kv_source=ctx.kv_source, tp=ctx.tp, dtype=ctx.dtype)
+        x = _blend(ctx.active, x + ctx.tp.psum(c), x)
+        mlp = _mlp(p["mlp"], modules.layernorm(p["ln2"], x, cfg.norm_eps), cfg,
+                   ctx.dtype)
+        x = _blend(ctx.active, x + ctx.tp.psum(mlp), x)
+        return x, 0.0
+
+    init_cache = Dense.init_cache
+
+    @staticmethod
+    def step(p, x, cache, ctx: BlockCtx):
+        cfg = ctx.cfg
+        a, nc = attn_lib.decode_attention(
+            p["attn"], modules.layernorm(p["ln1"], x, cfg.norm_eps), cache["attn"],
+            cfg=cfg, pos=ctx.pos, tp=ctx.tp, dtype=ctx.dtype)
+        x = _blend(ctx.active, x + ctx.tp.psum(a), x)
+        c = attn_lib.attention(p["xattn"], modules.layernorm(p["ln_x"], x, cfg.norm_eps),
+                               cfg=cfg, positions=None, kv_source=ctx.kv_source,
+                               tp=ctx.tp, dtype=ctx.dtype)
+        x = _blend(ctx.active, x + ctx.tp.psum(c), x)
+        mlp = _mlp(p["mlp"], modules.layernorm(p["ln2"], x, cfg.norm_eps), cfg,
+                   ctx.dtype)
+        x = _blend(ctx.active, x + ctx.tp.psum(mlp), x)
+        return x, {"attn": _blend_cache(ctx.active, nc, cache["attn"])}
+
+
+BLOCKS = {
+    "dense": Dense, "moe": Moe, "mamba": Mamba, "hybrid": Hybrid,
+    "mlstm": MLstm, "slstm": SLstm, "enc": Enc, "dec": Dec,
+}

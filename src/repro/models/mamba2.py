@@ -1,0 +1,236 @@
+"""Mamba2 (SSD) mixer: chunked state-space recurrence.
+
+Math (per head h, state size N, head dim P):
+    a_t = exp(dt_t * A_h)            (scalar decay, A_h < 0)
+    h_t = a_t * h_{t-1} + dt_t * x_t B_t^T        (h: [P, N])
+    y_t = h_t C_t + D_h x_t
+
+Full-sequence form uses the chunked SSD algorithm (intra-chunk quadratic
+"attention" with cumulative decays + inter-chunk state carry via lax.scan),
+which is also what the Pallas kernel (kernels/ssm_scan) implements with
+VMEM-tiled chunks. Decode uses the O(1) step form.
+
+Tensor parallelism: unsupported inside the mixer (zamba2 runs tp=1; see
+DESIGN.md). Single group (B, C shared across heads).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import modules
+
+MAMBA_HEAD_DIM = 64
+DEFAULT_CHUNK = 128
+
+
+def dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nheads = d_inner // MAMBA_HEAD_DIM
+    return d_inner, nheads, cfg.ssm_state
+
+
+def init_mamba2(key, cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    d_inner, H, N = dims(cfg)
+    conv_dim = d_inner + 2 * N
+    ks = jax.random.split(key, 5)
+    # in_proj emits [z | x | B | C | dt]
+    in_dim = 2 * d_inner + 2 * N + H
+    p = {
+        "in_proj": modules.dense_init(ks[0], d, in_dim, dtype=dtype),
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_conv_width, conv_dim), dtype)
+                  * (1.0 / cfg.ssm_conv_width),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(dtype)),
+        "D": jnp.ones((H,), dtype),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[2], (H,), dtype) *
+                    (jnp.log(0.1) - jnp.log(0.001)) + jnp.log(0.001)))),
+        "norm": modules.norm_init(d_inner, dtype=dtype),
+        "out_proj": modules.dense_init(ks[3], d_inner, d, dtype=dtype),
+    }
+    return p
+
+
+def _split_proj(cfg, proj):
+    d_inner, H, N = dims(cfg)
+    z, x, B, C, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + N, 2 * d_inner + 2 * N],
+        axis=-1)
+    return z, x, B, C, dt
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: [B, S, C]; w: [K, C]."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    return out + b
+
+
+def ssd_chunked(xh, dt, A, Bm, Cm, D, chunk: int = DEFAULT_CHUNK,
+                h0=None):
+    """Chunked SSD scan.
+
+    xh: [B, S, H, P]; dt: [B, S, H] (post-softplus); A: [H] (negative);
+    Bm, Cm: [B, S, N]; D: [H]. Returns (y [B,S,H,P], h_final [B,H,P,N]).
+    """
+    Bsz, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    nc = S // chunk
+    assert S % chunk == 0, (S, chunk)
+
+    xc = xh.reshape(Bsz, nc, chunk, H, P)
+    dtc = dt.reshape(Bsz, nc, chunk, H)
+    Bc = Bm.reshape(Bsz, nc, chunk, N)
+    Cc = Cm.reshape(Bsz, nc, chunk, N)
+
+    # log decay per step: la[t] = dt[t] * A  (A<0)
+    la = dtc * A                                           # [B,nc,Q,H]
+    cum = jnp.cumsum(la, axis=2)                           # L_t inclusive
+
+    # intra-chunk: M[t,s] = (C_t.B_s) * exp(L_t - L_s) * dt_s   (s<=t)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]    # [B,nc,Q,Q,H]
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+    cb = jnp.einsum("bctn,bcsn->bcts", Cc, Bc)             # [B,nc,Q,Q]
+    M = cb[..., None] * decay * dtc[:, :, None, :, :]      # [B,nc,Q,Q,H]
+    y_intra = jnp.einsum("bctsh,bcshp->bcthp", M, xc)
+
+    # chunk summaries: state injected by this chunk (at chunk end)
+    dec_to_end = jnp.exp(cum[:, :, -1:, :] - cum)          # exp(L_Q - L_t)
+    inj = jnp.einsum("bcth,bctn,bcthp->bchpn",
+                     dec_to_end * dtc, Bc, xc)             # [B,nc,H,P,N]
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                # [B,nc,H]
+
+    # inter-chunk: scan state across chunks
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, P, N), xh.dtype)
+
+    def step(h, inp):
+        inj_c, dec_c = inp
+        h_out = h                                          # state BEFORE chunk
+        h_new = dec_c[:, :, None, None] * h + inj_c
+        return h_new, h_out
+
+    inj_s = jnp.moveaxis(inj, 1, 0)
+    dec_s = jnp.moveaxis(chunk_decay, 1, 0)
+    h_final, h_starts = jax.lax.scan(step, h0, (inj_s, dec_s))
+    h_starts = jnp.moveaxis(h_starts, 0, 1)                # [B,nc,H,P,N]
+
+    # contribution of carried state: y_t += C_t . (exp(L_t) * h_start)
+    dec_from_start = jnp.exp(cum)                          # exp(L_t)
+    y_inter = jnp.einsum("bctn,bchpn,bcth->bcthp",
+                         Cc, h_starts, dec_from_start)
+
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)
+    y = y + xh * D[None, None, :, None]
+    return y, h_final
+
+
+def ssd_step(h, xt, dt, A, Bt, Ct, D):
+    """One decode step. h: [B,H,P,N]; xt: [B,H,P]; dt: [B,H]; Bt,Ct: [B,N]."""
+    a = jnp.exp(dt * A)                                    # [B,H]
+    h_new = (a[:, :, None, None] * h +
+             dt[:, :, None, None] * xt[:, :, :, None] * Bt[:, None, None, :])
+    y = jnp.einsum("bhpn,bn->bhp", h_new, Ct) + xt * D[None, :, None]
+    return y, h_new
+
+
+def mamba2_mixer(p, x, *, cfg: ModelConfig, dtype=jnp.bfloat16,
+                 chunk: int = DEFAULT_CHUNK):
+    """Full-sequence mixer. x: [B, S, d] -> [B, S, d]."""
+    d_inner, H, N = dims(cfg)
+    proj = modules.dense(p["in_proj"], x, dtype)
+    z, xi, Bm, Cm, dt = _split_proj(cfg, proj)
+    conv_in = jnp.concatenate([xi, Bm, Cm], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, p["conv_w"].astype(dtype),
+                                        p["conv_b"].astype(dtype)))
+    xi, Bm, Cm = jnp.split(conv_out, [d_inner, d_inner + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xi.reshape(*xi.shape[:2], H, MAMBA_HEAD_DIM).astype(jnp.float32)
+    S = x.shape[1]
+    ck = min(chunk, S)
+    while S % ck:
+        ck //= 2
+    y, _ = ssd_chunked(xh, dt, A, Bm.astype(jnp.float32),
+                       Cm.astype(jnp.float32), p["D"].astype(jnp.float32),
+                       chunk=max(ck, 1))
+    y = y.reshape(*xi.shape[:2], d_inner).astype(dtype)
+    y = modules.rmsnorm(p["norm"], y * jax.nn.silu(z))
+    return modules.dense(p["out_proj"], y, dtype)
+
+
+def mamba2_mixer_chunk(p, x, cache, *, cfg: ModelConfig, dtype=jnp.bfloat16,
+                       chunk: int = DEFAULT_CHUNK):
+    """Chunked-prefill mixer: process L tokens continuing from ``cache``
+    (conv tail + SSM state). Returns (y [B, L, d], new_cache)."""
+    d_inner, H, N = dims(cfg)
+    proj = modules.dense(p["in_proj"], x, dtype)
+    z, xi, Bm, Cm, dt = _split_proj(cfg, proj)
+    conv_in = jnp.concatenate([xi, Bm, Cm], axis=-1)
+    hist = jnp.concatenate([cache["conv"].astype(dtype), conv_in], axis=1)
+    w = p["conv_w"].astype(dtype)
+    K = w.shape[0]
+    # causal conv with carried history: window ending at each new token
+    conv_out = sum(hist[:, i:i + conv_in.shape[1], :] * w[i]
+                   for i in range(K)) + p["conv_b"].astype(dtype)
+    conv_out = jax.nn.silu(conv_out)
+    xi, Bm, Cm = jnp.split(conv_out, [d_inner, d_inner + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xi.reshape(*xi.shape[:2], H, MAMBA_HEAD_DIM).astype(jnp.float32)
+    L = x.shape[1]
+    ck = min(chunk, L)
+    while L % ck:
+        ck //= 2
+    y, h_final = ssd_chunked(xh, dt, A, Bm.astype(jnp.float32),
+                             Cm.astype(jnp.float32),
+                             p["D"].astype(jnp.float32),
+                             chunk=max(ck, 1), h0=cache["ssm"])
+    y = y.reshape(*xi.shape[:2], d_inner).astype(dtype)
+    y = modules.rmsnorm(p["norm"], y * jax.nn.silu(z))
+    out = modules.dense(p["out_proj"], y, dtype)
+    new_cache = {"conv": hist[:, -(K - 1):, :].astype(cache["conv"].dtype),
+                 "ssm": h_final}
+    return out, new_cache
+
+
+def init_mamba2_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    d_inner, H, N = dims(cfg)
+    conv_dim = d_inner + 2 * N
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, H, MAMBA_HEAD_DIM, N), jnp.float32),
+    }
+
+
+def mamba2_step(p, x, cache, *, cfg: ModelConfig, dtype=jnp.bfloat16):
+    """One-token decode. x: [B, 1, d]."""
+    d_inner, H, N = dims(cfg)
+    proj = modules.dense(p["in_proj"], x, dtype)
+    z, xi, Bm, Cm, dt = _split_proj(cfg, proj)
+    conv_in = jnp.concatenate([xi, Bm, Cm], axis=-1)       # [B,1,conv_dim]
+    hist = jnp.concatenate([cache["conv"].astype(dtype), conv_in], axis=1)
+    w = p["conv_w"].astype(dtype)
+    K = w.shape[0]
+    conv_out = jax.nn.silu(
+        jnp.sum(hist[:, -K:, :] * w, axis=1, keepdims=True)
+        + p["conv_b"].astype(dtype))
+    xi, Bm, Cm = jnp.split(conv_out, [d_inner, d_inner + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xi.reshape(xi.shape[0], H, MAMBA_HEAD_DIM).astype(jnp.float32)
+    y, h_new = ssd_step(cache["ssm"], xh, dt, A,
+                        Bm[:, 0].astype(jnp.float32),
+                        Cm[:, 0].astype(jnp.float32),
+                        p["D"].astype(jnp.float32))
+    y = y.reshape(x.shape[0], 1, d_inner).astype(dtype)
+    y = modules.rmsnorm(p["norm"], y * jax.nn.silu(z))
+    out = modules.dense(p["out_proj"], y, dtype)
+    new_cache = {"conv": hist[:, 1:, :].astype(cache["conv"].dtype),
+                 "ssm": h_new}
+    return out, new_cache

@@ -1,0 +1,134 @@
+"""MobileNetV2 (the paper's workload, §IV-B) as a partitionable layer chain.
+
+Exposed as a *flat list of layers* — exactly what FTPipeHD's partition DP and
+the edge simulator operate on. CIFAR adaptation: 3x3/1 stem, first stride-2
+block de-strided (standard CIFAR MobileNetV2). BatchNorm uses batch
+statistics (no running averages) — the simulator always runs train-mode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# (expansion t, out channels c, repeats n, stride s) — CIFAR variant
+_IR_SPEC = [(1, 16, 1, 1), (6, 24, 2, 1), (6, 32, 3, 2), (6, 64, 4, 2),
+            (6, 96, 3, 1), (6, 160, 3, 2), (6, 320, 1, 1)]
+NUM_LAYERS = 2 + sum(n for _, _, n, _ in _IR_SPEC)   # stem + 17 IR + head = 19
+
+
+def _conv_init(key, kh, kw, cin, cout, groups=1):
+    fan = kh * kw * cin // groups
+    return jax.random.normal(key, (kh, kw, cin // groups, cout)) / np.sqrt(fan)
+
+
+def _bn_init(c):
+    return {"scale": jnp.ones((c,)), "bias": jnp.zeros((c,))}
+
+
+def _bn(p, x, eps=1e-5):
+    mu = jnp.mean(x, axis=(0, 1, 2), keepdims=True)
+    var = jnp.var(x, axis=(0, 1, 2), keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+
+
+def _conv(x, w, stride=1, groups=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"), feature_group_count=groups)
+
+
+def init_layers(key, num_classes: int = 10):
+    """Returns (layers, meta): layers[i] = params pytree, meta[i] = static info."""
+    layers, meta = [], []
+    ks = iter(jax.random.split(key, 64))
+    # stem
+    layers.append({"w": _conv_init(next(ks), 3, 3, 3, 32), "bn": _bn_init(32)})
+    meta.append({"kind": "stem", "cin": 3, "cout": 32, "stride": 1})
+    cin = 32
+    for t, c, n, s in _IR_SPEC:
+        for i in range(n):
+            stride = s if i == 0 else 1
+            hid = cin * t
+            p = {"bn1": _bn_init(hid), "bn2": _bn_init(hid), "bn3": _bn_init(c),
+                 "w_dw": _conv_init(next(ks), 3, 3, hid, hid, groups=hid),
+                 "w_proj": _conv_init(next(ks), 1, 1, hid, c)}
+            if t != 1:
+                p["w_exp"] = _conv_init(next(ks), 1, 1, cin, hid)
+            layers.append(p)
+            meta.append({"kind": "ir", "cin": cin, "cout": c, "stride": stride,
+                         "t": t})
+            cin = c
+    # head: 1x1 conv to 1280 + pooled classifier
+    layers.append({"w": _conv_init(next(ks), 1, 1, cin, 1280),
+                   "bn": _bn_init(1280),
+                   "fc_w": jax.random.normal(next(ks), (1280, num_classes)) * 0.01,
+                   "fc_b": jnp.zeros((num_classes,))})
+    meta.append({"kind": "head", "cin": cin, "cout": num_classes, "stride": 1})
+    return layers, meta
+
+
+def apply_layer(p, m, x):
+    """Run layer i. x: NHWC feature map (or logits after head)."""
+    if m["kind"] == "stem":
+        return jax.nn.relu6(_bn(p["bn"], _conv(x, p["w"], m["stride"])))
+    if m["kind"] == "ir":
+        h = x
+        if "w_exp" in p:
+            h = jax.nn.relu6(_bn(p["bn1"], _conv(h, p["w_exp"])))
+        h = jax.nn.relu6(_bn(p["bn2"], _conv(h, p["w_dw"], m["stride"],
+                                             groups=h.shape[-1])))
+        h = _bn(p["bn3"], _conv(h, p["w_proj"]))
+        if m["stride"] == 1 and m["cin"] == m["cout"]:
+            h = h + x
+        return h
+    if m["kind"] == "head":
+        h = jax.nn.relu6(_bn(p["bn"], _conv(x, p["w"])))
+        h = jnp.mean(h, axis=(1, 2))
+        return h @ p["fc_w"] + p["fc_b"]
+    raise ValueError(m["kind"])
+
+
+def forward(layers, meta, x):
+    for p, m in zip(layers, meta):
+        x = apply_layer(p, m, x)
+    return x
+
+
+def loss_fn(layers, meta, x, labels):
+    logits = forward(layers, meta, x)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def layer_flops(meta, image_hw: int = 32) -> list[float]:
+    """Analytic per-layer forward FLOPs (for profiling/partitioning)."""
+    out = []
+    hw = image_hw
+    for m in meta:
+        if m["kind"] == "stem":
+            f = 2 * 9 * m["cin"] * m["cout"] * hw * hw
+        elif m["kind"] == "ir":
+            hid = m["cin"] * m["t"]
+            hw_out = hw // m["stride"]
+            f = 2 * hw * hw * m["cin"] * hid            # expand
+            f += 2 * 9 * hid * hw_out * hw_out          # depthwise
+            f += 2 * hw_out * hw_out * hid * m["cout"]  # project
+            hw = hw_out
+        else:
+            f = 2 * hw * hw * m["cin"] * 1280 + 2 * 1280 * m["cout"]
+        out.append(float(f))
+    return out
+
+
+def output_sizes(meta, image_hw: int = 32, batch: int = 1) -> list[float]:
+    """Per-layer output bytes (activation payload for the partition DP)."""
+    out = []
+    hw = image_hw
+    for m in meta:
+        hw = hw // m["stride"]
+        if m["kind"] == "head":
+            out.append(4.0 * batch * m["cout"])
+        else:
+            out.append(4.0 * batch * hw * hw * m["cout"])
+    return out

@@ -1,0 +1,216 @@
+"""Whole-model assembly: embeddings, stacked pipeline slots, head, plus a
+sequential (non-pipelined) reference forward used as the oracle in tests and
+by the edge simulator's sub-models.
+
+Layer organization (see DESIGN.md §3):
+  - Each pipeline stage holds ``layers_per_stage`` slots with a fixed,
+    stage-uniform type layout (SPMD-safe).
+  - Block params are stacked over a leading stage axis: leaf [S, ...].
+  - A partition assignment (list of per-stage active-layer counts, from the
+    FTPipeHD partition DP) becomes a {0,1} pad mask of shape [S, Lps].
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import modules
+from repro.models.blocks import BLOCKS, BlockCtx
+from repro.models.tp import TP
+
+
+# --------------------------- layout helpers -----------------------------
+
+def default_assignment(cfg: ModelConfig) -> list[int]:
+    """Balanced contiguous per-stage layer counts (<= layers_per_stage)."""
+    S, L, lps = cfg.pipeline_stages, cfg.num_layers, cfg.layers_per_stage
+    if cfg.family == "audio":
+        L = cfg.encoder_layers
+    base, extra = divmod(L, S)
+    counts = [base + (1 if s < extra else 0) for s in range(S)]
+    assert all(c <= lps for c in counts), (counts, lps)
+    return counts
+
+
+def decoder_assignment(cfg: ModelConfig) -> list[int]:
+    S = cfg.pipeline_stages
+    base, extra = divmod(cfg.decoder_layers, S)
+    return [base + (1 if s < extra else 0) for s in range(S)]
+
+
+def pad_mask(cfg: ModelConfig, assignment=None, layout=None) -> jnp.ndarray:
+    """[S, Lps] float32: 1 for active slots, 0 for pad."""
+    assignment = assignment or default_assignment(cfg)
+    lps = len(layout) if layout is not None else cfg.layers_per_stage
+    m = np.zeros((cfg.pipeline_stages, lps), np.float32)
+    for s, n in enumerate(assignment):
+        m[s, :n] = 1.0
+    return jnp.asarray(m)
+
+
+def global_layout(cfg: ModelConfig, assignment=None) -> list[str]:
+    """Per-active-layer slot types in pipeline order (for flat/simulator use)."""
+    assignment = assignment or default_assignment(cfg)
+    out = []
+    for n in assignment:
+        out.extend(cfg.slot_layout[:n])
+    return out
+
+
+# ------------------------------- init -----------------------------------
+
+def _stack_init(layout, key, cfg, S, dtype):
+    """Per-slot params stacked over the stage axis: list of pytrees [S,...]."""
+    slots = []
+    for j, t in enumerate(layout):
+        keys = jax.random.split(jax.random.fold_in(key, j), S)
+        slots.append(jax.vmap(lambda k: BLOCKS[t].init(k, cfg, dtype))(keys))
+    return slots
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32):
+    S = cfg.pipeline_stages
+    ks = jax.random.split(key, 6)
+    params = {
+        "embed": modules.embed_init(ks[0], cfg.padded_vocab, cfg.d_model,
+                                    dtype),
+        "blocks": _stack_init(cfg.slot_layout, ks[1], cfg, S, dtype),
+        "final_norm": modules.norm_init(cfg.d_model, bias=(cfg.family == "audio"),
+                                        dtype=dtype),
+        "head": modules.dense_init(ks[2], cfg.d_model, cfg.padded_vocab,
+                                   dtype=dtype),
+    }
+    if cfg.family == "audio":
+        params["dec_blocks"] = _stack_init(cfg.decoder_slot_layout, ks[3], cfg,
+                                           S, dtype)
+    return params
+
+
+# --------------------------- embed / head -------------------------------
+
+def embed(params, cfg: ModelConfig, tokens, *, prefix=None, dtype=jnp.bfloat16):
+    """tokens: [B, S_text] int32; prefix: [B, P, d] patch/frame embeddings.
+
+    Returns (x [B, S_total, d], positions [B, S_total], loss_mask [B, S_total]).
+    """
+    x = params["embed"]["table"].astype(dtype)[tokens]
+    mask = jnp.ones(tokens.shape, jnp.float32)
+    if prefix is not None:
+        x = jnp.concatenate([prefix.astype(dtype), x], axis=1)
+        mask = jnp.concatenate(
+            [jnp.zeros(prefix.shape[:2], jnp.float32), mask], axis=1)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    if cfg.family == "audio":
+        pos_table = modules.sinusoidal_positions(max(S, 2), cfg.d_model)
+        x = x + pos_table[None, :S].astype(dtype)
+    return x, positions, mask
+
+
+def embed_frames(cfg: ModelConfig, frames, dtype=jnp.bfloat16):
+    """Whisper encoder input: precomputed frame embeddings + sinusoidal pos."""
+    B, F, d = frames.shape
+    pos = modules.sinusoidal_positions(F, d)
+    x = frames.astype(dtype) + pos[None].astype(dtype)
+    positions = jnp.broadcast_to(jnp.arange(F, dtype=jnp.int32), (B, F))
+    return x, positions
+
+
+def head(params, cfg: ModelConfig, x, dtype=jnp.float32):
+    xn = (modules.layernorm if cfg.family == "audio" else modules.rmsnorm)(
+        params["final_norm"], x, cfg.norm_eps)
+    return modules.dense(params["head"], xn, dtype)[..., :cfg.vocab_size]
+
+
+# -------------------- sequential reference forward ----------------------
+
+def _slot_params(slot_stacked, s):
+    return jax.tree.map(lambda a: a[s], slot_stacked)
+
+
+def forward_blocks(params_blocks, layout, x, ctx: BlockCtx, mask):
+    """Run all S x Lps slots sequentially (the no-pipeline oracle)."""
+    S = mask.shape[0]
+    aux = 0.0
+    for s in range(S):
+        for j, t in enumerate(layout):
+            p = _slot_params(params_blocks[j], s)
+            c = ctx.__class__(**{**ctx.__dict__, "active": mask[s, j]})
+            x, a = BLOCKS[t].apply(p, x, c)
+            aux = aux + a
+    return x, aux
+
+
+def sequential_lm_forward(params, cfg: ModelConfig, tokens, *, prefix=None,
+                          assignment=None, dtype=None, window: int = 0):
+    """Full LM forward (dense/moe/ssm/hybrid/vlm). Returns (logits, aux, mask)."""
+    dtype = dtype or modules.dtype_of(cfg.dtype)
+    x, positions, mask = embed(params, cfg, tokens, prefix=prefix, dtype=dtype)
+    ctx = BlockCtx(cfg=cfg, positions=positions, dtype=dtype,
+                   window=window or cfg.sliding_window)
+    pm = pad_mask(cfg, assignment)
+    x, aux = forward_blocks(params["blocks"], cfg.slot_layout, x, ctx, pm)
+    return head(params, cfg, x), aux, mask
+
+
+def sequential_encdec_forward(params, cfg: ModelConfig, frames, tokens,
+                              assignment=None, dtype=None):
+    """Whisper: encoder over frames, decoder over tokens w/ cross-attn."""
+    dtype = dtype or modules.dtype_of(cfg.dtype)
+    xe, pos_e = embed_frames(cfg, frames, dtype)
+    ctx_e = BlockCtx(cfg=cfg, positions=pos_e, dtype=dtype, causal=False)
+    pm_e = pad_mask(cfg, assignment)
+    xe, _ = forward_blocks(params["blocks"], cfg.slot_layout, xe, ctx_e, pm_e)
+
+    xd, pos_d, mask = embed(params, cfg, tokens, dtype=dtype)
+    ctx_d = BlockCtx(cfg=cfg, positions=pos_d, dtype=dtype, kv_source=xe)
+    pm_d = pad_mask(cfg, decoder_assignment(cfg), cfg.decoder_slot_layout)
+    xd, _ = forward_blocks(params["dec_blocks"], cfg.decoder_slot_layout, xd,
+                           ctx_d, pm_d)
+    return head(params, cfg, xd), 0.0, mask
+
+
+# ------------------------------- decode ---------------------------------
+
+def init_caches(cfg: ModelConfig, batch: int, cache_len: int,
+                layout=None, dtype=jnp.bfloat16):
+    """Stacked decode caches: per slot, leaves [S, ...] (stage-stacked)."""
+    layout = layout or cfg.slot_layout
+    S = cfg.pipeline_stages
+    caches = []
+    for t in layout:
+        one = BLOCKS[t].init_cache(cfg, batch, cache_len, dtype)
+        caches.append(jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (S,) + a.shape).copy(), one))
+    return caches
+
+
+def sequential_decode_step(params, cfg: ModelConfig, token, caches, pos, *,
+                           kv_source=None, assignment=None, dtype=None):
+    """One-token decode through all slots. token: [B,1] int32."""
+    dtype = dtype or modules.dtype_of(cfg.dtype)
+    x = params["embed"]["table"].astype(dtype)[token]
+    if cfg.family == "audio":
+        pos_table = modules.sinusoidal_positions(cfg.max_target_positions,
+                                                 cfg.d_model)
+        x = x + pos_table[pos][None, None].astype(dtype)
+    layout = cfg.decoder_slot_layout if cfg.family == "audio" else cfg.slot_layout
+    blocks = params["dec_blocks"] if cfg.family == "audio" else params["blocks"]
+    pm = pad_mask(cfg, assignment or
+                  (decoder_assignment(cfg) if cfg.family == "audio" else None),
+                  layout)
+    S = pm.shape[0]
+    new_caches = [jax.tree.map(lambda a: a, c) for c in caches]
+    for s in range(S):
+        for j, t in enumerate(layout):
+            p = _slot_params(blocks[j], s)
+            c_in = jax.tree.map(lambda a: a[s], caches[j])
+            ctx = BlockCtx(cfg=cfg, pos=pos, dtype=dtype, active=pm[s, j],
+                           kv_source=kv_source,
+                           window=cfg.sliding_window)
+            x, c_out = BLOCKS[t].step(p, x, c_in, ctx)
+            new_caches[j] = jax.tree.map(
+                lambda full, upd: full.at[s].set(upd), new_caches[j], c_out)
+    return head(params, cfg, x), new_caches

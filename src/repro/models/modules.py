@@ -1,0 +1,131 @@
+"""Minimal pure-JAX module primitives.
+
+Params are plain pytrees (dicts of arrays). Every primitive is a pair of
+``init_*(key, ...) -> params`` and a pure apply function. Tensor-parallel
+collectives are handled a level up (blocks.py) via an optional axis name.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------- init --
+
+def dense_init(key, in_dim: int, out_dim: int, *, bias: bool = False,
+               scale: float | None = None, dtype=jnp.float32):
+    scale = (1.0 / np.sqrt(in_dim)) if scale is None else scale
+    p = {"w": jax.random.normal(key, (in_dim, out_dim), dtype) * scale}
+    if bias:
+        p["b"] = jnp.zeros((out_dim,), dtype)
+    return p
+
+
+def norm_init(dim: int, *, bias: bool = False, dtype=jnp.float32):
+    p = {"scale": jnp.ones((dim,), dtype)}
+    if bias:
+        p["bias"] = jnp.zeros((dim,), dtype)
+    return p
+
+
+def embed_init(key, vocab: int, dim: int, dtype=jnp.float32):
+    return {"table": jax.random.normal(key, (vocab, dim), dtype) * 0.02}
+
+
+# --------------------------------------------------------------- apply --
+
+def dense(p, x, dtype=None):
+    w = p["w"]
+    if dtype is not None:
+        w = w.astype(dtype)
+        x = x.astype(dtype)
+    y = x @ w
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+def rmsnorm(p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def activation(name: str):
+    return {
+        "silu": jax.nn.silu,
+        "gelu": partial(jax.nn.gelu, approximate=True),
+        "relu": jax.nn.relu,
+        "relu6": jax.nn.relu6,
+    }[name]
+
+
+# ---------------------------------------------------------------- rope --
+
+def rope_freqs(head_dim: int, theta: float, fraction: float = 1.0):
+    """Inverse frequencies for the rotated sub-dimension."""
+    rot = int(head_dim * fraction)
+    rot -= rot % 2
+    inv = 1.0 / (theta ** (np.arange(0, rot, 2, dtype=np.float32) / rot))
+    return jnp.asarray(inv), rot
+
+
+def apply_rope(x, positions, theta: float, fraction: float = 1.0):
+    """x: [..., seq, heads, head_dim]; positions: [..., seq].
+
+    ``fraction < 1`` rotates only the first ``fraction`` of head dims
+    (chatglm3's "2d RoPE": half rotary, half pass-through).
+    """
+    if theta <= 0.0:
+        return x
+    head_dim = x.shape[-1]
+    inv, rot = rope_freqs(head_dim, theta, fraction)
+    if rot == 0:
+        return x
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # [..., seq, rot/2]
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    xr = x[..., :rot].astype(jnp.float32)
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    rotated = jnp.stack([r1, r2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([rotated.astype(x.dtype), x[..., rot:]], axis=-1)
+
+
+def sinusoidal_positions(max_len: int, dim: int):
+    """Whisper-style sinusoidal position embedding table [max_len, dim]."""
+    pos = np.arange(max_len)[:, None]
+    i = np.arange(dim // 2)[None, :]
+    ang = pos / (10_000 ** (2 * i / dim))
+    table = np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+    return jnp.asarray(table, jnp.float32)
+
+
+# -------------------------------------------------------------- counts --
+
+def count_params(tree) -> int:
+    return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(tree))

@@ -1,0 +1,91 @@
+"""Mixture-of-Experts FFN with capacity-based scatter dispatch and
+expert-parallel sharding over the tensor axis.
+
+Dispatch is scatter/gather (Megablocks-style), NOT compute-every-expert:
+HLO FLOPs = activated-expert FLOPs x capacity factor, so the roofline
+reflects real MoE compute. Each tensor shard owns E/T contiguous experts;
+the router runs replicated, every shard scatters only the tokens routed to
+its local experts, and partial outputs are psum-combined by the caller.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import modules
+from repro.models.tp import TP
+
+
+def init_moe(key, cfg: ModelConfig, dtype=jnp.float32):
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+    s_in = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    s_out = 1.0 / jnp.sqrt(ff).astype(jnp.float32)
+    return {
+        "router": modules.dense_init(ks[0], d, E, dtype=dtype),
+        "w1": jax.random.normal(ks[1], (E, d, ff), dtype) * s_in,   # gate proj
+        "w3": jax.random.normal(ks[2], (E, d, ff), dtype) * s_in,   # up proj
+        "w2": jax.random.normal(ks[3], (E, ff, d), dtype) * s_out,  # down proj
+    }
+
+
+def capacity(num_tokens: int, cfg: ModelConfig) -> int:
+    c = int(num_tokens * cfg.moe_top_k / cfg.num_experts * cfg.capacity_factor)
+    return max(8, -(-c // 8) * 8)
+
+
+def moe_ffn(p, x, *, cfg: ModelConfig, tp: TP = TP.none(), dtype=jnp.bfloat16):
+    """x: [B, S, d] (replicated over tp). Returns (partial_out, aux_loss).
+
+    Caller must psum the output over the tp axis.
+    """
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.moe_top_k
+    E_local = E // tp.size
+    e0 = tp.index() * E_local
+    T = B * S
+    C = capacity(T, cfg)
+    xt = x.reshape(T, d)
+
+    # --- routing (replicated: identical on every shard) ------------------
+    logits = modules.dense(p["router"], xt, jnp.float32)          # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, k)                        # [T, k]
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+
+    # load-balance aux loss (Switch-style): E * <frac_tokens_e> . <prob_e>
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(top_e, E, dtype=jnp.float32), axis=1), axis=0) / k
+    aux = E * jnp.sum(me * ce)
+
+    # --- global rank of each (token, slot) within its expert -------------
+    flat_e = top_e.reshape(-1)                                    # [T*k]
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)           # [T*k, E]
+    rank = (jnp.cumsum(onehot, axis=0) - onehot)                  # pre-count
+    rank = jnp.take_along_axis(rank, flat_e[:, None], axis=1)[:, 0]
+
+    keep = rank < C
+    local = (flat_e >= e0) & (flat_e < e0 + E_local) & keep
+    trash = E_local * C
+    slot = jnp.where(local, (flat_e - e0) * C + rank, trash)      # [T*k]
+
+    # --- scatter tokens into per-expert buffers --------------------------
+    xk = jnp.repeat(xt, k, axis=0).astype(dtype)                  # [T*k, d]
+    buf = jnp.zeros((E_local * C + 1, d), dtype).at[slot].add(xk)
+    eb = buf[:-1].reshape(E_local, C, d)
+
+    # --- expert FFN (gated) ----------------------------------------------
+    act = modules.activation(cfg.act)
+    w1 = p["w1"].astype(dtype); w3 = p["w3"].astype(dtype); w2 = p["w2"].astype(dtype)
+    h = act(jnp.einsum("ecd,edf->ecf", eb, w1)) * jnp.einsum("ecd,edf->ecf", eb, w3)
+    y = jnp.einsum("ecf,efd->ecd", h, w2)                         # [E_l, C, d]
+
+    # --- gather back + combine -------------------------------------------
+    yf = jnp.concatenate([y.reshape(E_local * C, d),
+                          jnp.zeros((1, d), dtype)], axis=0)
+    tok_y = yf[slot]                                              # [T*k, d]
+    w = (top_w.reshape(-1) * keep * local).astype(dtype)
+    out = jnp.sum((tok_y * w[:, None]).reshape(T, k, d), axis=1)
+    return out.reshape(B, S, d), aux

@@ -1,0 +1,38 @@
+"""Tensor-parallel context threaded through block apply functions.
+
+Blocks never hard-code mesh axis names; they receive a ``TP`` describing the
+tensor axis they (may) run under inside ``shard_map``. Outside shard_map
+(unit tests, simulator sub-models) use ``TP.none()`` — all collectives become
+no-ops and offsets are zero.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class TP:
+    axis: str | None = None   # mesh axis name inside shard_map, or None
+    size: int = 1             # number of tensor shards
+
+    @staticmethod
+    def none() -> "TP":
+        return TP(None, 1)
+
+    def index(self):
+        if self.axis is None:
+            return 0
+        return jax.lax.axis_index(self.axis)
+
+    def psum(self, x):
+        if self.axis is None:
+            return x
+        return jax.lax.psum(x, self.axis)
+
+    def all_gather(self, x, axis: int = -1):
+        if self.axis is None:
+            return x
+        return jax.lax.all_gather(x, self.axis, axis=axis, tiled=True)

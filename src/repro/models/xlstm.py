@@ -1,0 +1,335 @@
+"""xLSTM layers: mLSTM (matrix memory, parallel-form trainable) and sLSTM
+(scalar memory, sequential scan), per arXiv:2405.04517.
+
+Tensor-parallel layout: every weight that touches heads carries an explicit
+head axis (sharded over the tensor axis); recurrences are head-local. The
+mixers take a ``TP`` and all-gather the shared pre-activations they need
+(Megatron-style f/g); down-projections are row-parallel — the caller psums
+the partial block output.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import modules
+from repro.models.tp import TP
+
+
+# ================================ mLSTM =================================
+
+def mlstm_dims(cfg: ModelConfig):
+    di = cfg.ssm_expand * cfg.d_model
+    H = cfg.num_heads
+    return di, H, di // H
+
+
+def init_mlstm(key, cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    di, H, dh = mlstm_dims(cfg)
+    ks = jax.random.split(key, 8)
+    s = 1.0 / float(np.sqrt(d))
+    si = 1.0 / float(np.sqrt(di))
+    return {
+        "up_x": modules.dense_init(ks[0], d, di, dtype=dtype),
+        "up_z": modules.dense_init(ks[1], d, di, dtype=dtype),
+        "conv_w": jax.random.normal(ks[2], (cfg.ssm_conv_width, di), dtype) * 0.25,
+        "conv_b": jnp.zeros((di,), dtype),
+        "wq": jax.random.normal(ks[3], (di, H, dh), dtype) * si,
+        "wk": jax.random.normal(ks[4], (di, H, dh), dtype) * si,
+        "wv": jax.random.normal(ks[5], (di, H, dh), dtype) * si,
+        "wgate": jax.random.normal(ks[6], (di, H, 2), dtype) * si,
+        "f_bias": jnp.full((H,), 3.0, dtype),
+        "gn": {"scale": jnp.ones((H, dh), dtype)},
+        "down": jax.random.normal(ks[7], (H, dh, d), dtype) * si,
+    }
+
+
+def _causal_conv(x, w, b):
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    return sum(pad[:, i:i + x.shape[1], :] * w[i] for i in range(K)) + b
+
+
+def _group_norm(scale, xh, eps=1e-5):
+    """xh: [B, S, H, dh]; scale: [H, dh]."""
+    xf = xh.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return y.astype(xh.dtype)
+
+
+def _mlstm_qkvg(p, x, dtype, tp: TP):
+    """Shared preamble: up-proj, conv, gathered activations, local q/k/v/gates."""
+    xm_l = modules.dense(p["up_x"], x, dtype)        # [B,S,di_local]
+    z_l = modules.dense(p["up_z"], x, dtype)
+    xc_l = jax.nn.silu(_causal_conv(xm_l, p["conv_w"].astype(dtype),
+                                    p["conv_b"].astype(dtype)))
+    xm = tp.all_gather(xm_l, axis=-1)                # full di
+    xc = tp.all_gather(xc_l, axis=-1)
+    q = jnp.einsum("bsd,dhk->bshk", xc, p["wq"].astype(dtype))
+    k = jnp.einsum("bsd,dhk->bshk", xc, p["wk"].astype(dtype))
+    v = jnp.einsum("bsd,dhk->bshk", xm, p["wv"].astype(dtype))
+    g = jnp.einsum("bsd,dhg->bshg", xm, p["wgate"].astype(jnp.float32))
+    ig, fg = g[..., 0], g[..., 1]                    # [B,S,H_local]
+    logf = jax.nn.log_sigmoid(fg + p["f_bias"].astype(jnp.float32))
+    return xm_l, z_l, q, k, v, ig.astype(jnp.float32), logf
+
+
+def mlstm_mixer(p, x, *, cfg: ModelConfig, dtype=jnp.bfloat16,
+                tp: TP = TP.none()):
+    """Parallel (training) form. x: [B,S,d] -> partial [B,S,d] (psum me)."""
+    di, H, dh = mlstm_dims(cfg)
+    B, S, _ = x.shape
+    _, z_l, q, k, v, ig, logf = _mlstm_qkvg(p, x, dtype, tp)
+    q = q.astype(jnp.float32); k = k.astype(jnp.float32); v = v.astype(jnp.float32)
+
+    cumf = jnp.cumsum(logf, axis=1)                  # [B,S,Hl]
+    seg = (cumf[:, :, None, :] - cumf[:, None, :, :] + ig[:, None, :, :])
+    tri = jnp.tril(jnp.ones((S, S), bool))[None, :, :, None]
+    seg = jnp.where(tri, seg, -jnp.inf)
+    m = jnp.max(seg, axis=2, keepdims=True)          # [B,S,1,Hl]
+    D = jnp.exp(seg - m)
+
+    scores = jnp.einsum("bthk,bshk->btsh", q, k) / jnp.sqrt(float(dh))
+    W = scores * D
+    norm = jnp.maximum(jnp.abs(jnp.sum(W, axis=2)), jnp.exp(-m[:, :, 0, :]))
+    h = jnp.einsum("btsh,bshk->bthk", W, v) / norm[..., None]
+
+    h = _group_norm(p["gn"]["scale"], h.astype(dtype))
+    zh = z_l.reshape(B, S, h.shape[2], dh)
+    out = jnp.einsum("bshk,hkd->bsd", (h * jax.nn.silu(zh)).astype(dtype),
+                     p["down"].astype(dtype))
+    return out                                        # partial over heads
+
+
+def mlstm_mixer_chunk(p, x, cache, *, cfg: ModelConfig, dtype=jnp.bfloat16,
+                      tp: TP = TP.none()):
+    """Chunked-prefill mLSTM: parallel form within the chunk + carried
+    stabilized matrix state (C, n, m) across chunks — the chunk analogue of
+    ``mlstm_step``. Returns (partial_out [B,L,d], new_cache)."""
+    di, H, dh = mlstm_dims(cfg)
+    B, L, _ = x.shape
+    xm_l = modules.dense(p["up_x"], x, dtype)
+    z_l = modules.dense(p["up_z"], x, dtype)
+    hist = jnp.concatenate([cache["conv"].astype(dtype), xm_l], axis=1)
+    K = p["conv_w"].shape[0]
+    w = p["conv_w"].astype(dtype)
+    xc_l = jax.nn.silu(sum(hist[:, i:i + L, :] * w[i] for i in range(K))
+                       + p["conv_b"].astype(dtype))
+    xm = tp.all_gather(xm_l, axis=-1)
+    xc = tp.all_gather(xc_l, axis=-1)
+    q = jnp.einsum("bsd,dhk->bshk", xc, p["wq"].astype(dtype)).astype(jnp.float32)
+    k = jnp.einsum("bsd,dhk->bshk", xc, p["wk"].astype(dtype)).astype(jnp.float32)
+    v = jnp.einsum("bsd,dhk->bshk", xm, p["wv"].astype(dtype)).astype(jnp.float32)
+    g = jnp.einsum("bsd,dhg->bshg", xm, p["wgate"].astype(jnp.float32))
+    ig, fg = g[..., 0], g[..., 1]
+    logf = jax.nn.log_sigmoid(fg + p["f_bias"].astype(jnp.float32))
+
+    C0, n0, m0 = cache["C"], cache["n"], cache["m"]      # [B,Hl,...]
+    cumf = jnp.cumsum(logf, axis=1)                      # [B,L,Hl]
+    # in-chunk pair log-weights (s <= t): cumf_t - cumf_s + ig_s
+    seg = cumf[:, :, None, :] - cumf[:, None, :, :] + ig[:, None, :, :]
+    tri = jnp.tril(jnp.ones((L, L), bool))[None, :, :, None]
+    seg = jnp.where(tri, seg, -jnp.inf)
+    # stabilizer covers BOTH in-chunk pairs and the carried state term
+    carry_log = cumf + m0[:, None, :]                    # [B,L,Hl]
+    m_t = jnp.maximum(jnp.max(seg, axis=2), carry_log)   # [B,L,Hl]
+    D = jnp.exp(seg - m_t[:, :, None, :])
+    carry_w = jnp.exp(carry_log - m_t)                   # [B,L,Hl]
+
+    k_sc = k / jnp.sqrt(float(dh))
+    scores = jnp.einsum("bthk,bshk->btsh", q, k_sc)
+    Wm = scores * D
+    num = (jnp.einsum("btsh,bshk->bthk", Wm, v)
+           + carry_w[..., None] * jnp.einsum("bhvk,bthk->bthv", C0, q))
+    den_in = jnp.sum(Wm, axis=2) + carry_w * jnp.einsum("bhk,bthk->bth",
+                                                        n0, q)
+    den = jnp.maximum(jnp.abs(den_in), jnp.exp(-m_t))
+    h = (num / den[..., None]).astype(dtype)             # [B,L,Hl,dh]
+    h = _group_norm(p["gn"]["scale"], h)
+    zh = z_l.reshape(B, L, h.shape[2], dh)
+    out = jnp.einsum("bshk,hkd->bsd", (h * jax.nn.silu(zh)).astype(dtype),
+                     p["down"].astype(dtype))
+
+    # state update at chunk end
+    tot = cumf[:, -1, :]                                 # [B,Hl]
+    m_new = jnp.maximum(tot + m0,
+                        jnp.max(tot[:, None, :] - cumf + ig, axis=1))
+    w_s = jnp.exp(tot[:, None, :] - cumf + ig - m_new[:, None, :])  # [B,L,Hl]
+    C_new = (jnp.exp(tot + m0 - m_new)[..., None, None] * C0
+             + jnp.einsum("bsh,bshv,bshk->bhvk", w_s, v, k_sc))
+    n_new = (jnp.exp(tot + m0 - m_new)[..., None] * n0
+             + jnp.einsum("bsh,bshk->bhk", w_s, k_sc))
+    new_cache = {"C": C_new, "n": n_new, "m": m_new,
+                 "conv": hist[:, -(K - 1):, :].astype(cache["conv"].dtype)}
+    return out, new_cache
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int, heads_local: int | None = None):
+    di, H, dh = mlstm_dims(cfg)
+    Hl = heads_local or H
+    return {
+        "C": jnp.zeros((batch, Hl, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, Hl, dh), jnp.float32),
+        "m": jnp.full((batch, Hl), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, di // H * Hl),
+                          jnp.float32),
+    }
+
+
+def mlstm_step(p, x, cache, *, cfg: ModelConfig, dtype=jnp.bfloat16,
+               tp: TP = TP.none()):
+    """Recurrent decode step. x: [B,1,d] -> (partial [B,1,d], cache)."""
+    di, H, dh = mlstm_dims(cfg)
+    B = x.shape[0]
+    xm_l = modules.dense(p["up_x"], x, dtype)
+    z_l = modules.dense(p["up_z"], x, dtype)
+    hist = jnp.concatenate([cache["conv"].astype(dtype), xm_l], axis=1)
+    K = p["conv_w"].shape[0]
+    xc_l = jax.nn.silu(jnp.sum(hist[:, -K:, :] * p["conv_w"].astype(dtype),
+                               axis=1, keepdims=True)
+                       + p["conv_b"].astype(dtype))
+    xm = tp.all_gather(xm_l, axis=-1)
+    xc = tp.all_gather(xc_l, axis=-1)
+    q = jnp.einsum("bsd,dhk->bshk", xc, p["wq"].astype(dtype))[:, 0].astype(jnp.float32)
+    k = jnp.einsum("bsd,dhk->bshk", xc, p["wk"].astype(dtype))[:, 0].astype(jnp.float32)
+    v = jnp.einsum("bsd,dhk->bshk", xm, p["wv"].astype(dtype))[:, 0].astype(jnp.float32)
+    g = jnp.einsum("bsd,dhg->bshg", xm, p["wgate"].astype(jnp.float32))[:, 0]
+    ig, fg = g[..., 0], g[..., 1]
+    logf = jax.nn.log_sigmoid(fg + p["f_bias"].astype(jnp.float32))
+
+    m_new = jnp.maximum(logf + cache["m"], ig)
+    f_s = jnp.exp(logf + cache["m"] - m_new)
+    i_s = jnp.exp(ig - m_new)
+    k_sc = k / jnp.sqrt(float(dh))
+    C = (f_s[..., None, None] * cache["C"]
+         + i_s[..., None, None] * (v[..., :, None] * k_sc[..., None, :]))
+    n = f_s[..., None] * cache["n"] + i_s[..., None] * k_sc
+    num = jnp.einsum("bhvk,bhk->bhv", C, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q)), jnp.exp(-m_new))
+    h = (num / den[..., None])[:, None].astype(dtype)     # [B,1,Hl,dh]
+    h = _group_norm(p["gn"]["scale"], h)
+    zh = z_l.reshape(B, 1, h.shape[2], dh)
+    out = jnp.einsum("bshk,hkd->bsd", (h * jax.nn.silu(zh)).astype(dtype),
+                     p["down"].astype(dtype))
+    return out, {"C": C, "n": n, "m": m_new,
+                 "conv": hist[:, 1:, :].astype(cache["conv"].dtype)}
+
+
+# ================================ sLSTM =================================
+
+def slstm_dims(cfg: ModelConfig):
+    H = cfg.num_heads
+    return H, cfg.d_model // H
+
+
+def slstm_ff_dim(cfg: ModelConfig) -> int:
+    return int(cfg.d_model * 4 / 3 / 8) * 8
+
+
+def init_slstm(key, cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    H, dh = slstm_dims(cfg)
+    ffd = slstm_ff_dim(cfg)
+    ks = jax.random.split(key, 5)
+    s = 1.0 / float(np.sqrt(d))
+    return {
+        "w": jax.random.normal(ks[0], (d, H, 4 * dh), dtype) * s,
+        "b": jnp.zeros((H, 4 * dh), dtype),
+        "r": jax.random.normal(ks[1], (H, dh, 4 * dh), dtype) / float(np.sqrt(dh)),
+        "f_bias": jnp.full((H, dh), 3.0, dtype),
+        "gn": {"scale": jnp.ones((H, dh), dtype)},
+        "up_u": modules.dense_init(ks[2], d, ffd, dtype=dtype),
+        "up_g": modules.dense_init(ks[3], d, ffd, dtype=dtype),
+        "down": modules.dense_init(ks[4], ffd, d, dtype=dtype),
+    }
+
+
+def _slstm_cell(p, wx_t, state):
+    """wx_t: [B,Hl,4dh] = W x_t + b (recurrent term added here)."""
+    c, n, h, m = state
+    rec = jnp.einsum("bhd,hdk->bhk", h, p["r"].astype(jnp.float32))
+    z, i, f, o = jnp.split(wx_t + rec, 4, axis=-1)
+    f = f + p["f_bias"].astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(f)
+    m_new = jnp.maximum(logf + m, i)
+    i_s = jnp.exp(i - m_new)
+    f_s = jnp.exp(logf + m - m_new)
+    c_new = f_s * c + i_s * jnp.tanh(z)
+    n_new = f_s * n + i_s
+    h_new = jax.nn.sigmoid(o) * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, h_new, m_new)
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int, heads_local: int | None = None):
+    H, dh = slstm_dims(cfg)
+    Hl = heads_local or H
+    z = jnp.zeros((batch, Hl, dh), jnp.float32)
+    return (z, z, z, jnp.full((batch, Hl, dh), -1e30, jnp.float32))
+
+
+def slstm_mixer(p, x, *, cfg: ModelConfig, dtype=jnp.bfloat16,
+                tp: TP = TP.none(), h0=None):
+    """x: [B,S,d] -> partial [B,S,d] (caller psums over tp)."""
+    H, dh = slstm_dims(cfg)
+    B, S, d = x.shape
+    wx = (jnp.einsum("bsd,dhk->bshk", x.astype(jnp.float32),
+                     p["w"].astype(jnp.float32))
+          + p["b"].astype(jnp.float32))
+    state = h0 if h0 is not None else init_slstm_state(cfg, B, wx.shape[2])
+
+    def step(st, wx_t):
+        st2 = _slstm_cell(p, wx_t, st)
+        return st2, st2[2]
+
+    state, hs = jax.lax.scan(step, state, jnp.moveaxis(wx, 1, 0))
+    hs = jnp.moveaxis(hs, 0, 1).astype(dtype)        # [B,S,Hl,dh]
+    y_l = _group_norm(p["gn"]["scale"], hs).reshape(B, S, -1)
+    y = tp.all_gather(y_l, axis=-1)                  # full d
+    u = modules.dense(p["up_u"], y, dtype)
+    g = modules.dense(p["up_g"], y, dtype)
+    return modules.dense(p["down"], jax.nn.gelu(u) * jax.nn.sigmoid(g), dtype)
+
+
+def slstm_mixer_chunk(p, x, cache, *, cfg: ModelConfig, dtype=jnp.bfloat16,
+                      tp: TP = TP.none()):
+    """Chunked-prefill sLSTM: the sequential scan simply continues from the
+    carried state. cache: {c, n, h, m}. Returns (partial_out, new_cache)."""
+    st = (cache["c"], cache["n"], cache["h"], cache["m"])
+    B, L, d = x.shape
+    wx = (jnp.einsum("bsd,dhk->bshk", x.astype(jnp.float32),
+                     p["w"].astype(jnp.float32))
+          + p["b"].astype(jnp.float32))
+
+    def step(s_, wx_t):
+        s2 = _slstm_cell(p, wx_t, s_)
+        return s2, s2[2]
+
+    st2, hs = jax.lax.scan(step, st, jnp.moveaxis(wx, 1, 0))
+    hs = jnp.moveaxis(hs, 0, 1).astype(dtype)
+    y_l = _group_norm(p["gn"]["scale"], hs).reshape(B, L, -1)
+    y = tp.all_gather(y_l, axis=-1)
+    u = modules.dense(p["up_u"], y, dtype)
+    g2 = modules.dense(p["up_g"], y, dtype)
+    out = modules.dense(p["down"], jax.nn.gelu(u) * jax.nn.sigmoid(g2), dtype)
+    return out, {"c": st2[0], "n": st2[1], "h": st2[2], "m": st2[3]}
+
+
+def slstm_step(p, x, state, *, cfg: ModelConfig, dtype=jnp.bfloat16,
+               tp: TP = TP.none()):
+    """Decode step. x: [B,1,d] -> (partial [B,1,d], state)."""
+    B = x.shape[0]
+    wx = (jnp.einsum("bsd,dhk->bhk", x.astype(jnp.float32),
+                     p["w"].astype(jnp.float32))
+          + p["b"].astype(jnp.float32))
+    state = _slstm_cell(p, wx, state)
+    hs = state[2][:, None].astype(dtype)             # [B,1,Hl,dh]
+    y_l = _group_norm(p["gn"]["scale"], hs).reshape(B, 1, -1)
+    y = tp.all_gather(y_l, axis=-1)
+    u = modules.dense(p["up_u"], y, dtype)
+    g = modules.dense(p["up_g"], y, dtype)
+    return modules.dense(p["down"], jax.nn.gelu(u) * jax.nn.sigmoid(g), dtype), state

@@ -1,0 +1,9 @@
+from repro.optim.sgd import sgd_init, sgd_update
+from repro.optim.adam import adam_init, adam_update
+from repro.optim.schedules import step_decay, warmup_cosine
+
+OPTIMIZERS = {"sgd": (sgd_init, sgd_update), "adam": (adam_init, adam_update)}
+
+
+def get_optimizer(name: str):
+    return OPTIMIZERS[name]

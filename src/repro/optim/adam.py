@@ -1,0 +1,31 @@
+"""AdamW (for the LM examples; the paper itself uses SGD)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adam_init(params):
+    z = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return {"m": z, "v": jax.tree.map(jnp.copy, z),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, *, lr, b1=0.9, b2=0.95, eps=1e-8,
+                weight_decay=0.0, momentum=None):
+    c = state["count"] + 1
+    cf = c.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * g
+        v_new = b2 * v + (1 - b2) * g * g
+        mh = m_new / (1 - b1 ** cf)
+        vh = v_new / (1 - b2 ** cf)
+        step = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m_new, v_new
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    pick = lambda i: jax.tree.map(lambda t: t[i], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+    return pick(0), {"m": pick(1), "v": pick(2), "count": c}

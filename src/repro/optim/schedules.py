@@ -1,0 +1,22 @@
+"""LR schedules. The paper drops the LR at epoch 130 of 300 (Fig. 4)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def step_decay(base_lr: float, boundaries=(130,), factor: float = 0.1):
+    def lr(epoch):
+        e = jnp.asarray(epoch)
+        k = sum((e >= b).astype(jnp.int32) for b in boundaries)
+        return base_lr * factor ** k
+    return lr
+
+
+def warmup_cosine(base_lr: float, warmup: int, total: int, floor: float = 0.1):
+    def lr(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = base_lr * jnp.minimum(1.0, s / max(warmup, 1))
+        t = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(s < warmup, warm, base_lr * cos)
+    return lr

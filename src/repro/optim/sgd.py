@@ -1,0 +1,27 @@
+"""SGD + momentum + weight decay — the paper's optimizer (§IV-B: momentum
+0.9, weight decay 4e-5). Pure pytree transform; the Pallas fused variant
+(kernels/fused_sgd) implements the same update for flat parameter tiles.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sgd_init(params):
+    return {"momentum": jax.tree.map(jnp.zeros_like, params)}
+
+
+def sgd_update(params, grads, state, *, lr, momentum=0.9, weight_decay=4e-5):
+    def upd(p, g, m):
+        g = g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32)
+        m_new = momentum * m.astype(jnp.float32) + g
+        p_new = p.astype(jnp.float32) - lr * m_new
+        return p_new.astype(p.dtype), m_new.astype(m.dtype)
+
+    flat = jax.tree.map(upd, params, grads, state["momentum"])
+    new_params = jax.tree.map(lambda t: t[0], flat,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], flat,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, {"momentum": new_m}

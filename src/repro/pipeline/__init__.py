@@ -1,0 +1,5 @@
+from repro.pipeline.sharding import (AXIS_DATA, AXIS_POD, AXIS_STAGE,
+                                     AXIS_TENSOR, block_specs, cache_specs,
+                                     param_shardings)
+from repro.pipeline.pipeline_step import (pipeline_forward, pipeline_decode,
+                                          make_train_step, make_serve_step)

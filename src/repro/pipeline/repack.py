@@ -1,0 +1,140 @@
+"""Dynamic re-partition at TPU scale: re-pack stacked pipeline parameters
+under a new layer->stage assignment (paper §III-D/III-F, mapped onto the
+stacked-slot representation of DESIGN.md §3).
+
+The stacked layout holds layer ℓ at (stage s, slot j) where s/j follow the
+assignment's contiguous ranges; pad slots are masked. A re-partition (or a
+stage loss) changes the assignment: this module computes, per (stage, slot),
+which OLD (stage, slot) its weights come from — exactly Algorithm 1's
+``need`` map, realized as a gather over the stage axis — and executes it as
+one vectorized index per leaf (on hardware this lowers to a collective
+gather over the stage axis; the moved bytes equal the redistribution plan's
+transfer volume).
+
+Only uniform slot layouts can re-pack arbitrarily (dense/moe/vlm families);
+heterogeneous layouts (hybrid/ssm/audio) keep the fixed balanced assignment
+— recorded in DESIGN.md §4.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import redistribution as rd
+
+
+def uniform_layout(cfg: ModelConfig) -> bool:
+    return len(set(cfg.slot_layout)) == 1
+
+
+def slot_of(assignment: Sequence[int], layer: int) -> tuple[int, int]:
+    """(stage, slot) holding ``layer`` under ``assignment``."""
+    acc = 0
+    for s, n in enumerate(assignment):
+        if layer < acc + n:
+            return s, layer - acc
+        acc += n
+    raise ValueError(layer)
+
+
+@dataclasses.dataclass(frozen=True)
+class RepackPlan:
+    """For each (new stage s, slot j): the (old stage, old slot) source, or
+    (-1, -1) for pad slots (left as-is)."""
+    src: np.ndarray            # [S, Lps, 2] int
+    moved_layers: int          # how many layers change stage (transfer cost)
+
+    @property
+    def stages(self):
+        return self.src.shape[0]
+
+
+def make_repack_plan(cfg: ModelConfig, old_assignment: Sequence[int],
+                     new_assignment: Sequence[int]) -> RepackPlan:
+    assert uniform_layout(cfg), (cfg.name, "heterogeneous layout cannot "
+                                 "re-pack across slot types")
+    S, Lps = cfg.pipeline_stages, cfg.layers_per_stage
+    assert sum(old_assignment) == sum(new_assignment)
+    assert len(new_assignment) == S and max(new_assignment) <= Lps, \
+        (new_assignment, Lps)
+    src = np.full((S, Lps, 2), -1, int)
+    moved = 0
+    for layer in range(sum(new_assignment)):
+        os_, oj = slot_of(old_assignment, layer)
+        ns, nj = slot_of(new_assignment, layer)
+        src[ns, nj] = (os_, oj)
+        if os_ != ns:
+            moved += 1
+    return RepackPlan(src=src, moved_layers=moved)
+
+
+def repack_blocks(blocks, plan: RepackPlan, cfg: ModelConfig):
+    """blocks: list over slots of stage-stacked pytrees (leaves [S, ...]).
+    Returns the re-packed list. Pad-destination slots keep their old values
+    (they are masked out by the pad mask anyway)."""
+    S, Lps = plan.src.shape[:2]
+    out = []
+    for j in range(Lps):
+        # new slot j at stage s comes from old (src_s, src_j)
+        src_stage = jnp.asarray([plan.src[s, j, 0] if plan.src[s, j, 0] >= 0
+                                 else s for s in range(S)])
+        src_slot = [plan.src[s, j, 1] if plan.src[s, j, 1] >= 0 else j
+                    for s in range(S)]
+
+        def gather_leaf(*leaves_per_slot):
+            # leaves_per_slot[q][s] = old slot q's stage-s leaf
+            rows = [leaves_per_slot[src_slot[s]][src_stage[s]]
+                    for s in range(S)]
+            return jnp.stack(rows, axis=0)
+
+        out.append(jax.tree.map(gather_leaf, *blocks))
+    return out
+
+
+def redistribution_bytes(cfg: ModelConfig, plan: RepackPlan,
+                         bytes_per_layer: float) -> float:
+    """Transfer volume of the re-pack = Algorithm 1's fetch bytes."""
+    return plan.moved_layers * bytes_per_layer
+
+
+def repartition_from_profile(cfg: ModelConfig, layer_times, out_bytes,
+                             capacities, bandwidths):
+    """Solve the paper's DP for per-stage layer counts, clipped to the slot
+    budget (layers_per_stage) so the result is representable."""
+    from repro.core.partition import solve_partition
+    r = solve_partition(layer_times, out_bytes, capacities, bandwidths)
+    counts = list(r.counts)
+    # clip to slot budget, pushing overflow to the lightest neighbor
+    Lps = cfg.layers_per_stage
+    for s in range(len(counts)):
+        while counts[s] > Lps:
+            counts[s] -= 1
+            tgt = min(((t, c) for t, c in enumerate(counts) if c < Lps),
+                      key=lambda x: x[1])[0]
+            counts[tgt] += 1
+    return counts
+
+
+def recover_assignment_after_stage_loss(cfg: ModelConfig,
+                                        old_assignment: Sequence[int],
+                                        lost_stage: int) -> list[int]:
+    """Fault recovery at TPU scale: redistribute the lost stage's layers
+    over the surviving slot budget, preferring the paper's balanced fill
+    (survivors with spare slots take over, ordered by load)."""
+    S, Lps = cfg.pipeline_stages, cfg.layers_per_stage
+    counts = list(old_assignment)
+    orphans = counts[lost_stage]
+    counts[lost_stage] = 0
+    while orphans:
+        candidates = [s for s in range(S)
+                      if s != lost_stage and counts[s] < Lps]
+        assert candidates, "no slot budget left to absorb the lost stage"
+        tgt = min(candidates, key=lambda s: counts[s])
+        counts[tgt] += 1
+        orphans -= 1
+    return counts

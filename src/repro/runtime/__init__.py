@@ -1,0 +1,3 @@
+from repro.runtime.devices import DeviceSpec, WorkloadProfile
+from repro.runtime.simulator import PipelineSimulator, SimConfig, SimResult
+from repro.runtime.semantics import AsyncTrainingExecutor

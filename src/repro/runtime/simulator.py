@@ -1,0 +1,331 @@
+"""Event-driven timing simulator of the FTPipeHD protocol on a heterogeneous
+edge cluster (virtual clock). Reproduces the paper's speed/fault experiments:
+
+  * async 1F1B pipeline timing per stage (exact op-level dependency sim),
+  * periodic chain/global weight replication pauses (Fig. 6 spikes),
+  * dynamic re-partition at batch 10 then every 100 (paper §III-D),
+  * failure injection + detection timeout + recovery (FTPipeHD weight
+    redistribution vs ResPipe take-over policy; Table III / Fig. 6),
+  * baselines: static-PipeDream partitioning, single-device training.
+
+Within control-free segments the pipeline is simulated exactly; control
+events (replication, re-partition, recovery) happen at batch boundaries with
+a drain — a small, documented approximation (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core import redistribution as rd
+from repro.core import schedule as sched
+from repro.core.capacity import CapacityEstimator
+from repro.core.partition import (PartitionResult, solve_partition,
+                                  uniform_partition)
+from repro.runtime.devices import DeviceSpec, WorkloadProfile
+
+
+@dataclasses.dataclass
+class SimConfig:
+    devices: list[DeviceSpec]
+    profile: WorkloadProfile
+    bandwidth: np.ndarray                 # [N, N] bytes/s
+    policy: str = "ftpipehd"              # ftpipehd | pipedream | respipe
+    num_batches: int = 300
+    chain_every: int = 50                 # paper §IV-B
+    global_every: int = 100
+    repartition_first_at: int = 10
+    repartition_every: int = 100
+    detect_timeout: float = 1.0           # fault timer (s)
+    probe_rtt: float = 0.05
+    commit_rtt: float = 0.05
+    comm_factor: float = 2.0              # fwd activation + bwd gradient
+
+
+@dataclasses.dataclass
+class SimResult:
+    batch_done: np.ndarray                # absolute completion time per batch
+    batch_times: np.ndarray               # per-batch deltas (the Fig. 6 series)
+    total_time: float
+    events: list[tuple[float, str]]
+    partitions: list[tuple[int, tuple[int, ...]]]   # (from_batch, points)
+    recovery_overhead: float = 0.0
+
+    def steady_batch_time(self, lo_frac=0.5, hi_frac=0.9) -> float:
+        n = len(self.batch_times)
+        seg = np.sort(self.batch_times[int(n * lo_frac):int(n * hi_frac)])
+        return float(np.median(seg)) if len(seg) else float("nan")
+
+
+class PipelineSimulator:
+    def __init__(self, cfg: SimConfig):
+        self.cfg = cfg
+        self.capacities = np.array([d.capacity for d in cfg.devices])
+        self._batch_now = 0            # for time-varying capacities
+
+    def _caps_now(self):
+        return np.array([d.capacity_at(self._batch_now)
+                         for d in self.cfg.devices])
+
+    # ---------------- exact 1F1B segment simulation ---------------------
+
+    def _segment(self, part: PartitionResult, worker_ids: list[int],
+                 num_batches: int, t0: float) -> tuple[np.ndarray, float]:
+        """Simulate `num_batches` through the pipeline; returns (completion
+        times at stage 0, drain end time)."""
+        cfg = self.cfg
+        N = len(worker_ids)
+        caps = self._caps_now()[worker_ids]
+        ranges = part.ranges
+        fwd_t = np.array([np.sum(cfg.profile.fwd_times[a:b + 1]) * caps[i]
+                          for i, (a, b) in enumerate(ranges)])
+        bwd_t = np.array([np.sum(cfg.profile.bwd_times[a:b + 1]) * caps[i]
+                          for i, (a, b) in enumerate(ranges)])
+        comm = np.zeros(max(N - 1, 1))
+        for i in range(N - 1):
+            bw = cfg.bandwidth[worker_ids[i], worker_ids[i + 1]]
+            comm[i] = cfg.profile.out_bytes[ranges[i][1]] / bw
+
+        if N == 1:
+            done = t0 + np.cumsum(np.full(num_batches, fwd_t[0] + bwd_t[0]))
+            return done, float(done[-1]) if num_batches else t0
+
+        ops = [list(sched.stage_schedule(s, N, num_batches)) for s in range(N)]
+        ptr = [0] * N
+        free = [t0] * N
+        fwd_ready = [dict() for _ in range(N)]
+        bwd_ready = [dict() for _ in range(N)]
+        for b in range(num_batches):
+            fwd_ready[0][b] = t0
+        batch_done = np.full(num_batches, np.nan)
+
+        remaining = sum(len(o) for o in ops)
+        while remaining:
+            progressed = False
+            for s in range(N):
+                while ptr[s] < len(ops[s]):
+                    op = ops[s][ptr[s]]
+                    if op.kind == "fwd":
+                        dep = fwd_ready[s].get(op.batch)
+                        if dep is None:
+                            break
+                        done = max(dep, free[s]) + fwd_t[s]
+                        free[s] = done
+                        if s < N - 1:
+                            fwd_ready[s + 1][op.batch] = done + comm[s]
+                        else:
+                            bwd_ready[s][op.batch] = done
+                    else:
+                        dep = bwd_ready[s].get(op.batch)
+                        if dep is None:
+                            break
+                        done = max(dep, free[s]) + bwd_t[s]
+                        free[s] = done
+                        if s > 0:
+                            bwd_ready[s - 1][op.batch] = done + comm[s - 1]
+                        else:
+                            batch_done[op.batch] = done
+                    ptr[s] += 1
+                    remaining -= 1
+                    progressed = True
+            assert progressed, "pipeline deadlock (invalid schedule)"
+        return batch_done, float(max(free))
+
+    # ----------------------- control-event costs ------------------------
+
+    def _weights_bytes(self, part: PartitionResult, stage: int) -> float:
+        a, b = part.ranges[stage]
+        return float(np.sum(self.cfg.profile.weight_bytes[a:b + 1]))
+
+    def _chain_cost(self, part, worker_ids) -> float:
+        """All workers replicate to their neighbor in parallel -> max."""
+        N = len(worker_ids)
+        costs = []
+        for s in range(N):
+            t = (s + 1) % N
+            bw = self.cfg.bandwidth[worker_ids[s], worker_ids[t]]
+            costs.append(self._weights_bytes(part, s) / bw)
+        return max(costs)
+
+    def _global_cost(self, part, worker_ids) -> float:
+        """Workers 1..N-1 send to central — serialized on central's link."""
+        return sum(self._weights_bytes(part, s)
+                   / self.cfg.bandwidth[worker_ids[s], worker_ids[0]]
+                   for s in range(1, len(worker_ids)))
+
+    def _redistribution_cost(self, p_new, p_cur, worker_ids_new,
+                             plans) -> float:
+        """Parallel fetches -> max per-worker transfer + commit."""
+        wb = self.cfg.profile.weight_bytes
+        per_worker = []
+        for i_new, plan in enumerate(plans):
+            t = 0.0
+            for target, layers in plan.need.items():
+                bw = self.cfg.bandwidth[worker_ids_new[target],
+                                        worker_ids_new[i_new]]
+                t += sum(wb[l] for l in layers) / bw
+            per_worker.append(t)
+        return (max(per_worker) if per_worker else 0.0) + self.cfg.commit_rtt
+
+    def _solve(self, worker_ids, est: CapacityEstimator) -> PartitionResult:
+        # capacities indexed by ORIGINAL device id; before any profile is
+        # collected the central assumes homogeneity (paper §III-B / §III-F)
+        now = self._caps_now()
+        caps = np.array([now[w] if est.all_reported() else 1.0
+                         for w in worker_ids])
+        caps = caps / caps[0] if caps[0] > 0 else caps
+        bws = np.array([self.cfg.bandwidth[worker_ids[i], worker_ids[i + 1]]
+                        for i in range(len(worker_ids) - 1)])
+        return solve_partition(self.cfg.profile.exec_times,
+                               self.cfg.profile.out_bytes, caps, bws,
+                               self.cfg.comm_factor)
+
+    # ------------------------------ run ---------------------------------
+
+    def run(self, fail: Optional[tuple[int, int]] = None) -> SimResult:
+        """fail = (worker_index, batch_index): that worker dies right when
+        `batch_index` starts (paper kills worker 1 at batch 205)."""
+        cfg = self.cfg
+        worker_ids = list(range(len(cfg.devices)))
+        est = CapacityEstimator(cfg.profile.exec_times, len(worker_ids))
+        L = cfg.profile.num_layers
+
+        if cfg.policy == "ftpipehd":
+            part = uniform_partition(L, len(worker_ids))
+        elif cfg.policy in ("pipedream", "respipe"):
+            # PipeDream DP under homogeneous assumption, static thereafter
+            bws = np.array([cfg.bandwidth[i, i + 1]
+                            for i in range(len(worker_ids) - 1)])
+            part = solve_partition(cfg.profile.exec_times,
+                                   cfg.profile.out_bytes,
+                                   np.ones(len(worker_ids)), bws,
+                                   cfg.comm_factor)
+        else:
+            raise ValueError(cfg.policy)
+
+        events: list[tuple[float, str]] = []
+        partitions = [(0, part.points)]
+        batch_done = np.full(cfg.num_batches, np.nan)
+        recovery_overhead = 0.0
+        t = 0.0
+        b0 = 0
+        profiled = False
+
+        def control_points():
+            pts = set()
+            for k in range(1, cfg.num_batches // cfg.chain_every + 1):
+                pts.add(k * cfg.chain_every)
+            if cfg.policy == "ftpipehd":
+                pts.add(cfg.repartition_first_at)
+                for k in range(1, cfg.num_batches // cfg.repartition_every + 1):
+                    pts.add(k * cfg.repartition_every)
+            if fail is not None:
+                pts.add(fail[1])
+            for d in cfg.devices:                      # capacity drift points
+                for b, _ in d.capacity_schedule:
+                    pts.add(b)
+            return sorted(p for p in pts if p < cfg.num_batches)
+
+        points = control_points() + [cfg.num_batches]
+        failed_done = False
+
+        for nxt in points:
+            if nxt <= b0:
+                continue
+            n_seg = nxt - b0
+            seg_done, t_end = self._segment(part, worker_ids, n_seg, t)
+            batch_done[b0:b0 + n_seg] = seg_done
+            t = t_end
+            b0 = nxt
+            if b0 >= cfg.num_batches:
+                break
+
+            # measured times available after the first segment
+            self._batch_now = b0
+            for i, w in enumerate(worker_ids):
+                a, e = part.ranges[i]
+                meas = float(np.sum(cfg.profile.exec_times[a:e + 1])
+                             * self._caps_now()[w])
+                est.update(i, meas, a, e)
+            profiled = True
+
+            # ---- failure event -----------------------------------------
+            if fail is not None and b0 == fail[1] and not failed_done:
+                failed_done = True
+                fw = fail[0]
+                pause = cfg.detect_timeout + cfg.probe_rtt
+                old_ids = list(worker_ids)
+                worker_ids = rd.update_worker_list(worker_ids, [fw])
+                if cfg.policy == "respipe":
+                    # successor absorbs the failed stage's layers, no re-split
+                    counts = list(part.counts)
+                    if fw + 1 < len(counts):
+                        counts = counts[:fw] + [counts[fw] + counts[fw + 1]] \
+                            + counts[fw + 2:]
+                    else:
+                        counts = counts[:fw - 1] + [counts[fw - 1] + counts[fw]]
+                    pts, acc = [], -1
+                    for c in counts:
+                        acc += c
+                        pts.append(acc)
+                    new_part = PartitionResult(tuple(pts), tuple(counts),
+                                               float("nan"))
+                    pause += 0.0        # ResPipe: no weight transfer (replica
+                    #                      already at successor)
+                else:
+                    new_part = self._solve(worker_ids, est)
+                    plans = [rd.plan_single_failure(new_part.points, part.points,
+                                                    fw, i_cur, i_new,
+                                                    len(old_ids))
+                             for i_new, i_cur in enumerate(
+                                 i for i in range(len(old_ids)) if i != fw)]
+                    pause += self._redistribution_cost(new_part.points,
+                                                       part.points,
+                                                       worker_ids, plans)
+                recovery_overhead = pause - cfg.detect_timeout - cfg.probe_rtt \
+                    if cfg.policy == "respipe" else pause
+                events.append((t, f"failure w{fw}; recovery {pause:.3f}s "
+                                  f"policy={cfg.policy}"))
+                t += pause
+                part = new_part
+                partitions.append((b0, part.points))
+                continue
+
+            # ---- replication -------------------------------------------
+            if b0 % cfg.chain_every == 0:
+                c = self._chain_cost(part, worker_ids)
+                if b0 % cfg.global_every == 0:
+                    c += self._global_cost(part, worker_ids)
+                    events.append((t, f"chain+global replication {c:.3f}s"))
+                else:
+                    events.append((t, f"chain replication {c:.3f}s"))
+                t += c
+
+            # ---- dynamic re-partition ----------------------------------
+            if (cfg.policy == "ftpipehd"
+                    and (b0 == cfg.repartition_first_at
+                         or b0 % cfg.repartition_every == 0)):
+                new_part = self._solve(worker_ids, est)
+                if new_part.points != part.points:
+                    plans = [rd.plan_repartition(new_part.points, part.points, i)
+                             for i in range(len(worker_ids))]
+                    c = self._redistribution_cost(new_part.points, part.points,
+                                                  worker_ids, plans)
+                    events.append((t, f"re-partition {part.counts} -> "
+                                      f"{new_part.counts} ({c:.3f}s)"))
+                    t += c
+                    part = new_part
+                    partitions.append((b0, part.points))
+
+        deltas = np.diff(np.concatenate([[0.0], batch_done]))
+        return SimResult(batch_done=batch_done, batch_times=deltas,
+                         total_time=float(batch_done[-1]), events=events,
+                         partitions=partitions,
+                         recovery_overhead=recovery_overhead)
+
+
+def single_device_time(profile: WorkloadProfile, capacity: float,
+                       num_batches: int) -> float:
+    return float(np.sum(profile.exec_times) * capacity * num_batches)

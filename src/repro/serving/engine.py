@@ -1,0 +1,127 @@
+"""Slot-based continuous-batching serving engine on the sequential decode
+path (per-slot positions — every request at its own offset in its own ring
+cache row).
+
+Token-level scheduling: at each engine step every ACTIVE slot advances one
+token — prompt tokens are fed (prefill-by-decode) until exhausted, then
+sampled continuations; finished slots retire and are refilled from the
+queue. This is the single-host engine; the pipeline-parallel variant uses
+the same per-slot-position decode attention through ``make_serve_step``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as model_lib
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: list[int]
+    max_new_tokens: int
+    generated: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    """Greedy (or temperature) continuous-batching generation."""
+
+    def __init__(self, cfg: ModelConfig, params, *, max_slots: int = 4,
+                 cache_len: int = 64, eos_id: Optional[int] = None,
+                 temperature: float = 0.0, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.max_slots = max_slots
+        self.cache_len = cache_len
+        self.eos_id = eos_id
+        self.temperature = temperature
+        self._key = jax.random.PRNGKey(seed)
+        self._queue: deque[Request] = deque()
+        self._slots: list[Optional[Request]] = [None] * max_slots
+        self._pos = np.zeros(max_slots, np.int32)      # next position to write
+        self._next_tok = np.zeros(max_slots, np.int32)
+        self._uid = 0
+        self.caches = model_lib.init_caches(cfg, batch=max_slots,
+                                            cache_len=cache_len,
+                                            dtype=jnp.float32)
+        self._step_fn = jax.jit(self._decode_step)
+
+    # ------------------------------- api --------------------------------
+    def submit(self, prompt: list[int], max_new_tokens: int = 16) -> int:
+        self._uid += 1
+        self._queue.append(Request(self._uid, list(prompt), max_new_tokens))
+        return self._uid
+
+    def run_until_drained(self, max_steps: int = 10_000) -> dict[int, list[int]]:
+        out: dict[int, list[int]] = {}
+        for _ in range(max_steps):
+            finished = self.step()
+            for r in finished:
+                out[r.uid] = r.generated
+            if not self._queue and all(s is None for s in self._slots):
+                break
+        return out
+
+    # ----------------------------- internals ----------------------------
+    def _decode_step(self, params, caches, tokens, pos):
+        logits, new_caches = model_lib.sequential_decode_step(
+            params, self.cfg, tokens[:, None], caches, pos)
+        return logits[:, 0], new_caches
+
+    def _reset_slot_cache(self, i: int):
+        """Zero slot i's rows in every cache leaf (fresh request)."""
+        def zero_row(a):
+            return a.at[:, i].set(jnp.zeros_like(a[:, i]))
+        self.caches = [jax.tree.map(zero_row, c) for c in self.caches]
+
+    def step(self) -> list[Request]:
+        # admit queued requests into free slots
+        for i in range(self.max_slots):
+            if self._slots[i] is None and self._queue:
+                r = self._queue.popleft()
+                self._slots[i] = r
+                self._pos[i] = 0
+                self._next_tok[i] = r.prompt[0]
+                self._reset_slot_cache(i)
+        if all(s is None for s in self._slots):
+            return []
+
+        tokens = jnp.asarray(self._next_tok)
+        pos = jnp.asarray(self._pos)
+        logits, self.caches = self._step_fn(self.params, self.caches,
+                                            tokens, pos)
+        if self.temperature > 0:
+            self._key, k = jax.random.split(self._key)
+            sampled = jax.random.categorical(k, logits / self.temperature,
+                                             axis=-1)
+        else:
+            sampled = jnp.argmax(logits, axis=-1)
+        sampled = np.asarray(sampled)
+
+        finished = []
+        for i, r in enumerate(self._slots):
+            if r is None:
+                continue
+            consumed = int(self._pos[i]) + 1       # tokens fed so far
+            self._pos[i] += 1
+            if consumed < len(r.prompt):
+                self._next_tok[i] = r.prompt[consumed]   # still prefilling
+                continue
+            tok = int(sampled[i])
+            r.generated.append(tok)
+            self._next_tok[i] = tok
+            hit_eos = self.eos_id is not None and tok == self.eos_id
+            if (len(r.generated) >= r.max_new_tokens or hit_eos
+                    or int(self._pos[i]) >= self.cache_len):
+                r.done = True
+                finished.append(r)
+                self._slots[i] = None
+        return finished

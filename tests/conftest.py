@@ -1,0 +1,14 @@
+"""Test bootstrap.
+
+The pipeline/sharding tests need a small multi-device host mesh, so we ask
+the CPU platform for 8 devices (NOT 512 — the production count is set only
+inside launch/dryrun.py; 8 host devices are benign for the single-device
+smoke tests, which just run on device 0).
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402  (must import after the flag)
+
+jax.config.update("jax_platform_name", "cpu")

@@ -1,0 +1,118 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles
+(interpret=True executes the Pallas kernel body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import attention_reference, flash_attention
+from repro.kernels.fused_sgd import fused_sgd, fused_sgd_tree, sgd_reference
+from repro.kernels.ssm_scan import ssd_scan, ssd_scan_reference
+from repro.kernels.ssm_scan.ref import ssd_scan_stepwise
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize(
+    "B,H,Hkv,S,dh,causal,window,dtype",
+    [(2, 4, 2, 256, 64, True, 0, jnp.float32),
+     (1, 4, 4, 128, 64, False, 0, jnp.float32),
+     (2, 8, 2, 200, 64, True, 64, jnp.float32),     # ragged + window
+     (1, 2, 1, 384, 128, True, 0, jnp.float32),
+     (1, 4, 2, 128, 64, True, 0, jnp.bfloat16),
+     (2, 2, 2, 96, 32, True, 32, jnp.bfloat16)])
+def test_flash_attention_sweep(B, H, Hkv, S, dh, causal, window, dtype):
+    q = jax.random.normal(KEY, (B, H, S, dh), dtype)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (B, Hkv, S, dh), dtype)
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (B, Hkv, S, dh), dtype)
+    out = flash_attention(q, k, v, causal, window, 128, 128, True)
+    ref = attention_reference(q, k, v, causal=causal, window=window)
+    tol = 5e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol)
+
+
+def test_flash_attention_block_size_invariance():
+    q = jax.random.normal(KEY, (1, 2, 256, 64))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (1, 2, 256, 64))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (1, 2, 256, 64))
+    outs = [flash_attention(q, k, v, True, 0, bq, bk, True)
+            for bq, bk in [(64, 64), (128, 64), (64, 128), (256, 256)]]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   atol=1e-5)
+
+
+def test_flash_attention_grad_matches_reference():
+    q = jax.random.normal(KEY, (1, 2, 64, 32))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (1, 2, 64, 32))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (1, 2, 64, 32))
+    f = lambda fn: jax.grad(lambda a: jnp.sum(fn(a) ** 2))(q)
+    g_k = f(lambda a: flash_attention(a, k, v, True, 0, 32, 32, True))
+    g_r = f(lambda a: attention_reference(a, k, v, causal=True))
+    np.testing.assert_allclose(np.asarray(g_k), np.asarray(g_r), atol=1e-4)
+
+
+@pytest.mark.parametrize(
+    "B,S,H,P,N,chunk,dtype",
+    [(2, 256, 4, 64, 16, 64, jnp.float32),
+     (1, 130, 2, 32, 8, 64, jnp.float32),            # ragged padding
+     (2, 128, 3, 64, 64, 128, jnp.float32),
+     (1, 128, 2, 64, 32, 64, jnp.bfloat16)])
+def test_ssd_scan_sweep(B, S, H, P, N, chunk, dtype):
+    ks = jax.random.split(KEY, 5)
+    xh = jax.random.normal(ks[0], (B, S, H, P), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H))) * 0.1
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, N))
+    Cm = jax.random.normal(ks[4], (B, S, N))
+    D = jnp.ones((H,))
+    y = ssd_scan(xh, dt, A, Bm, Cm, D, chunk, True)
+    y_step = ssd_scan_stepwise(xh, dt, A, Bm, Cm, D)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_step, np.float32), atol=tol)
+
+
+def test_ssd_chunk_invariance():
+    """Same result regardless of chunking — the scan's key invariant."""
+    ks = jax.random.split(KEY, 5)
+    B, S, H, P, N = 1, 128, 2, 32, 16
+    xh = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H))) * 0.1
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, N))
+    Cm = jax.random.normal(ks[4], (B, S, N))
+    D = jnp.ones((H,))
+    outs = [ssd_scan(xh, dt, A, Bm, Cm, D, c, True) for c in (32, 64, 128)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 5000), st.floats(0.001, 1.0), st.floats(0.0, 0.99))
+def test_fused_sgd_property(n, lr, momentum):
+    k = jax.random.fold_in(KEY, n)
+    p = jax.random.normal(k, (n,))
+    g = jax.random.normal(jax.random.fold_in(k, 1), (n,))
+    m = jax.random.normal(jax.random.fold_in(k, 2), (n,))
+    po, mo = fused_sgd(p, g, m, lr=lr, momentum=momentum, weight_decay=1e-4)
+    pr, mr = sgd_reference(p, g, m, lr=lr, momentum=momentum,
+                           weight_decay=1e-4)
+    np.testing.assert_allclose(np.asarray(po), np.asarray(pr), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(mo), np.asarray(mr), atol=1e-5)
+
+
+def test_fused_sgd_tree_matches_unfused():
+    from repro.optim import sgd_init, sgd_update
+    params = {"a": jax.random.normal(KEY, (17, 13)),
+              "b": {"w": jax.random.normal(jax.random.fold_in(KEY, 1), (40,))}}
+    grads = jax.tree.map(lambda a: a * 0.1 + 0.01, params)
+    mom = jax.tree.map(jnp.zeros_like, params)
+    po, mo = fused_sgd_tree(params, grads, mom, lr=0.1)
+    pr, st = sgd_update(params, grads, {"momentum": mom}, lr=0.1,
+                        momentum=0.9, weight_decay=4e-5)
+    for a, b in zip(jax.tree.leaves(po), jax.tree.leaves(pr)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)

@@ -1,0 +1,93 @@
+"""Partition DP (paper Eqs. 4-7) + capacity estimation (Eqs. 1-3)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.capacity import CapacityEstimator
+from repro.core.partition import (brute_force_partition, solve_partition,
+                                  stage_time, uniform_partition)
+
+
+@st.composite
+def instances(draw):
+    L = draw(st.integers(3, 14))
+    N = draw(st.integers(1, min(L, 5)))
+    lt = draw(st.lists(st.floats(0.05, 5.0), min_size=L, max_size=L))
+    ds = draw(st.lists(st.floats(1e3, 1e7), min_size=L, max_size=L))
+    caps = [1.0] + draw(st.lists(st.floats(0.1, 12.0), min_size=N - 1,
+                                 max_size=N - 1))
+    bws = draw(st.lists(st.floats(1e4, 1e8), min_size=max(N - 1, 1),
+                        max_size=max(N - 1, 1)))
+    return lt, ds, caps, bws
+
+
+@settings(max_examples=120, deadline=None)
+@given(instances())
+def test_dp_matches_brute_force(inst):
+    lt, ds, caps, bws = inst
+    a = solve_partition(lt, ds, caps, bws)
+    b = brute_force_partition(lt, ds, caps, bws)
+    assert a.bottleneck == pytest.approx(b.bottleneck, rel=1e-9)
+    assert sum(a.counts) == len(lt)
+    assert all(c >= 1 for c in a.counts)
+    assert a.points[-1] == len(lt) - 1
+
+
+@settings(max_examples=60, deadline=None)
+@given(instances())
+def test_dp_bottleneck_is_achieved(inst):
+    """The reported bottleneck equals the max stage/comm time of the chosen
+    split (internal consistency of the reconstruction)."""
+    lt, ds, caps, bws = inst
+    r = solve_partition(lt, ds, caps, bws)
+    t = 0.0
+    for i, (a, b) in enumerate(r.ranges):
+        t = max(t, stage_time(np.asarray(lt), caps[i], a, b))
+        if i < len(caps) - 1:
+            t = max(t, 2.0 * ds[b] / bws[i])
+    assert t == pytest.approx(r.bottleneck, rel=1e-9)
+
+
+def test_heterogeneous_starves_slow_worker():
+    """A 10x slower worker must receive far fewer layers (paper Fig. 5)."""
+    L = 19
+    lt = np.ones(L)
+    ds = np.ones(L) * 1e3
+    caps = [1.0, 1.0, 10.0]
+    bws = [1e9, 1e9]
+    r = solve_partition(lt, ds, caps, bws)
+    assert r.counts[2] <= 2
+    u = uniform_partition(L, 3)
+    slow_uniform = stage_time(lt, 10.0, *u.ranges[2])
+    assert r.bottleneck < slow_uniform / 2
+
+
+def test_uniform_partition():
+    r = uniform_partition(19, 3)
+    assert r.counts == (7, 6, 6)
+    assert r.points == (6, 12, 18)
+
+
+def test_capacity_estimator_recovers_true_capacity():
+    lt = np.array([1.0, 2.0, 3.0, 4.0])
+    est = CapacityEstimator(lt, num_workers=3)
+    # worker 1 is 2.5x slower over layers [1, 2]
+    est.update(1, measured_time=2.5 * (2.0 + 3.0), start=1, end=2)
+    assert est.capacities[1] == pytest.approx(2.5)
+    assert est.capacities[0] == 1.0
+    np.testing.assert_allclose(est.estimated_layer_times(1), lt * 2.5)
+
+
+def test_capacity_estimator_central_is_fixed():
+    est = CapacityEstimator(np.ones(4), num_workers=2)
+    est.update(0, 100.0, 0, 1)
+    assert est.capacities[0] == 1.0
+
+
+def test_capacity_drop_workers():
+    est = CapacityEstimator(np.ones(4), num_workers=4)
+    for w, c in [(1, 2.0), (2, 3.0), (3, 4.0)]:
+        est.update(w, c, 0, 0)
+    e2 = est.drop_workers([2])
+    assert e2.num_workers == 3
+    assert list(e2.capacities) == [1.0, 2.0, 4.0]

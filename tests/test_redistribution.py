@@ -1,0 +1,113 @@
+"""Weight redistribution (paper Algorithm 1) property tests."""
+from hypothesis import given, settings, strategies as st
+
+from repro.core import redistribution as rd
+from repro.core.partition import uniform_partition
+
+
+@st.composite
+def failure_cases(draw):
+    L = draw(st.integers(4, 24))
+    N = draw(st.integers(3, min(L, 6)))
+    f = draw(st.integers(1, N - 1))       # central (0) never fails
+    return L, N, f
+
+
+@settings(max_examples=150, deadline=None)
+@given(failure_cases())
+def test_single_failure_coverage_and_validity(case):
+    """Every surviving worker's plan covers exactly its new range, and every
+    fetch target actually holds the layer (owner, failed-worker's chain
+    replica holder, or the central global replica)."""
+    L, N, f = case
+    p_cur = uniform_partition(L, N).points
+    p_new = uniform_partition(L, N - 1).points
+    alive = [i for i in range(N) if i != f]
+    for i_new, i_cur in enumerate(alive):
+        plan = rd.plan_single_failure(p_new, p_cur, f, i_cur, i_new, N)
+        s, e = rd.stage_range(p_new, i_new)
+        got = sorted(plan.local + [l for ls in plan.need.values() for l in ls])
+        assert got == list(range(s, e + 1))
+        for l in plan.local:
+            cs, ce = rd.stage_range(p_cur, i_cur)
+            assert cs <= l <= ce
+        for t_new, layers in plan.need.items():
+            t_old = alive[t_new]
+            for l in layers:
+                h = rd.holder_of(p_cur, l)
+                owns = h == t_old
+                chain = (h == f and t_old == (f + 1) % N)
+                central = t_new == 0
+                assert owns or chain or central
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(4, 24), st.integers(2, 6))
+def test_repartition_plans_cover(L, N):
+    N = min(L, N)
+    p_cur = uniform_partition(L, N).points
+    # a different contiguous split
+    pts = list(p_cur)
+    if pts[0] + 1 < pts[1]:
+        pts[0] += 1
+    p_new = tuple(pts)
+    for i in range(N):
+        plan = rd.plan_repartition(p_new, p_cur, i)
+        s, e = rd.stage_range(p_new, i)
+        got = sorted(plan.local + [l for ls in plan.need.values() for l in ls])
+        assert got == list(range(s, e + 1))
+        # no-failure: every fetch target is the true current owner
+        for t, layers in plan.need.items():
+            for l in layers:
+                assert rd.holder_of(p_cur, l) == t
+
+
+@settings(max_examples=80, deadline=None)
+@given(st.integers(5, 20), st.integers(4, 6), st.data())
+def test_multi_failure_with_global_fallback(L, N, data):
+    N = min(L - 1, N)
+    n_fail = data.draw(st.integers(2, N - 1))
+    failed = sorted(data.draw(
+        st.lists(st.integers(1, N - 1), min_size=n_fail, max_size=n_fail,
+                 unique=True)))
+    alive = [i for i in range(N) if i not in failed]
+    p_cur = uniform_partition(L, N).points
+    p_new = uniform_partition(L, len(alive)).points
+    old_to_new = {o: n for n, o in enumerate(alive)}
+
+    def holder_has(new_idx, layer):
+        old = alive[new_idx]
+        h = rd.holder_of(p_cur, layer)
+        return h == old or (h + 1) % N == old or new_idx == 0
+
+    for i_new in range(len(alive)):
+        plan = rd.plan_multi_failure(p_new, p_cur, failed, i_new, N,
+                                     holder_has)
+        s, e = rd.stage_range(p_new, i_new)
+        got = sorted(plan.local + [l for ls in plan.need.values() for l in ls])
+        assert got == list(range(s, e + 1))
+        for t, layers in plan.need.items():
+            for l in layers:
+                assert holder_has(t, l)
+
+
+def test_update_worker_list():
+    assert rd.update_worker_list(["a", "b", "c", "d"], [1]) == ["a", "c", "d"]
+    assert rd.update_worker_list(["a", "b", "c", "d"], [1, 3]) == ["a", "c"]
+
+
+def test_paper_special_case_last_worker_fails():
+    """When the LAST stage fails its replica lives on the central node ->
+    target index 0 (Algorithm 1 lines 13-14)."""
+    L, N = 12, 4
+    p_cur = uniform_partition(L, N).points
+    p_new = uniform_partition(L, N - 1).points
+    f = N - 1
+    plan = rd.plan_single_failure(p_new, p_cur, f, i_cur=2, i_new=2,
+                                  num_nodes=N)
+    # worker 2's new range extends into the failed last stage's layers
+    targets = set(plan.need)
+    for t, layers in plan.need.items():
+        for l in layers:
+            if rd.holder_of(p_cur, l) == f:
+                assert t == 0

@@ -1,0 +1,101 @@
+"""Dynamic re-partition re-pack at TPU scale: model function must be
+IDENTICAL before/after re-packing under the new assignment + pad mask."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.pipeline import repack as rp
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _random_assignment(rng, L, S, Lps):
+    """Contiguous split of L layers into S parts each in [0, Lps]."""
+    while True:
+        cuts = sorted(rng.choice(range(L + 1), size=S - 1, replace=True))
+        counts = np.diff([0] + list(cuts) + [L])
+        if counts.max() <= Lps:
+            return [int(c) for c in counts]
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_repack_plan_covers_all_layers(seed):
+    rng = np.random.default_rng(seed)
+    cfg = get_config("qwen2-1.5b").reduced(pipeline_stages=4, num_layers=8,
+                                           layers_per_stage=3)
+    L, S, Lps = 8, 4, 3
+    a_old = _random_assignment(rng, L, S, Lps)
+    a_new = _random_assignment(rng, L, S, Lps)
+    plan = rp.make_repack_plan(cfg, a_old, a_new)
+    seen = set()
+    for s in range(S):
+        for j in range(Lps):
+            if plan.src[s, j, 0] >= 0:
+                seen.add(tuple(plan.src[s, j]))
+    assert len(seen) == L      # every layer sourced exactly once
+
+
+def test_repack_preserves_model_function():
+    cfg = get_config("qwen2-1.5b").reduced(pipeline_stages=4, num_layers=8,
+                                           layers_per_stage=3,
+                                           tensor_parallel=1)
+    params = M.init_params(KEY, cfg)
+    toks = jax.random.randint(KEY, (2, 12), 0, cfg.vocab_size)
+
+    a_old = M.default_assignment(cfg)            # [2,2,2,2]
+    logits_old, _, _ = M.sequential_lm_forward(params, cfg, toks,
+                                               assignment=a_old)
+
+    a_new = [3, 3, 1, 1]
+    plan = rp.make_repack_plan(cfg, a_old, a_new)
+    params2 = dict(params)
+    params2["blocks"] = rp.repack_blocks(params["blocks"], plan, cfg)
+    logits_new, _, _ = M.sequential_lm_forward(params2, cfg, toks,
+                                               assignment=a_new)
+    np.testing.assert_allclose(np.asarray(logits_old),
+                               np.asarray(logits_new), atol=2e-5)
+    assert plan.moved_layers > 0
+
+
+def test_repack_after_stage_loss_preserves_model():
+    """Stage 2 dies: its layers re-pack onto survivors (weights recovered
+    from the replication store in production); outputs identical."""
+    cfg = get_config("llama3-8b").reduced(pipeline_stages=4, num_layers=8,
+                                          layers_per_stage=3,
+                                          tensor_parallel=1)
+    params = M.init_params(KEY, cfg)
+    toks = jax.random.randint(KEY, (2, 10), 0, cfg.vocab_size)
+    a_old = M.default_assignment(cfg)
+    logits_old, _, _ = M.sequential_lm_forward(params, cfg, toks,
+                                               assignment=a_old)
+    a_new = rp.recover_assignment_after_stage_loss(cfg, a_old, lost_stage=2)
+    assert a_new[2] == 0 and sum(a_new) == 8
+    plan = rp.make_repack_plan(cfg, a_old, a_new)
+    params2 = dict(params)
+    params2["blocks"] = rp.repack_blocks(params["blocks"], plan, cfg)
+    logits_new, _, _ = M.sequential_lm_forward(params2, cfg, toks,
+                                               assignment=a_new)
+    np.testing.assert_allclose(np.asarray(logits_old),
+                               np.asarray(logits_new), atol=2e-5)
+
+
+def test_repartition_from_profile_respects_slot_budget():
+    cfg = get_config("qwen2-1.5b").reduced(pipeline_stages=4, num_layers=8,
+                                           layers_per_stage=3)
+    counts = rp.repartition_from_profile(
+        cfg, np.ones(8), np.ones(8) * 1e3,
+        np.array([1.0, 1.0, 1.0, 8.0]),      # one slow stage
+        np.array([1e9] * 3))
+    assert sum(counts) == 8 and max(counts) <= 3
+    assert counts[3] <= min(counts[:3])      # slow stage starved
+
+
+def test_heterogeneous_layout_rejected():
+    cfg = get_config("zamba2-7b").reduced(pipeline_stages=2, num_layers=4)
+    with pytest.raises(AssertionError):
+        rp.make_repack_plan(cfg, [2, 2], [3, 1])

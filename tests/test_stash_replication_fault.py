@@ -1,0 +1,129 @@
+"""VersionedWeights, replication policy/stores, fault state machine."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.replication_store import ReplicatedCheckpointer
+from repro.core import fault
+from repro.core.replication import (ReplicaStore, chain_target, should_chain,
+                                    should_global)
+from repro.core.stash import VersionedWeights, tree_mean
+
+
+def _p(v):
+    return {"w": jnp.full((3,), float(v))}
+
+
+class TestVersionedWeights:
+    def test_put_get_prune(self):
+        vw = VersionedWeights(depth=2)
+        vw.put(0, _p(0)); vw.put(1, _p(1)); vw.put(2, _p(2))
+        assert sorted(vw.versions) == [1, 2]
+        assert float(vw.get(1)["w"][0]) == 1.0
+        assert float(vw.newest()["w"][0]) == 2.0
+
+    def test_get_falls_back_to_older(self):
+        vw = VersionedWeights(depth=3)
+        vw.put(3, _p(3)); vw.put(5, _p(5))
+        assert float(vw.get(4)["w"][0]) == 3.0   # never a NEWER version
+        assert float(vw.get(9)["w"][0]) == 5.0
+        assert float(vw.get(1)["w"][0]) == 3.0   # nothing older: oldest
+
+    def test_aggregate_collapses_and_bumps(self):
+        vw = VersionedWeights(depth=3)
+        for v in range(3):
+            vw.put(v, _p(v))
+        mean = vw.aggregate()
+        assert float(mean["w"][0]) == pytest.approx(1.0)
+        assert vw.live_versions() == [3]          # version jump (Fig. 2)
+
+    def test_tree_mean(self):
+        m = tree_mean([_p(1), _p(2), _p(6)])
+        assert float(m["w"][0]) == pytest.approx(3.0)
+
+
+class TestReplicationPolicy:
+    def test_schedule(self):
+        assert should_chain(50, 50) and not should_chain(49, 50)
+        assert should_global(100, 100) and not should_global(50, 100)
+        assert not should_chain(0, 50)
+
+    def test_chain_target_ring(self):
+        assert chain_target(0, 3) == 1
+        assert chain_target(2, 3) == 0            # last -> central
+
+    def test_recover_prefers_fresh_chain(self):
+        rs = ReplicaStore()
+        rs.do_chain(1, 100, "chain-w1")
+        rs.do_global(1, 50, "global-w1")
+        b, w, src = rs.recover(1, alive_chain_holders={2}, num_workers=3)
+        assert (b, w, src) == (100, "chain-w1", "chain")
+
+    def test_recover_falls_back_to_global(self):
+        rs = ReplicaStore()
+        rs.do_chain(1, 100, "chain-w1")
+        rs.do_global(1, 50, "global-w1")
+        # chain holder (worker 2) is also dead
+        b, w, src = rs.recover(1, alive_chain_holders=set(), num_workers=3)
+        assert (b, w, src) == (50, "global-w1", "global")
+
+    def test_recover_none(self):
+        assert ReplicaStore().recover(1, {2}, 3) is None
+
+
+class TestReplicatedCheckpointer:
+    def test_consistent_batch(self):
+        rc = ReplicatedCheckpointer(num_stages=3, chain_every=2,
+                                    global_every=4)
+        weights = lambda s: {"w": jnp.full((2,), float(s))}
+        for b in range(1, 9):
+            rc.maybe_replicate(b, weights)
+        assert rc.latest_consistent_batch(lost_stages=set()) == 8
+        # stage 1 lost AND its chain holder (2) lost -> global replica (8)
+        assert rc.latest_consistent_batch(lost_stages={1, 2}) == 8
+        r = rc.recover_stage(1, lost_stages={2})
+        assert r[2] == "global"
+
+    def test_chain_preferred_when_holder_alive(self):
+        rc = ReplicatedCheckpointer(num_stages=3, chain_every=2,
+                                    global_every=100)
+        for b in range(1, 7):
+            rc.maybe_replicate(b, lambda s: {"w": jnp.zeros(1)})
+        r = rc.recover_stage(0, lost_stages=set())
+        assert r[0] == 6 and r[2] == "chain"
+
+
+class TestFaultMachine:
+    def test_classify(self):
+        assert fault.classify({1: "ok", 2: "ok"})[0] is fault.Case.ALL_NORMAL
+        c, r = fault.classify({1: "restarted", 2: "ok"})
+        assert c is fault.Case.ONE_RESTARTED and r == [1]
+        c, d = fault.classify({1: None, 2: None})
+        assert c is fault.Case.FAILURES and set(d) == {1, 2}
+
+    def test_state_reset(self):
+        st = fault.TrainingState(committed_forward_id=210,
+                                 committed_backward_id=204)
+        st.enter_recovery()
+        assert st.status == 1
+        st.reset_after_recovery(failed_batch=205)
+        assert st.committed_forward_id == 204
+        assert st.committed_backward_id == 204
+        assert st.status == 0
+
+    def test_recovery_partition_homogeneous_fallback(self):
+        r = fault.recovery_partition(np.ones(8), np.ones(8),
+                                     np.ones(4), np.ones(3),
+                                     have_profiles=False, num_alive=2)
+        assert r.counts == (4, 4)
+
+    def test_recovery_plans_single(self):
+        from repro.core.partition import uniform_partition
+        p_cur = uniform_partition(9, 3).points
+        p_new = uniform_partition(9, 2).points
+        plans = fault.recovery_plans(p_new, p_cur, [1], 3)
+        assert len(plans) == 2
+        covered = sorted(sum((p.local for p in plans), []) +
+                         [l for p in plans for ls in p.need.values()
+                          for l in ls])
+        assert covered == list(range(9))
