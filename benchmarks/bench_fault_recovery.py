@@ -22,8 +22,9 @@ def run(num_batches: int = 300, fail_at: int = 205):
         res[policy] = sim.run(fail=(1, fail_at))
 
     ft, rp = res["ftpipehd"], res["respipe"]
-    pre = slice(150, 200)
-    post = slice(fail_at + 45, num_batches - 10)
+    pre = slice(max(fail_at - 55, 15), fail_at - 5)
+    post = slice(fail_at + min(45, (num_batches - fail_at) // 2),
+                 num_batches - 10)
     ft_post = float(np.median(ft.batch_times[post]))
     rp_post = float(np.median(rp.batch_times[post]))
     epoch_ft = ft_post * num_batches / 60.0
@@ -60,5 +61,13 @@ def time_series(num_batches: int = 300, fail_at: int = 205):
 
 
 if __name__ == "__main__":
-    for n, v, d in run():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: 120 batches, kill at 60 (paper-shaped "
+                         "numbers need the full 300/205 run)")
+    args = ap.parse_args()
+    kw = dict(num_batches=120, fail_at=60) if args.quick else {}
+    for n, v, d in run(**kw):
         print(f"{n},{v},{d}")

@@ -61,3 +61,34 @@ class ReplicatedCheckpointer:
                 return -1
             best = r[0] if best < 0 else min(best, r[0])
         return best
+
+
+class LayerReplicaStore:
+    """LAYER-keyed global replica store for the live runtime's central node
+    (``runtime/live.py``). Stage-keyed stores (above) go stale the moment
+    the partition moves; keying by layer makes global replicas survive
+    dynamic re-partition (§III-D) and worker-list renumbering (§III-F) —
+    the redistribution planner's central-fallback target always resolves.
+    """
+
+    def __init__(self):
+        self._layers: dict[int, tuple[int, Any]] = {}
+
+    def put(self, layer: int, batch: int, params: Any) -> None:
+        """Keep the freshest snapshot per layer."""
+        cur = self._layers.get(layer)
+        if cur is None or batch >= cur[0]:
+            self._layers[layer] = (batch, params)
+
+    def has(self, layer: int) -> bool:
+        return layer in self._layers
+
+    def get(self, layer: int) -> Optional[tuple[int, Any]]:
+        return self._layers.get(layer)
+
+    def batches(self) -> dict[int, int]:
+        """layer -> batch id of its stored snapshot."""
+        return {l: b for l, (b, _) in self._layers.items()}
+
+    def covers(self, num_layers: int) -> bool:
+        return all(l in self._layers for l in range(num_layers))

@@ -1,3 +1,8 @@
 from repro.runtime.devices import DeviceSpec, WorkloadProfile
+from repro.runtime.protocol import ProtocolConfig
 from repro.runtime.simulator import PipelineSimulator, SimConfig, SimResult
 from repro.runtime.semantics import AsyncTrainingExecutor
+from repro.runtime.transport import FaultSpec, Transport
+from repro.runtime.live import (Coordinator, LiveConfig, LiveResult, Worker,
+                                run_live_training)
+from repro.runtime.workload import LayerChain, mlp_chain, mobilenet_chain

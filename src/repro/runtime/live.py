@@ -1,0 +1,869 @@
+"""Live multi-worker FTPipeHD runtime: real JAX training over message
+passing, with the paper's full fault-tolerance protocol in the loop.
+
+A ``Coordinator`` (the paper's central node) drives N ``Worker`` threads
+over a queue-based ``runtime/transport.py`` (injectable drop/delay/kill
+faults). Each worker owns a contiguous slice of a ``runtime/workload.py``
+layer chain and executes REAL per-stage forward/backward (``jax.vjp``)
+under the async 1F1B schedule from ``core/schedule.py``, with vertical-sync
+weight versions retained per the in-flight rule (``VerticalSyncStash``;
+retention bounded by n+1, concurrent training versions by
+``schedule.stash_depth``).
+
+Control flow is shared with the timing simulator through
+``runtime/protocol.py`` — one source of truth for replication cadence
+(into ``checkpoint/replication_store.LayerReplicaStore`` + per-neighbor
+chain replicas, §III-E), dynamic re-partition (§III-D: capacities measured
+via ``core/capacity.py``, DP from ``core/partition.py``, fetches from
+``core/redistribution.py`` plans), and failure handling (§III-F:
+heartbeat timeout -> probe -> classify via ``core/fault.py`` -> renumber ->
+recovery partition -> weight redistribution -> reset ids -> resume). The
+simulator (``runtime/simulator.py``) predicts this runtime's decisions on a
+virtual clock; both drain the pipeline at the same
+``ProtocolConfig.control_points`` (the batch-boundary approximation the
+simulator documents is this runtime's actual execution strategy).
+
+In-process notes: workers are threads sharing one JAX runtime, so
+"devices" here exercise the PROTOCOL (heterogeneity enters via measured or
+spec capacities, optionally emulated with sleeps), not real edge silicon.
+Both endpoints of the data plane read batches from a shared ``data_fn``;
+only activations/gradients/weights travel the transport.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.replication_store import LayerReplicaStore
+from repro.core import fault as fault_sm
+from repro.core import schedule as sched
+from repro.core.capacity import CapacityEstimator
+from repro.core.partition import PartitionResult, uniform_partition
+from repro.core.redistribution import RedistributionPlan
+from repro.core.stash import tree_mean
+from repro.optim.sgd import sgd_init, sgd_update
+from repro.runtime import protocol
+from repro.runtime.devices import DeviceSpec, WorkloadProfile, uniform_bandwidth
+from repro.runtime.transport import FaultSpec, Heartbeat, Transport
+from repro.runtime.workload import LayerChain
+
+COORD = -1          # coordinator control-plane node id on the transport
+
+
+# ========================== vertical-sync stash ==========================
+
+class VerticalSyncStash:
+    """Per-stage weight-version ring honoring vertical sync (§III-C).
+
+    Unlike ``core/stash.VersionedWeights`` (prune-oldest), retention here
+    follows ``core/schedule.py``'s vertical-sync rule: batch b runs on
+    version ``version_for_batch(b, n)`` at EVERY stage, so a version must
+    survive from its creation (this stage's backward of batch v-1) until
+    the forward of batch v+n-1 pins it — the versions still needed are the
+    *oldest* recent ones, not the newest, which is why prune-oldest is
+    wrong here. The retained-version high water is stage+2, bounded by
+    n+1 — the same bound as the depth-(n+1) ring in
+    ``runtime/semantics.AsyncTrainingExecutor``; the paper's n-i figure
+    (``schedule.stash_depth``) counts concurrently TRAINING versions
+    (distinct versions among in-flight batches), which this stash also
+    respects (see tests/test_live_runtime.py).
+    """
+
+    def __init__(self, slice_params: dict, version: int = 0):
+        self.versions: dict[int, dict] = {version: slice_params}
+        self.newest_v = version
+        self.high_water = 1
+
+    def newest(self) -> dict:
+        return self.versions[self.newest_v]
+
+    def get(self, version: int) -> dict:
+        """Exact, else nearest OLDER (PipeDream: never a newer one), else
+        the oldest available (post-drain resume semantics)."""
+        if version in self.versions:
+            return self.versions[version]
+        older = [v for v in self.versions if v <= version]
+        if older:
+            return self.versions[max(older)]
+        return self.versions[min(self.versions)]
+
+    def push(self, version: int, slice_params: dict) -> None:
+        self.versions[version] = slice_params
+        self.newest_v = max(self.newest_v, version)
+        self.high_water = max(self.high_water, len(self.versions))
+
+    def prune(self, min_needed: float) -> None:
+        """Drop versions no future forward can pin (always keep newest)."""
+        for v in [v for v in self.versions
+                  if v < min_needed and v != self.newest_v]:
+            del self.versions[v]
+
+    def reset(self, slice_params: dict, version: int) -> None:
+        self.versions = {version: slice_params}
+        self.newest_v = version
+
+
+# ================================ config =================================
+
+@dataclasses.dataclass
+class LiveConfig:
+    num_workers: int = 3
+    num_batches: int = 30
+    protocol: protocol.ProtocolConfig = dataclasses.field(
+        default_factory=lambda: protocol.ProtocolConfig(detect_timeout=0.5))
+    lr: float = 0.05
+    momentum: float = 0.0
+    weight_decay: float = 0.0
+    aggregate_every: int = 0              # 0 = off (per-stage aggregation)
+    device_specs: Optional[list[DeviceSpec]] = None
+    bandwidth: Optional[np.ndarray] = None   # for the partition DP only
+    profile: Optional[WorkloadProfile] = None  # else measured at startup
+    capacity_source: str = "measured"     # "measured" | "spec"
+    emulate_capacity: bool = False        # sleep-scale slow devices
+    heartbeat_interval: float = 0.05
+    poll: float = 0.01
+    kill: Optional[tuple[int, int]] = None   # (device, batch): crash when
+    #                                          that batch commits at stage 0
+    fault: Optional[FaultSpec] = None
+    segment_timeout: float = 120.0
+    profile_repeats: int = 2
+
+
+@dataclasses.dataclass
+class LiveResult:
+    losses: np.ndarray                     # [B] final loss per batch index
+    loss_log: list                         # chronological (batch, loss)
+    partitions: list                       # [(from_batch, points)]
+    events: list                           # [(t_wall, str)]
+    capacities: np.ndarray                 # final estimator view
+    transport_stats: dict
+    stash_high_water: dict                 # device -> max live versions
+    recoveries: list                       # [{failed, restart, partition}]
+
+    @property
+    def final_partition(self) -> tuple:
+        return self.partitions[-1][1]
+
+
+# ================================ worker =================================
+
+class Worker(threading.Thread):
+    """One pipeline stage executor on one 'device' (thread)."""
+
+    def __init__(self, dev: int, chain: LayerChain, data_fn, transport,
+                 cfg: LiveConfig, abort_event: threading.Event,
+                 spec: DeviceSpec, global_store=None):
+        super().__init__(daemon=True, name=f"worker-{dev}")
+        self.dev = dev
+        self.chain = chain
+        self.data_fn = data_fn
+        self.transport = transport
+        self.cfg = cfg
+        self.abort_event = abort_event
+        self.spec = spec
+        self.global_store = global_store       # central worker only
+        self.stop_event = threading.Event()
+        self.hb = Heartbeat(transport, dev, COORD, cfg.heartbeat_interval)
+        self.stash: Optional[VerticalSyncStash] = None
+        self.opt: dict[int, Any] = {}          # layer -> sgd state
+        self.replicas: dict[int, tuple[int, Any]] = {}   # chain replicas
+        self.backwards_done = 0
+        self._seg_id = -1
+        self._req_seq = 0        # monotonic: stale fetch_res never matches
+        self._acts: dict[int, Any] = {}
+        self._grads: dict[int, Any] = {}
+        self._fetch_res: dict[int, dict] = {}
+        # pre-refit snapshot: peers' redistribution plans reference the OLD
+        # partition, so fetches must be served from it even after this
+        # worker has already committed its own new slice
+        self._pre_refit: dict[int, Any] = {}
+
+    # ----------------------------- lifecycle -----------------------------
+
+    def install(self, layer_range: tuple[int, int], params: dict,
+                version: int = 0) -> None:
+        """Install a layer slice (startup or redistribution commit)."""
+        a, e = layer_range
+        self.layer_range = (a, e)
+        for j in range(a, e + 1):
+            if j not in self.opt:
+                self.opt[j] = sgd_init(params[j])
+        self.opt = {j: s for j, s in self.opt.items() if a <= j <= e}
+        if self.stash is None:
+            self.stash = VerticalSyncStash(dict(params), version)
+        else:
+            self.stash.reset(dict(params), version)
+
+    def crash(self) -> None:
+        """Simulated device death: stops compute AND connectivity."""
+        self.stop_event.set()
+        self.hb.stop()
+        self.transport.kill(self.dev)
+
+    def shutdown(self) -> None:
+        self.stop_event.set()
+        self.hb.stop()
+
+    # ------------------------------- main --------------------------------
+
+    def run(self):
+        self.hb.start()
+        while not self.stop_event.is_set():
+            msg = self.transport.recv(self.dev, timeout=self.cfg.poll)
+            if msg is None:
+                continue
+            k = msg.kind
+            if k == "segment":
+                self._run_segment(msg.payload)
+            elif k == "replicate":
+                self._do_replicate(msg.payload)
+            elif k in ("repart", "recover"):
+                self._do_refit(msg.payload)
+            elif k == "fetch_req":
+                self._serve_fetch(msg)
+            elif k == "chain_put":
+                self._store_chain(msg.payload)
+            elif k == "probe":
+                self.transport.send(self.dev, COORD, "probe_ack",
+                                    {"status": "ok"})
+            elif k == "stop":
+                break
+        self.hb.stop()
+
+    # --------------------------- segment exec ----------------------------
+
+    def _dispatch(self, msg):
+        """Route a message that arrived while waiting on a dependency."""
+        k = msg.kind
+        if k in ("act", "grad"):
+            seg_id, b, x = msg.payload
+            if seg_id == self._seg_id:          # stale segments are dropped
+                (self._acts if k == "act" else self._grads)[b] = x
+        elif k == "probe":
+            self.transport.send(self.dev, COORD, "probe_ack",
+                                {"status": "ok"})
+        elif k == "chain_put":
+            self._store_chain(msg.payload)
+        elif k == "fetch_req":
+            self._serve_fetch(msg)
+        elif k == "fetch_res":
+            self._fetch_res[msg.payload["req_id"]] = msg.payload["layers"]
+        elif k == "stop":
+            self.stop_event.set()
+
+    def _await(self, store: dict, key: int):
+        while key not in store:
+            if self.stop_event.is_set() or self.abort_event.is_set():
+                return None
+            msg = self.transport.recv(self.dev, timeout=self.cfg.poll)
+            if msg is not None:
+                self._dispatch(msg)
+        return store.pop(key)
+
+    def _run_segment(self, spec: dict):
+        stage, n = spec["stage"], spec["n"]
+        b0, nb = spec["b0"], spec["nb"]
+        devs = spec["stage_devs"]
+        self._seg_id = spec["seg_id"]
+        self._acts.clear()
+        self._grads.clear()
+        self._pre_refit = {}          # redistribution is over once we train
+        a, e = self.layer_range
+        layer_ids = list(range(a, e + 1))
+        last = stage == n - 1
+        cap = self.spec.capacity if self.cfg.emulate_capacity else 1.0
+
+        def stage_forward(plist, x):
+            for j, p in zip(layer_ids, plist):
+                x = self.chain.apply_layer(j, p, x)
+            return x
+
+        ops = list(sched.stage_schedule(stage, n, nb))
+        # for retention pruning: next fwd batch at-or-after each op index
+        next_fwd = [None] * (len(ops) + 1)
+        for idx in range(len(ops) - 1, -1, -1):
+            next_fwd[idx] = (b0 + ops[idx].batch if ops[idx].kind == "fwd"
+                             else next_fwd[idx + 1])
+
+        residuals: dict[int, Any] = {}
+        batch_times: dict[int, float] = {}     # fwd+bwd wall time per batch
+        busy, done_ops = 0.0, 0
+        for idx, op in enumerate(ops):
+            if self.stop_event.is_set() or self.abort_event.is_set():
+                break
+            gb = b0 + op.batch
+            if op.kind == "fwd":
+                if stage == 0:
+                    x = self.chain.input_of(self.data_fn(gb))
+                else:
+                    x = self._await(self._acts, op.batch)
+                    if x is None:
+                        break
+                ver = sched.version_for_batch(gb, n)
+                plist = [self.stash.get(ver)[j] for j in layer_ids]
+                t0 = time.perf_counter()
+                if last:
+                    batch = self.data_fn(gb)
+                    loss, vjp = jax.vjp(
+                        lambda ps, xx: self.chain.loss(stage_forward(ps, xx),
+                                                       batch), plist, x)
+                    jax.block_until_ready(loss)
+                    residuals[op.batch] = vjp
+                    self.transport.send(self.dev, COORD, "loss",
+                                        (gb, float(loss)))
+                else:
+                    y, vjp = jax.vjp(stage_forward, plist, x)
+                    jax.block_until_ready(y)
+                    residuals[op.batch] = vjp
+                dt = time.perf_counter() - t0
+                if cap > 1.0:
+                    time.sleep(dt * (cap - 1.0))
+                    dt *= cap
+                busy += dt
+                batch_times[op.batch] = batch_times.get(op.batch, 0.0) + dt
+                if not last:
+                    self.transport.send(self.dev, devs[stage + 1], "act",
+                                        (self._seg_id, op.batch, y))
+            else:
+                if last:
+                    ct = jnp.float32(1.0)
+                else:
+                    ct = self._await(self._grads, op.batch)
+                    if ct is None:
+                        break
+                t0 = time.perf_counter()
+                g_params, g_x = residuals.pop(op.batch)(ct)
+                newest = self.stash.newest()
+                new_slice = dict(newest)
+                for j, gp in zip(layer_ids, g_params):
+                    p_new, self.opt[j] = sgd_update(
+                        newest[j], gp, self.opt[j], lr=self.cfg.lr,
+                        momentum=self.cfg.momentum,
+                        weight_decay=self.cfg.weight_decay)
+                    new_slice[j] = p_new
+                jax.block_until_ready(new_slice)
+                self.stash.push(max(gb + 1, self.stash.newest_v + 1),
+                                new_slice)
+                self.backwards_done += 1
+                dt = time.perf_counter() - t0
+                if cap > 1.0:
+                    time.sleep(dt * (cap - 1.0))
+                    dt *= cap
+                busy += dt
+                batch_times[op.batch] = batch_times.get(op.batch, 0.0) + dt
+                if (self.cfg.aggregate_every
+                        and self.backwards_done % sched.aggregation_interval(
+                            stage, n, self.cfg.aggregate_every) == 0):
+                    # paper §III-C: average the live concurrent versions and
+                    # bump the counter (the Fig. 2 ver-3 -> ver-4 jump)
+                    mean = tree_mean([self.stash.versions[v]
+                                      for v in sorted(self.stash.versions)])
+                    self.stash.push(self.stash.newest_v + 1, mean)
+                if stage > 0:
+                    self.transport.send(self.dev, devs[stage - 1], "grad",
+                                        (self._seg_id, op.batch, g_x))
+                else:
+                    self.transport.send(self.dev, COORD, "commit", gb)
+                # retention target: the next forward here, or — once this
+                # segment has none left — the NEXT segment's first batch,
+                # so vertical sync survives the control-point drain
+                nf = next_fwd[idx + 1]
+                self.stash.prune(sched.version_for_batch(
+                    b0 + nb if nf is None else nf, n))
+            done_ops += 1
+        self.stash.prune(sched.version_for_batch(b0 + nb, n))
+        self.transport.send(self.dev, COORD, "seg_done",
+                            {"stage": stage, "busy": busy, "nb": nb,
+                             "batch_times": sorted(batch_times.values()),
+                             "seg_id": self._seg_id,
+                             "ops_done": done_ops, "aborted":
+                             done_ops < len(ops),
+                             "stash_high_water": self.stash.high_water})
+
+    # --------------------------- control plane ---------------------------
+
+    def _snapshot(self) -> dict:
+        newest = self.stash.newest()
+        return {j: jax.tree.map(lambda x: x, p) for j, p in newest.items()}
+
+    def _do_replicate(self, spec: dict):
+        snap = self._snapshot()
+        if spec["chain"]:
+            self.transport.send(self.dev, spec["chain_to"], "chain_put",
+                                {"batch": spec["batch"], "layers": snap})
+        if spec["global"]:
+            self.transport.send(self.dev, COORD, "global_put",
+                                {"batch": spec["batch"], "layers": snap})
+        self.transport.send(self.dev, COORD, "replicated",
+                            {"stage": spec["stage"]})
+
+    def _store_chain(self, payload: dict):
+        for j, p in payload["layers"].items():
+            self.replicas[j] = (payload["batch"], p)
+
+    def _serve_fetch(self, msg):
+        layers_out = {}
+        newest = self.stash.newest() if self.stash else {}
+        for j in msg.payload["layers"]:
+            if j in self._pre_refit:
+                layers_out[j] = self._pre_refit[j]
+            elif j in newest:
+                layers_out[j] = newest[j]
+            elif j in self.replicas:
+                layers_out[j] = self.replicas[j][1]
+            elif self.global_store is not None and self.global_store.has(j):
+                layers_out[j] = self.global_store.get(j)[1]
+        self.transport.send(self.dev, msg.src, "fetch_res",
+                            {"req_id": msg.payload["req_id"],
+                             "layers": layers_out})
+
+    def _await_fetches(self, pending: dict, new_params: dict) -> None:
+        """Wait for fetch_res replies (serving peers' requests meanwhile)."""
+        deadline = time.monotonic() + self.cfg.segment_timeout
+        while pending and time.monotonic() < deadline:
+            for rid in [r for r in pending if r in self._fetch_res]:
+                got = self._fetch_res.pop(rid)
+                for j in pending.pop(rid):
+                    if j in got:
+                        new_params[j] = got[j]
+            if not pending:
+                break
+            msg = self.transport.recv(self.dev, timeout=self.cfg.poll)
+            if msg is not None:
+                self._dispatch(msg)
+
+    def _do_refit(self, spec: dict):
+        """Re-partition / recovery commit: assemble the new slice from local
+        weights + fetches per the redistribution plan, then ACK ready."""
+        a, e = spec["range"]
+        devs = spec["stage_devs"]
+        newest = self.stash.newest()
+        self._pre_refit = dict(newest)
+        self._fetch_res.clear()     # drop any stale replies from a past refit
+        new_params: dict[int, Any] = {}
+        for j in spec["local"]:
+            new_params[j] = newest[j]
+        pending: dict[int, list[int]] = {}
+        for target, layers in spec["need"].items():
+            dev_t = devs[target]
+            if dev_t == self.dev:               # I hold the replica myself
+                for j in layers:
+                    if j in self.replicas:
+                        new_params[j] = self.replicas[j][1]
+                    elif (self.global_store is not None
+                          and self.global_store.has(j)):
+                        new_params[j] = self.global_store.get(j)[1]
+                continue
+            self._req_seq += 1
+            pending[self._req_seq] = list(layers)
+            self.transport.send(self.dev, dev_t, "fetch_req",
+                                {"req_id": self._req_seq,
+                                 "layers": list(layers),
+                                 "reply_to": self.dev})
+        self._await_fetches(pending, new_params)
+        missing = [j for j in range(a, e + 1) if j not in new_params]
+        if missing:
+            # §III-F backstop: a planned holder may be unable to serve —
+            # e.g. a failure lands after a re-partition but before the next
+            # chain cadence, so its replica still covers the OLD slice.
+            # The central node's layer-keyed global store (full coverage
+            # since the batch-0 snapshot) is the fallback of last resort.
+            if self.global_store is not None:
+                for j in list(missing):
+                    if self.global_store.has(j):
+                        new_params[j] = self.global_store.get(j)[1]
+            elif devs[0] != self.dev:
+                self._req_seq += 1
+                self.transport.send(self.dev, devs[0], "fetch_req",
+                                    {"req_id": self._req_seq,
+                                     "layers": missing,
+                                     "reply_to": self.dev})
+                self._await_fetches({self._req_seq: missing}, new_params)
+            missing = [j for j in range(a, e + 1) if j not in new_params]
+        if not missing:
+            self.install((a, e), new_params, version=spec["version"])
+        self.transport.send(self.dev, COORD, "ready",
+                            {"stage": spec["stage"], "missing": missing})
+
+
+# ============================== coordinator ==============================
+
+class Coordinator:
+    """The central node (§III-A): owns the worker list, the fault timer,
+    the capacity estimator, the partition DP, and the global replica store.
+    The coordinator device (0) also runs stage 0 — it never fails."""
+
+    def __init__(self, chain: LayerChain, data_fn: Callable[[int], dict],
+                 cfg: LiveConfig, transport: Optional[Transport] = None):
+        self.chain = chain
+        self.data_fn = data_fn
+        self.cfg = cfg
+        self.proto = cfg.protocol
+        N = cfg.num_workers
+        self.specs = (cfg.device_specs
+                      or [DeviceSpec(f"dev-{i}") for i in range(N)])
+        assert len(self.specs) == N
+        self.bandwidth = (cfg.bandwidth if cfg.bandwidth is not None
+                          else uniform_bandwidth(N))
+        self.transport = transport or Transport(cfg.fault)
+        self.transport.register(COORD)
+        for dev in range(N):
+            self.transport.register(dev)
+        self.global_store = LayerReplicaStore()
+        self.abort_event = threading.Event()
+        self.workers = [
+            Worker(dev, chain, data_fn, self.transport, cfg,
+                   self.abort_event, self.specs[dev],
+                   global_store=self.global_store if dev == 0 else None)
+            for dev in range(N)]
+        self.events: list = []
+        self.loss_log: list = []
+        self.losses = np.full(cfg.num_batches, np.nan)
+        self.recoveries: list = []
+        self.stash_high_water: dict[int, int] = {}
+        self._seg_counter = 0
+        self._cur_seg = -1
+        self._done: dict[int, dict] = {}
+        self._committed = -1
+        self._last_hb: dict[int, float] = {}
+        self._t0 = time.monotonic()
+        if cfg.kill is not None:
+            assert cfg.kill[0] != 0, "the central node (device 0) never fails"
+        self._kill = dict([cfg.kill]) if cfg.kill else {}
+
+    # ------------------------------ helpers ------------------------------
+
+    def _log(self, text: str):
+        self.events.append((time.monotonic() - self._t0, text))
+
+    def _send_all(self, worker_ids, kind, payload_fn):
+        for i, dev in enumerate(worker_ids):
+            self.transport.send(COORD, dev, kind, payload_fn(i, dev))
+
+    def _collect(self, kinds: set, expect: int, timeout: float,
+                 on_msg=None) -> int:
+        """Drain COORD inbox until `expect` messages of `kinds` arrived."""
+        got = 0
+        deadline = time.monotonic() + timeout
+        while got < expect and time.monotonic() < deadline:
+            msg = self.transport.recv(COORD, timeout=self.cfg.poll)
+            if msg is None:
+                continue
+            self._absorb(msg)
+            if msg.kind in kinds:
+                got += 1
+            if on_msg is not None:
+                on_msg(msg)
+        return got
+
+    def _absorb(self, msg):
+        """Bookkeeping common to ALL receive loops. Centralized so that a
+        seg_done / commit / hb drained during _probe or a _collect phase is
+        never lost (losing a seg_done would wedge _abort_segment; losing a
+        commit would regress the restart point)."""
+        if msg.kind == "loss":
+            gb, v = msg.payload
+            if 0 <= gb < len(self.losses):
+                self.losses[gb] = v
+            self.loss_log.append((gb, v))
+        elif msg.kind == "global_put":
+            for j, p in msg.payload["layers"].items():
+                self.global_store.put(j, msg.payload["batch"], p)
+        elif msg.kind == "hb":
+            self._last_hb[msg.src] = time.monotonic()
+        elif msg.kind == "seg_done":
+            if msg.payload.get("seg_id") == self._cur_seg:
+                self._done[msg.src] = msg.payload
+                self.stash_high_water[msg.src] = max(
+                    self.stash_high_water.get(msg.src, 0),
+                    msg.payload["stash_high_water"])
+        elif msg.kind == "commit":
+            self._committed = max(self._committed, msg.payload)
+            for dev, kb in list(self._kill.items()):
+                if msg.payload >= kb:
+                    self._log(f"KILL worker dev{dev} @batch {msg.payload}")
+                    self.workers[dev].crash()
+                    del self._kill[dev]
+
+    # ----------------------------- phases --------------------------------
+
+    def _replicate(self, batch: int, do_chain: bool, do_global: bool,
+                   part: PartitionResult, worker_ids: list):
+        n = len(worker_ids)
+        self._send_all(worker_ids, "replicate",
+                       lambda i, dev: {"batch": batch, "chain": do_chain,
+                                       "global": do_global, "stage": i,
+                                       "chain_to": worker_ids[(i + 1) % n]})
+        # short ack window: a worker that died right at the segment boundary
+        # (its seg_done already sent) must not stall the control plane for
+        # segment_timeout — the NEXT segment's heartbeat monitor will catch
+        # it and run the §III-F path
+        got = self._collect({"replicated"}, n,
+                            timeout=max(1.0, 2 * self.proto.detect_timeout))
+        kind = ("chain+global" if do_chain and do_global
+                else "chain" if do_chain else "global")
+        if got < n:
+            self._log(f"{kind} replication @batch {batch}: only {got}/{n} "
+                      f"acks — continuing, failure detection will follow")
+        else:
+            self._log(f"{kind} replication @batch {batch}")
+
+    def _redistribute(self, part_new: PartitionResult, plans, worker_ids,
+                      version: int, kind: str):
+        self._send_all(
+            worker_ids, kind,
+            lambda i, dev: {"stage": i, "n": len(worker_ids),
+                            "range": part_new.ranges[i],
+                            "stage_devs": list(worker_ids),
+                            "need": plans[i].need, "local": plans[i].local,
+                            "version": version})
+        missing: list = []
+        got = self._collect({"ready"}, len(worker_ids),
+                            timeout=self.cfg.segment_timeout,
+                            on_msg=lambda m: missing.extend(
+                                m.payload.get("missing", []))
+                            if m.kind == "ready" else None)
+        if missing:
+            raise RuntimeError(f"redistribution left layers unserved: "
+                               f"{sorted(set(missing))}")
+        if got < len(worker_ids):
+            # proceeding would run the next segment against workers in an
+            # unknown partition state — fail loudly instead
+            raise RuntimeError(f"redistribution incomplete: {got}/"
+                               f"{len(worker_ids)} workers ready")
+
+    def _run_segment(self, b0: int, nb: int, part: PartitionResult,
+                     worker_ids: list):
+        """Returns (ok, stats | suspects, committed)."""
+        n = len(worker_ids)
+        self._seg_counter += 1
+        self._cur_seg = self._seg_counter
+        self._done = {}
+        self._committed = b0 - 1
+        self._last_hb = {dev: time.monotonic() for dev in worker_ids}
+        self._send_all(
+            worker_ids, "segment",
+            lambda i, dev: {"stage": i, "n": n, "b0": b0, "nb": nb,
+                            "stage_devs": list(worker_ids),
+                            "seg_id": self._cur_seg})
+        deadline = time.monotonic() + self.cfg.segment_timeout
+        while len(self._done) < n:
+            now = time.monotonic()
+            if now > deadline:
+                # a wedge without heartbeat loss (e.g. a dropped act/grad —
+                # there is no data-plane retransmission): hand it to the
+                # stall/restart path rather than crashing the run
+                return False, {"suspects": []}, self._committed
+            msg = self.transport.recv(COORD, timeout=self.cfg.poll)
+            if msg is not None:
+                self._absorb(msg)
+            suspects = [dev for dev in worker_ids
+                        if dev not in self._done
+                        and now - self._last_hb[dev]
+                        > self.proto.detect_timeout]
+            if suspects:
+                return False, {"suspects": suspects}, self._committed
+        return True, dict(self._done), self._committed
+
+    def _probe(self, worker_ids: list) -> dict:
+        """§III-F: on timer expiry the central node probes every worker."""
+        for dev in worker_ids:
+            if dev != 0:
+                self.transport.send(COORD, dev, "probe", {})
+        responses: dict[int, Optional[str]] = {dev: None for dev in worker_ids
+                                               if dev != 0}
+        deadline = time.monotonic() + max(10 * self.proto.probe_rtt, 0.3)
+        while time.monotonic() < deadline:
+            msg = self.transport.recv(COORD, timeout=self.cfg.poll)
+            if msg is None:
+                continue
+            self._absorb(msg)
+            if msg.kind in ("probe_ack", "hb") and msg.src in responses:
+                responses[msg.src] = "ok"
+            if all(r is not None for r in responses.values()):
+                break
+        return responses
+
+    def _abort_segment(self, worker_ids: list, dead: set):
+        """Drain the wedged pipeline: wait until every survivor has posted
+        seg_done for the CURRENT segment (self._done, fed by _absorb from
+        any receive loop — including the probe that preceded this call)."""
+        self.abort_event.set()
+        deadline = time.monotonic() + self.cfg.segment_timeout
+        while time.monotonic() < deadline:
+            if all(d in self._done for d in worker_ids if d not in dead):
+                break
+            msg = self.transport.recv(COORD, timeout=self.cfg.poll)
+            if msg is not None:
+                self._absorb(msg)
+        self.abort_event.clear()
+
+    # ------------------------------- run ---------------------------------
+
+    def run(self) -> LiveResult:
+        cfg, proto = self.cfg, self.proto
+        N = cfg.num_workers
+        L = self.chain.num_layers
+        profile = cfg.profile or self.chain.measure_profile(
+            self.data_fn(0), repeats=cfg.profile_repeats)
+        est = CapacityEstimator(profile.exec_times, N)
+        worker_ids = list(range(N))
+        part = uniform_partition(L, N)
+        partitions = [(0, part.points)]
+        state = fault_sm.TrainingState(learning_rate=cfg.lr)
+
+        # startup: install uniform slices everywhere, then replicate the
+        # init weights so replicas exist even for a failure before the
+        # first cadence point
+        for i, dev in enumerate(worker_ids):
+            a, e = part.ranges[i]
+            self.workers[dev].install(
+                (a, e), {j: self.chain.params[j] for j in range(a, e + 1)})
+        for w in self.workers:
+            w.start()
+        try:
+            est, partitions = self._run_protocol(est, part, partitions,
+                                                 worker_ids, profile, state)
+        finally:
+            # error paths (wedged restarts, incomplete redistribution) must
+            # not leak N worker + heartbeat threads
+            for w in self.workers:
+                if self.transport.is_alive(w.dev):
+                    self.transport.send(COORD, w.dev, "stop", {})
+                w.shutdown()
+            for w in self.workers:
+                w.join(timeout=5.0)
+        return LiveResult(
+            losses=self.losses, loss_log=self.loss_log,
+            partitions=partitions, events=self.events,
+            capacities=np.array(est.capacities),
+            transport_stats=dict(self.transport.stats),
+            stash_high_water=dict(self.stash_high_water),
+            recoveries=self.recoveries)
+
+    def _run_protocol(self, est, part, partitions, worker_ids, profile,
+                      state):
+        """The coordinator's batch loop (factored out of run() so thread
+        teardown can wrap it)."""
+        cfg, proto = self.cfg, self.proto
+        self._replicate(0, True, True, part, worker_ids)
+
+        b0 = 0
+        B = cfg.num_batches
+        stall_at, stalls = -1, 0          # no-progress guard for restarts
+        while b0 < B:
+            pts = [p for p in proto.control_points(B) if p > b0]
+            nxt = pts[0] if pts else B
+            ok, info, committed = self._run_segment(b0, nxt - b0, part,
+                                                    worker_ids)
+            if not ok:
+                # ---- §III-F failure path --------------------------------
+                state.enter_recovery()
+                responses = self._probe(worker_ids)
+                case, dead = fault_sm.classify(responses)
+                if case is not fault_sm.Case.FAILURES:
+                    # transient: all responded — restart the segment.
+                    # (self._committed includes commits drained during probe)
+                    restart = self._committed + 1
+                    if restart == stall_at:
+                        stalls += 1
+                        if stalls >= 3:
+                            raise RuntimeError(
+                                f"segment restarting @batch {restart} made "
+                                f"no progress {stalls} times — wedged")
+                    else:
+                        stall_at, stalls = restart, 1
+                    self._abort_segment(worker_ids, set())
+                    state.reset_after_recovery(restart)
+                    # identity refit: collapse every stash onto its newest
+                    # version so re-run batches have well-defined (drain)
+                    # semantics instead of stale vertical-sync fallbacks
+                    plans = [RedistributionPlan(
+                        need={}, local=list(range(a, e + 1)))
+                        for a, e in part.ranges]
+                    self._redistribute(part, plans, worker_ids,
+                                       version=restart, kind="recover")
+                    b0 = restart
+                    self._log(f"transient stall; restart @batch {b0}")
+                    continue
+                self._log(f"failure detected: devs {dead}; probing done")
+                for dev in dead:      # ensure a non-responder is truly gone
+                    self.workers[dev].crash()
+                self._abort_segment(worker_ids, set(dead))
+                failed_pos = [worker_ids.index(d) for d in dead]
+                dec = protocol.plan_failure_recovery(
+                    part, worker_ids, failed_pos, est, profile,
+                    self.bandwidth, proto.comm_factor)
+                restart = self._committed + 1
+                state.reset_after_recovery(restart)
+                self._redistribute(dec.partition, dec.plans, dec.worker_ids,
+                                   version=restart, kind="recover")
+                worker_ids, part, est = (dec.worker_ids, dec.partition,
+                                         dec.est)
+                partitions.append((restart, part.points))
+                self.recoveries.append({"failed": list(dead),
+                                        "restart": restart,
+                                        "partition": part.points})
+                self._log(f"recovered: {len(worker_ids)} workers, "
+                          f"partition {part.counts}, resume @batch {restart}")
+                b0 = restart
+                continue
+
+            # ---- capacity samples (Eqs. 1-3) ----------------------------
+            for i, dev in enumerate(worker_ids):
+                a, e = part.ranges[i]
+                if cfg.capacity_source == "spec":
+                    # Eq. 1 is a ratio against the central node's current
+                    # speed, so normalize by the central device's capacity
+                    c0 = self.specs[worker_ids[0]].capacity_at(b0)
+                    meas = float(np.sum(profile.exec_times[a:e + 1])
+                                 * self.specs[dev].capacity_at(b0)
+                                 / max(c0, 1e-12))
+                else:
+                    stats = info[dev]
+                    # median per-batch time: robust to first-call tracing
+                    # and thread-scheduling spikes
+                    bt = stats.get("batch_times") or [
+                        stats["busy"] / max(stats["nb"], 1)]
+                    meas = float(np.median(bt))
+                est.update(i, meas, a, e)
+            state.committed_forward_id = nxt - 1
+            state.committed_backward_id = nxt - 1
+            b0 = nxt
+            if b0 >= B:
+                break
+
+            # ---- replication cadence (§III-E) ---------------------------
+            do_chain, do_global = proto.replication_due(b0)
+            if do_chain or do_global:
+                self._replicate(b0, do_chain, do_global, part, worker_ids)
+
+            # ---- dynamic re-partition (§III-D) --------------------------
+            if proto.repartition_due(b0):
+                new_part = protocol.solve_from_estimates(
+                    profile, self.bandwidth, worker_ids, est,
+                    proto.comm_factor)
+                if new_part.points != part.points:
+                    plans = protocol.plan_repartition_all(
+                        new_part, part, len(worker_ids))
+                    self._log(f"re-partition {part.counts} -> "
+                              f"{new_part.counts} @batch {b0}")
+                    self._redistribute(new_part, plans, worker_ids,
+                                       version=b0, kind="repart")
+                    part = new_part
+                    partitions.append((b0, part.points))
+        return est, partitions
+
+
+def run_live_training(chain: LayerChain, batches: list,
+                      cfg: LiveConfig) -> LiveResult:
+    """Convenience entry point: train `chain` on a cycling batch list under
+    the full live FTPipeHD protocol. See examples/live_fault_tolerance.py."""
+    data_fn = lambda gb: batches[gb % len(batches)]
+    return Coordinator(chain, data_fn, cfg).run()

@@ -1,0 +1,186 @@
+"""Shared FTPipeHD protocol-event layer: ONE source of truth for WHEN control
+events happen and WHAT they decide, used by both runtimes:
+
+  * ``runtime/simulator.py`` — predicts timing on a virtual clock,
+  * ``runtime/live.py``      — executes the same decisions on real JAX
+                               computations over ``runtime/transport.py``.
+
+Both runtimes iterate the batch axis in control-free segments delimited by
+``control_points`` and apply control events (replication cadence from
+``core/replication.py``, dynamic re-partition §III-D, failure recovery
+§III-F) at batch boundaries with a pipeline drain.  For the simulator this
+is a documented approximation; for the live runtime it is the actual
+execution strategy, which is what keeps the two in lock-step: same inputs
+-> same partitions, same replication schedule, same recovery plan.
+
+Decision helpers delegate to the unit-tested core modules
+(``core/partition.py``, ``core/capacity.py``, ``core/redistribution.py``,
+``core/fault.py``); cost helpers price those decisions for the simulator.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core import redistribution as rd
+from repro.core.capacity import CapacityEstimator
+from repro.core.partition import (PartitionResult, solve_partition,
+                                  uniform_partition)
+from repro.core.replication import should_chain, should_global
+
+
+@dataclasses.dataclass(frozen=True)
+class ProtocolConfig:
+    """Control-event cadence + fault-detection knobs (paper §III-D/E/F)."""
+    chain_every: int = 50                 # §IV-B replication cadence
+    global_every: int = 100
+    repartition_first_at: int = 10        # §III-D: first re-partition
+    repartition_every: int = 100
+    detect_timeout: float = 1.0           # §III-F fault timer
+    probe_rtt: float = 0.05
+    commit_rtt: float = 0.05
+    comm_factor: float = 2.0              # fwd activation + bwd gradient
+
+    def replication_due(self, batch: int) -> tuple[bool, bool]:
+        """(chain, global) replication due at this batch boundary."""
+        return (should_chain(batch, self.chain_every),
+                should_global(batch, self.global_every))
+
+    def repartition_due(self, batch: int) -> bool:
+        return (batch == self.repartition_first_at
+                or (batch > 0 and batch % self.repartition_every == 0))
+
+    def control_points(self, num_batches: int, *, dynamic: bool = True,
+                       extra: Sequence[int] = ()) -> list[int]:
+        """Sorted batch indices (< num_batches) where the pipeline drains for
+        a control event. ``dynamic=False`` drops the re-partition points
+        (static baselines: PipeDream / ResPipe)."""
+        pts = set(extra)
+        for k in range(1, num_batches // self.chain_every + 1):
+            pts.add(k * self.chain_every)
+        for k in range(1, num_batches // self.global_every + 1):
+            pts.add(k * self.global_every)      # global need not align w/ chain
+        if dynamic:
+            pts.add(self.repartition_first_at)
+            for k in range(1, num_batches // self.repartition_every + 1):
+                pts.add(k * self.repartition_every)
+        return sorted(p for p in pts if 0 < p < num_batches)
+
+
+# --------------------------- decision helpers ----------------------------
+
+def solve_from_estimates(profile, bandwidth: np.ndarray,
+                         worker_ids: Sequence[int], est: CapacityEstimator,
+                         comm_factor: float = 2.0) -> PartitionResult:
+    """Dynamic partition (Eqs. 4-7) from the capacity estimator's current
+    view. Before every worker has reported a measurement the central node
+    assumes homogeneity (paper §III-B / §III-F); C_0 = 1 by Eq. 1."""
+    n = len(worker_ids)
+    if est.all_reported():
+        caps = np.asarray(est.capacities[:n], float)
+        caps = caps / caps[0] if caps[0] > 0 else caps
+    else:
+        caps = np.ones(n)
+    bws = np.array([bandwidth[worker_ids[i], worker_ids[i + 1]]
+                    for i in range(n - 1)])
+    return solve_partition(profile.exec_times, profile.out_bytes, caps, bws,
+                           comm_factor)
+
+
+@dataclasses.dataclass
+class RecoveryDecision:
+    """Everything both runtimes need to act on a failure (§III-F)."""
+    worker_ids: list                     # renumbered (survivors, in order)
+    partition: PartitionResult           # recovery partition
+    plans: list[rd.RedistributionPlan]   # per NEW worker index
+    est: CapacityEstimator               # estimator over the survivor list
+
+
+def plan_failure_recovery(part_cur: PartitionResult, worker_ids: Sequence,
+                          failed_positions: Sequence[int],
+                          est: CapacityEstimator, profile,
+                          bandwidth: np.ndarray, comm_factor: float = 2.0,
+                          holder_has=None) -> RecoveryDecision:
+    """§III-F single/multi failure: renumber the worker list, re-solve the
+    partition over the survivors, and emit per-survivor redistribution plans
+    (Algorithm 1 via ``core/fault.py``). ``failed_positions`` are indices
+    into the CURRENT list; ``holder_has(new_idx, layer)`` (multi-failure
+    only) says whether a survivor can serve a layer — the central global
+    replica (index 0) is the backstop."""
+    from repro.core.fault import recovery_plans
+    new_ids = rd.update_worker_list(list(worker_ids), list(failed_positions))
+    new_est = est.drop_workers(list(failed_positions))
+    new_part = solve_from_estimates(profile, bandwidth, new_ids, new_est,
+                                    comm_factor)
+    if holder_has is None:
+        holder_has = lambda idx, l: idx == 0   # central-only fallback
+    plans = recovery_plans(new_part.points, part_cur.points,
+                           list(failed_positions), len(worker_ids),
+                           holder_has=holder_has)
+    return RecoveryDecision(worker_ids=new_ids, partition=new_part,
+                            plans=plans, est=new_est)
+
+
+def plan_repartition_all(p_new: PartitionResult, p_cur: PartitionResult,
+                         num_workers: int) -> list[rd.RedistributionPlan]:
+    """Dynamic re-partition (§III-D): per-worker fetch plans, no failure."""
+    return [rd.plan_repartition(p_new.points, p_cur.points, i)
+            for i in range(num_workers)]
+
+
+def respipe_takeover(part: PartitionResult, failed: int) -> PartitionResult:
+    """ResPipe baseline: the failed stage's layers are absorbed by its
+    successor (or predecessor for the last stage) — no re-split."""
+    counts = list(part.counts)
+    if failed + 1 < len(counts):
+        counts = (counts[:failed] + [counts[failed] + counts[failed + 1]]
+                  + counts[failed + 2:])
+    else:
+        counts = counts[:failed - 1] + [counts[failed - 1] + counts[failed]]
+    pts, acc = [], -1
+    for c in counts:
+        acc += c
+        pts.append(acc)
+    return PartitionResult(tuple(pts), tuple(counts), float("nan"))
+
+
+# ----------------------------- cost helpers ------------------------------
+# Used by the simulator to price the decisions above; the live runtime pays
+# these costs in wall-clock instead.
+
+def stage_weight_bytes(profile, part: PartitionResult, stage: int) -> float:
+    a, b = part.ranges[stage]
+    return float(np.sum(profile.weight_bytes[a:b + 1]))
+
+
+def chain_cost(profile, bandwidth, part: PartitionResult,
+               worker_ids: Sequence[int]) -> float:
+    """All workers replicate to their neighbor in parallel -> max."""
+    n = len(worker_ids)
+    return max(stage_weight_bytes(profile, part, s)
+               / bandwidth[worker_ids[s], worker_ids[(s + 1) % n]]
+               for s in range(n))
+
+def global_cost(profile, bandwidth, part: PartitionResult,
+                worker_ids: Sequence[int]) -> float:
+    """Workers 1..N-1 send to central — serialized on central's link."""
+    return sum(stage_weight_bytes(profile, part, s)
+               / bandwidth[worker_ids[s], worker_ids[0]]
+               for s in range(1, len(worker_ids)))
+
+
+def redistribution_cost(profile, bandwidth, worker_ids_new: Sequence[int],
+                        plans: Sequence[rd.RedistributionPlan],
+                        commit_rtt: float) -> float:
+    """Parallel fetches -> max per-worker transfer + commit round."""
+    wb = profile.weight_bytes
+    per_worker = []
+    for i_new, plan in enumerate(plans):
+        t = 0.0
+        for target, layers in plan.need.items():
+            bw = bandwidth[worker_ids_new[target], worker_ids_new[i_new]]
+            t += sum(wb[l] for l in layers) / bw
+        per_worker.append(t)
+    return (max(per_worker) if per_worker else 0.0) + commit_rtt

@@ -11,6 +11,16 @@ edge cluster (virtual clock). Reproduces the paper's speed/fault experiments:
 Within control-free segments the pipeline is simulated exactly; control
 events (replication, re-partition, recovery) happen at batch boundaries with
 a drain — a small, documented approximation (DESIGN.md §6).
+
+Protocol sharing: every control DECISION (when to replicate/re-partition,
+which partition, which redistribution plans) comes from
+``runtime/protocol.py`` — the same layer ``runtime/live.py`` executes
+against real JAX stage computations. This simulator only adds the virtual
+clock: it prices the shared decisions with ``protocol.chain_cost`` /
+``global_cost`` / ``redistribution_cost`` instead of paying them in
+wall-clock. Because both runtimes drain at the same
+``ProtocolConfig.control_points`` and call the same planners, the simulator
+PREDICTS what the live runtime EXECUTES (see tests/test_live_runtime.py).
 """
 from __future__ import annotations
 
@@ -22,8 +32,8 @@ import numpy as np
 from repro.core import redistribution as rd
 from repro.core import schedule as sched
 from repro.core.capacity import CapacityEstimator
-from repro.core.partition import (PartitionResult, solve_partition,
-                                  uniform_partition)
+from repro.core.partition import PartitionResult, solve_partition, uniform_partition
+from repro.runtime import protocol
 from repro.runtime.devices import DeviceSpec, WorkloadProfile
 
 
@@ -42,6 +52,15 @@ class SimConfig:
     probe_rtt: float = 0.05
     commit_rtt: float = 0.05
     comm_factor: float = 2.0              # fwd activation + bwd gradient
+
+    @property
+    def protocol(self) -> protocol.ProtocolConfig:
+        return protocol.ProtocolConfig(
+            chain_every=self.chain_every, global_every=self.global_every,
+            repartition_first_at=self.repartition_first_at,
+            repartition_every=self.repartition_every,
+            detect_timeout=self.detect_timeout, probe_rtt=self.probe_rtt,
+            commit_rtt=self.commit_rtt, comm_factor=self.comm_factor)
 
 
 @dataclasses.dataclass
@@ -62,6 +81,7 @@ class SimResult:
 class PipelineSimulator:
     def __init__(self, cfg: SimConfig):
         self.cfg = cfg
+        self.proto = cfg.protocol
         self.capacities = np.array([d.capacity for d in cfg.devices])
         self._batch_now = 0            # for time-varying capacities
 
@@ -133,61 +153,12 @@ class PipelineSimulator:
             assert progressed, "pipeline deadlock (invalid schedule)"
         return batch_done, float(max(free))
 
-    # ----------------------- control-event costs ------------------------
-
-    def _weights_bytes(self, part: PartitionResult, stage: int) -> float:
-        a, b = part.ranges[stage]
-        return float(np.sum(self.cfg.profile.weight_bytes[a:b + 1]))
-
-    def _chain_cost(self, part, worker_ids) -> float:
-        """All workers replicate to their neighbor in parallel -> max."""
-        N = len(worker_ids)
-        costs = []
-        for s in range(N):
-            t = (s + 1) % N
-            bw = self.cfg.bandwidth[worker_ids[s], worker_ids[t]]
-            costs.append(self._weights_bytes(part, s) / bw)
-        return max(costs)
-
-    def _global_cost(self, part, worker_ids) -> float:
-        """Workers 1..N-1 send to central — serialized on central's link."""
-        return sum(self._weights_bytes(part, s)
-                   / self.cfg.bandwidth[worker_ids[s], worker_ids[0]]
-                   for s in range(1, len(worker_ids)))
-
-    def _redistribution_cost(self, p_new, p_cur, worker_ids_new,
-                             plans) -> float:
-        """Parallel fetches -> max per-worker transfer + commit."""
-        wb = self.cfg.profile.weight_bytes
-        per_worker = []
-        for i_new, plan in enumerate(plans):
-            t = 0.0
-            for target, layers in plan.need.items():
-                bw = self.cfg.bandwidth[worker_ids_new[target],
-                                        worker_ids_new[i_new]]
-                t += sum(wb[l] for l in layers) / bw
-            per_worker.append(t)
-        return (max(per_worker) if per_worker else 0.0) + self.cfg.commit_rtt
-
-    def _solve(self, worker_ids, est: CapacityEstimator) -> PartitionResult:
-        # capacities indexed by ORIGINAL device id; before any profile is
-        # collected the central assumes homogeneity (paper §III-B / §III-F)
-        now = self._caps_now()
-        caps = np.array([now[w] if est.all_reported() else 1.0
-                         for w in worker_ids])
-        caps = caps / caps[0] if caps[0] > 0 else caps
-        bws = np.array([self.cfg.bandwidth[worker_ids[i], worker_ids[i + 1]]
-                        for i in range(len(worker_ids) - 1)])
-        return solve_partition(self.cfg.profile.exec_times,
-                               self.cfg.profile.out_bytes, caps, bws,
-                               self.cfg.comm_factor)
-
     # ------------------------------ run ---------------------------------
 
     def run(self, fail: Optional[tuple[int, int]] = None) -> SimResult:
         """fail = (worker_index, batch_index): that worker dies right when
         `batch_index` starts (paper kills worker 1 at batch 205)."""
-        cfg = self.cfg
+        cfg, proto = self.cfg, self.proto
         worker_ids = list(range(len(cfg.devices)))
         est = CapacityEstimator(cfg.profile.exec_times, len(worker_ids))
         L = cfg.profile.num_layers
@@ -211,24 +182,17 @@ class PipelineSimulator:
         recovery_overhead = 0.0
         t = 0.0
         b0 = 0
-        profiled = False
 
-        def control_points():
-            pts = set()
-            for k in range(1, cfg.num_batches // cfg.chain_every + 1):
-                pts.add(k * cfg.chain_every)
-            if cfg.policy == "ftpipehd":
-                pts.add(cfg.repartition_first_at)
-                for k in range(1, cfg.num_batches // cfg.repartition_every + 1):
-                    pts.add(k * cfg.repartition_every)
-            if fail is not None:
-                pts.add(fail[1])
-            for d in cfg.devices:                      # capacity drift points
-                for b, _ in d.capacity_schedule:
-                    pts.add(b)
-            return sorted(p for p in pts if p < cfg.num_batches)
-
-        points = control_points() + [cfg.num_batches]
+        extra = set()
+        if fail is not None:
+            extra.add(fail[1])
+        for d in cfg.devices:                          # capacity drift points
+            for b, _ in d.capacity_schedule:
+                extra.add(b)
+        points = proto.control_points(cfg.num_batches,
+                                      dynamic=(cfg.policy == "ftpipehd"),
+                                      extra=sorted(extra))
+        points = points + [cfg.num_batches]
         failed_done = False
 
         for nxt in points:
@@ -242,50 +206,40 @@ class PipelineSimulator:
             if b0 >= cfg.num_batches:
                 break
 
-            # measured times available after the first segment
+            # measured times available after the first segment; Eq. 1 is a
+            # RATIO against the central node, so a drifting central (its
+            # capacity_schedule) rescales everyone else's estimate
             self._batch_now = b0
+            central_cap = self._caps_now()[worker_ids[0]]
             for i, w in enumerate(worker_ids):
                 a, e = part.ranges[i]
                 meas = float(np.sum(cfg.profile.exec_times[a:e + 1])
-                             * self._caps_now()[w])
+                             * self._caps_now()[w] / max(central_cap, 1e-12))
                 est.update(i, meas, a, e)
-            profiled = True
 
             # ---- failure event -----------------------------------------
             if fail is not None and b0 == fail[1] and not failed_done:
                 failed_done = True
                 fw = fail[0]
-                pause = cfg.detect_timeout + cfg.probe_rtt
-                old_ids = list(worker_ids)
-                worker_ids = rd.update_worker_list(worker_ids, [fw])
+                pause = proto.detect_timeout + proto.probe_rtt
                 if cfg.policy == "respipe":
-                    # successor absorbs the failed stage's layers, no re-split
-                    counts = list(part.counts)
-                    if fw + 1 < len(counts):
-                        counts = counts[:fw] + [counts[fw] + counts[fw + 1]] \
-                            + counts[fw + 2:]
-                    else:
-                        counts = counts[:fw - 1] + [counts[fw - 1] + counts[fw]]
-                    pts, acc = [], -1
-                    for c in counts:
-                        acc += c
-                        pts.append(acc)
-                    new_part = PartitionResult(tuple(pts), tuple(counts),
-                                               float("nan"))
-                    pause += 0.0        # ResPipe: no weight transfer (replica
-                    #                      already at successor)
+                    # successor absorbs the failed stage's layers; replica is
+                    # already in place -> no weight transfer
+                    worker_ids = rd.update_worker_list(worker_ids, [fw])
+                    est = est.drop_workers([fw])
+                    new_part = protocol.respipe_takeover(part, fw)
+                    recovery_overhead = pause - proto.detect_timeout \
+                        - proto.probe_rtt
                 else:
-                    new_part = self._solve(worker_ids, est)
-                    plans = [rd.plan_single_failure(new_part.points, part.points,
-                                                    fw, i_cur, i_new,
-                                                    len(old_ids))
-                             for i_new, i_cur in enumerate(
-                                 i for i in range(len(old_ids)) if i != fw)]
-                    pause += self._redistribution_cost(new_part.points,
-                                                       part.points,
-                                                       worker_ids, plans)
-                recovery_overhead = pause - cfg.detect_timeout - cfg.probe_rtt \
-                    if cfg.policy == "respipe" else pause
+                    dec = protocol.plan_failure_recovery(
+                        part, worker_ids, [fw], est, cfg.profile,
+                        cfg.bandwidth, cfg.comm_factor)
+                    worker_ids, new_part, est = (dec.worker_ids,
+                                                 dec.partition, dec.est)
+                    pause += protocol.redistribution_cost(
+                        cfg.profile, cfg.bandwidth, worker_ids, dec.plans,
+                        proto.commit_rtt)
+                    recovery_overhead = pause
                 events.append((t, f"failure w{fw}; recovery {pause:.3f}s "
                                   f"policy={cfg.policy}"))
                 t += pause
@@ -294,25 +248,32 @@ class PipelineSimulator:
                 continue
 
             # ---- replication -------------------------------------------
-            if b0 % cfg.chain_every == 0:
-                c = self._chain_cost(part, worker_ids)
-                if b0 % cfg.global_every == 0:
-                    c += self._global_cost(part, worker_ids)
-                    events.append((t, f"chain+global replication {c:.3f}s"))
-                else:
-                    events.append((t, f"chain replication {c:.3f}s"))
+            do_chain, do_global = proto.replication_due(b0)
+            if do_chain or do_global:
+                c = 0.0
+                if do_chain:
+                    c += protocol.chain_cost(cfg.profile, cfg.bandwidth,
+                                             part, worker_ids)
+                if do_global:
+                    c += protocol.global_cost(cfg.profile, cfg.bandwidth,
+                                              part, worker_ids)
+                kind = ("chain+global" if do_chain and do_global
+                        else "chain" if do_chain else "global")
+                events.append((t, f"{kind} replication {c:.3f}s"))
                 t += c
 
             # ---- dynamic re-partition ----------------------------------
-            if (cfg.policy == "ftpipehd"
-                    and (b0 == cfg.repartition_first_at
-                         or b0 % cfg.repartition_every == 0)):
-                new_part = self._solve(worker_ids, est)
+            if cfg.policy == "ftpipehd" and proto.repartition_due(b0):
+                new_part = protocol.solve_from_estimates(
+                    cfg.profile, cfg.bandwidth, worker_ids, est,
+                    cfg.comm_factor)
                 if new_part.points != part.points:
-                    plans = [rd.plan_repartition(new_part.points, part.points, i)
-                             for i in range(len(worker_ids))]
-                    c = self._redistribution_cost(new_part.points, part.points,
-                                                  worker_ids, plans)
+                    plans = protocol.plan_repartition_all(new_part, part,
+                                                          len(worker_ids))
+                    c = protocol.redistribution_cost(cfg.profile,
+                                                     cfg.bandwidth,
+                                                     worker_ids, plans,
+                                                     proto.commit_rtt)
                     events.append((t, f"re-partition {part.counts} -> "
                                       f"{new_part.counts} ({c:.3f}s)"))
                     t += c
@@ -321,9 +282,9 @@ class PipelineSimulator:
 
         deltas = np.diff(np.concatenate([[0.0], batch_done]))
         return SimResult(batch_done=batch_done, batch_times=deltas,
-                         total_time=float(batch_done[-1]), events=events,
-                         partitions=partitions,
-                         recovery_overhead=recovery_overhead)
+                        total_time=float(batch_done[-1]), events=events,
+                        partitions=partitions,
+                        recovery_overhead=recovery_overhead)
 
 
 def single_device_time(profile: WorkloadProfile, capacity: float,

@@ -1,0 +1,173 @@
+"""In-process message transport for the live FTPipeHD runtime.
+
+One ``Transport`` connects all nodes of a training cluster: every node
+(worker device or the coordinator control plane) registers an inbox, and
+``send`` delivers a ``Message`` into the destination's queue. Faults are
+injectable so the fault-tolerance protocol can be exercised for real:
+
+  * ``kill(node)``     — the node vanishes: messages to AND from it are
+                         silently dropped (a crashed edge device),
+  * ``FaultSpec.drop`` — Bernoulli loss per message (flaky WiFi),
+  * ``FaultSpec.delay``— fixed delivery latency via timer threads.
+
+The transport models *reachability*, not bandwidth: link speeds enter the
+protocol through the coordinator's bandwidth matrix (what the paper's
+central node measures), exactly as in ``runtime/simulator.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import random
+import threading
+import time
+from typing import Any, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class Message:
+    src: int
+    dst: int
+    kind: str
+    payload: Any
+    sent_at: float
+
+
+@dataclasses.dataclass
+class FaultSpec:
+    """Link-level fault injection. ``drop`` applies to data/control traffic
+    uniformly; ``protect`` lists message kinds that are never dropped (e.g.
+    retransmit-free control commands in tests)."""
+    drop: float = 0.0
+    delay: float = 0.0
+    seed: int = 0
+    protect: tuple = ()
+
+
+def payload_bytes(payload: Any) -> int:
+    """Approximate wire size of a message payload (array leaves only)."""
+    total = 0
+    stack = [payload]
+    while stack:
+        x = stack.pop()
+        if isinstance(x, dict):
+            stack.extend(x.values())
+        elif isinstance(x, (list, tuple)):
+            stack.extend(x)
+        elif hasattr(x, "nbytes"):
+            total += int(x.nbytes)
+        elif isinstance(x, (int, float, bool)):
+            total += 8
+    return total
+
+
+class Transport:
+    def __init__(self, fault: Optional[FaultSpec] = None):
+        self.fault = fault or FaultSpec()
+        self._rng = random.Random(self.fault.seed)
+        self._inboxes: dict[int, queue.Queue] = {}
+        self._dead: set[int] = set()
+        self._lock = threading.Lock()
+        self.stats = {"sent": 0, "delivered": 0, "dropped": 0,
+                      "to_dead": 0, "bytes": 0}
+
+    # ------------------------------ wiring ------------------------------
+
+    def register(self, node: int) -> None:
+        with self._lock:
+            self._inboxes.setdefault(node, queue.Queue())
+
+    def kill(self, node: int) -> None:
+        """The node crashes: it stops sending and stops receiving."""
+        with self._lock:
+            self._dead.add(node)
+            q = self._inboxes.get(node)
+        if q is not None:                  # drain pending traffic
+            try:
+                while True:
+                    q.get_nowait()
+            except queue.Empty:
+                pass
+
+    def revive(self, node: int) -> None:
+        """Paper case 2: a worker restarts (fresh state, same slot)."""
+        with self._lock:
+            self._dead.discard(node)
+
+    def is_alive(self, node: int) -> bool:
+        with self._lock:
+            return node not in self._dead
+
+    # ----------------------------- messaging ----------------------------
+
+    def send(self, src: int, dst: int, kind: str, payload: Any = None) -> bool:
+        """Deliver (or drop, per faults). Returns whether it was delivered;
+        senders must NOT rely on this — a real network gives no such signal,
+        and the protocol's heartbeats/timeouts are what detect loss."""
+        with self._lock:
+            self.stats["sent"] += 1
+            if src in self._dead or dst in self._dead:
+                self.stats["to_dead"] += 1
+                return False
+            if (self.fault.drop > 0.0 and kind not in self.fault.protect
+                    and self._rng.random() < self.fault.drop):
+                self.stats["dropped"] += 1
+                return False
+            inbox = self._inboxes.get(dst)
+        if inbox is None:
+            return False
+        msg = Message(src=src, dst=dst, kind=kind, payload=payload,
+                      sent_at=time.monotonic())
+        nbytes = payload_bytes(payload)
+
+        def _account():
+            with self._lock:
+                self.stats["delivered"] += 1
+                self.stats["bytes"] += nbytes
+
+        if self.fault.delay > 0.0:
+            def _deliver():
+                with self._lock:          # re-check: dst may have died (or
+                    if dst in self._dead:  # been killed+revived) in flight
+                        return
+                inbox.put(msg)
+                _account()
+            threading.Timer(self.fault.delay, _deliver).start()
+        else:
+            inbox.put(msg)
+            _account()
+        return True
+
+    def recv(self, node: int, timeout: float = 0.05) -> Optional[Message]:
+        """Blocking receive with timeout; None on timeout or if dead."""
+        with self._lock:
+            inbox = self._inboxes.get(node)
+            dead = node in self._dead
+        if inbox is None or dead:
+            time.sleep(min(timeout, 0.01))
+            return None
+        try:
+            return inbox.get(timeout=timeout)
+        except queue.Empty:
+            return None
+
+
+class Heartbeat(threading.Thread):
+    """Per-worker liveness beacon (paper §III-F runs a timer at the central
+    node; workers must be heard from periodically)."""
+
+    def __init__(self, transport: Transport, src: int, dst: int,
+                 interval: float):
+        super().__init__(daemon=True, name=f"hb-{src}")
+        self.transport = transport
+        self.src, self.dst = src, dst
+        self.interval = interval
+        self.stop_event = threading.Event()
+
+    def run(self):
+        while not self.stop_event.wait(self.interval):
+            self.transport.send(self.src, self.dst, "hb",
+                                {"t": time.monotonic()})
+
+    def stop(self):
+        self.stop_event.set()

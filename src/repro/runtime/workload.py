@@ -1,0 +1,147 @@
+"""Partitionable layer-chain workloads for the live runtime.
+
+A ``LayerChain`` is the live counterpart of the simulator's
+``WorkloadProfile``: a flat list of per-layer params + a per-layer apply
+function — exactly the granularity FTPipeHD's partition DP
+(``core/partition.py``) and redistribution plans (``core/redistribution.py``)
+operate on. Stage i of the live pipeline owns a contiguous slice of the
+chain and runs real JAX forward/backward over it (``runtime/live.py``).
+
+Constructors:
+  * ``mobilenet_chain`` — the paper's workload (§IV-B), MobileNetV2/CIFAR
+    from ``models/mobilenet.py``;
+  * ``mlp_chain``       — a tiny dense chain for fast CI tests;
+  * profiles are MEASURED on the central node (paper §III-B: "executes the
+    model ten times and takes the average"), not assumed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime.devices import WorkloadProfile
+
+
+@dataclasses.dataclass
+class LayerChain:
+    """params[j] + apply(j, params_j, x) for a chain of L layers; the loss
+    is computed on the last layer's output."""
+    params: list
+    apply_layer: Callable[[int, Any, Any], Any]     # (layer_idx, p, x) -> x
+    loss: Callable[[Any, Any], Any]                 # (y_last, batch) -> scalar
+    input_of: Callable[[dict], Any]                 # batch -> x0 (stage 0)
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.params)
+
+    # ------------------- sequential oracle (no pipeline) -----------------
+
+    def forward(self, params: list, x):
+        for j, p in enumerate(params):
+            x = self.apply_layer(j, p, x)
+        return x
+
+    def loss_fn(self, params: list, batch: dict):
+        """Full-model loss over the flat layer list — the signature
+        ``runtime/semantics.AsyncTrainingExecutor`` expects, so the live
+        runtime can be checked against the async-semantics oracle."""
+        return self.loss(self.forward(params, self.input_of(batch)), batch)
+
+    # --------------------------- profiling -------------------------------
+
+    def measure_profile(self, batch: dict, repeats: int = 3,
+                        bwd_factor: float = 2.0) -> WorkloadProfile:
+        """Central-node profile (paper §III-B): per-layer forward wall time
+        (median of ``repeats``), activation payload from real shapes, weight
+        payload from real leaves. Backward is priced at ``bwd_factor`` x
+        forward (the usual fwd:bwd FLOP ratio) rather than timed per-layer —
+        per-layer VJP timing on CPU is noise-dominated."""
+        x = self.input_of(batch)
+        fwd, out_b = [], []
+        for j, p in enumerate(self.params):
+            ts = []
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                y = self.apply_layer(j, p, x)
+                jax.block_until_ready(y)
+                ts.append(time.perf_counter() - t0)
+            fwd.append(float(np.median(ts)))
+            out_b.append(float(sum(a.nbytes for a in jax.tree.leaves(y))))
+            x = y
+        wb = [float(sum(a.nbytes for a in jax.tree.leaves(p)))
+              for p in self.params]
+        fwd = np.asarray(fwd)
+        return WorkloadProfile(fwd_times=fwd, bwd_times=bwd_factor * fwd,
+                               out_bytes=np.asarray(out_b),
+                               weight_bytes=np.asarray(wb))
+
+
+# ------------------------------ constructors -----------------------------
+
+def mlp_chain(key, num_layers: int = 8, width: int = 16, in_dim: int = 8,
+              num_classes: int = 4) -> LayerChain:
+    """Dense tanh chain ending in a linear classifier head (layer L-1)."""
+    ks = jax.random.split(key, num_layers)
+    params = []
+    for j in range(num_layers):
+        d_in = in_dim if j == 0 else width
+        d_out = num_classes if j == num_layers - 1 else width
+        params.append({"w": jax.random.normal(ks[j], (d_in, d_out))
+                       / np.sqrt(d_in),
+                       "b": jnp.zeros((d_out,))})
+
+    def apply_layer(j, p, x):
+        y = x @ p["w"] + p["b"]
+        return y if j == num_layers - 1 else jnp.tanh(y)
+
+    def loss(y, batch):
+        logp = jax.nn.log_softmax(y)
+        return -jnp.mean(jnp.take_along_axis(
+            logp, batch["labels"][:, None], axis=1))
+
+    return LayerChain(params=params, apply_layer=apply_layer, loss=loss,
+                      input_of=lambda b: b["x"])
+
+
+def mobilenet_chain(key, num_classes: int = 10) -> LayerChain:
+    """The paper's MobileNetV2 (flat 19-layer chain, models/mobilenet.py)."""
+    from repro.models import mobilenet as mn
+    layers, meta = mn.init_layers(key, num_classes=num_classes)
+
+    def apply_layer(j, p, x):
+        return mn.apply_layer(p, meta[j], x)
+
+    def loss(y, batch):
+        logp = jax.nn.log_softmax(y)
+        return -jnp.mean(jnp.take_along_axis(
+            logp, batch["labels"][:, None], axis=1))
+
+    return LayerChain(params=layers, apply_layer=apply_layer, loss=loss,
+                      input_of=lambda b: b["x"])
+
+
+def classification_batches(chain_kind: str, num_batches: int, batch: int,
+                           seed: int = 0, image_hw: int = 16,
+                           in_dim: int = 8, num_classes: int = 4):
+    """Deterministic learnable batches (class-template + noise, mirroring
+    data/synthetic.py). Returns list of {"x", "labels"} dicts."""
+    rng = np.random.default_rng(seed)
+    if chain_kind == "mlp":
+        templates = rng.normal(0, 1, (num_classes, in_dim)).astype(np.float32)
+    else:
+        templates = rng.normal(
+            0, 1, (num_classes, image_hw, image_hw, 3)).astype(np.float32)
+    out = []
+    for _ in range(num_batches):
+        labels = rng.integers(0, num_classes, batch)
+        x = templates[labels] + 0.3 * rng.normal(
+            0, 1, (batch,) + templates.shape[1:]).astype(np.float32)
+        out.append({"x": jnp.asarray(x, jnp.float32),
+                    "labels": jnp.asarray(labels, jnp.int32)})
+    return out

@@ -1,0 +1,209 @@
+"""Minimal stand-in for ``hypothesis`` used ONLY when the real package is
+absent (see conftest.py). CI installs real hypothesis via ``pip install
+-e .[dev]``; this fallback keeps ``python -m pytest`` collecting and
+running in bare environments (e.g. an image with only jax+numpy+pytest).
+
+It implements just the API surface the test suite uses — ``given`` /
+``settings`` / ``strategies.{integers,floats,lists,sampled_from,composite,
+data}`` — with seeded pseudo-random sampling instead of coverage-guided
+search + shrinking. Property tests still run (deterministically), they are
+just a weaker net than real hypothesis.
+"""
+from __future__ import annotations
+
+import random
+
+_DEFAULT_EXAMPLES = 50
+
+
+class Strategy:
+    def sample(self, rng: random.Random):
+        raise NotImplementedError
+
+    def map(self, f):
+        return _Mapped(self, f)
+
+    def filter(self, pred, tries: int = 1000):
+        return _Filtered(self, pred, tries)
+
+
+class _Mapped(Strategy):
+    def __init__(self, base, f):
+        self.base, self.f = base, f
+
+    def sample(self, rng):
+        return self.f(self.base.sample(rng))
+
+
+class _Filtered(Strategy):
+    def __init__(self, base, pred, tries):
+        self.base, self.pred, self.tries = base, pred, tries
+
+    def sample(self, rng):
+        for _ in range(self.tries):
+            x = self.base.sample(rng)
+            if self.pred(x):
+                return x
+        raise RuntimeError("filter predicate never satisfied")
+
+
+class _Integers(Strategy):
+    def __init__(self, lo, hi):
+        self.lo, self.hi = lo, hi
+
+    def sample(self, rng):
+        return rng.randint(self.lo, self.hi)
+
+
+class _Floats(Strategy):
+    def __init__(self, lo, hi):
+        self.lo, self.hi = lo, hi
+
+    def sample(self, rng):
+        return rng.uniform(self.lo, self.hi)
+
+
+class _Lists(Strategy):
+    def __init__(self, elem, min_size=0, max_size=10, unique=False):
+        self.elem, self.min_size, self.max_size = elem, min_size, max_size
+        self.unique = unique
+
+    def sample(self, rng):
+        k = rng.randint(self.min_size, self.max_size)
+        if self.unique and isinstance(self.elem, _Integers):
+            pool = list(range(self.elem.lo, self.elem.hi + 1))
+            return rng.sample(pool, min(k, len(pool)))
+        out, seen = [], set()
+        tries = 0
+        while len(out) < k and tries < 1000:
+            x = self.elem.sample(rng)
+            tries += 1
+            if self.unique:
+                if x in seen:
+                    continue
+                seen.add(x)
+            out.append(x)
+        return out
+
+
+class _SampledFrom(Strategy):
+    def __init__(self, options):
+        self.options = list(options)
+
+    def sample(self, rng):
+        return rng.choice(self.options)
+
+
+class _Just(Strategy):
+    def __init__(self, value):
+        self.value = value
+
+    def sample(self, rng):
+        return self.value
+
+
+class _Booleans(Strategy):
+    def sample(self, rng):
+        return rng.random() < 0.5
+
+
+class _Composite(Strategy):
+    def __init__(self, fn, args, kwargs):
+        self.fn, self.args, self.kwargs = fn, args, kwargs
+
+    def sample(self, rng):
+        draw = lambda strategy: strategy.sample(rng)
+        return self.fn(draw, *self.args, **self.kwargs)
+
+
+class _DataObject:
+    def __init__(self, rng):
+        self._rng = rng
+
+    def draw(self, strategy, label=None):
+        return strategy.sample(self._rng)
+
+
+class _Data(Strategy):
+    def sample(self, rng):
+        return _DataObject(rng)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Integers(min_value, max_value)
+
+    @staticmethod
+    def floats(min_value, max_value, **_kw):
+        return _Floats(min_value, max_value)
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10, unique=False, **_kw):
+        return _Lists(elements, min_size, max_size, unique)
+
+    @staticmethod
+    def sampled_from(options):
+        return _SampledFrom(options)
+
+    @staticmethod
+    def just(value):
+        return _Just(value)
+
+    @staticmethod
+    def booleans():
+        return _Booleans()
+
+    @staticmethod
+    def composite(fn):
+        def factory(*args, **kwargs):
+            return _Composite(fn, args, kwargs)
+        return factory
+
+    @staticmethod
+    def data():
+        return _Data()
+
+
+def given(*strats, **kw_strats):
+    def deco(fn):
+        # NOTE: no functools.wraps — it sets __wrapped__, pytest would
+        # unwrap to fn's signature and treat the drawn params as fixtures
+        def wrapper():
+            n = getattr(wrapper, "_max_examples",
+                        getattr(fn, "_max_examples", _DEFAULT_EXAMPLES))
+            rng = random.Random(0xF7B1BE)
+            for _ in range(n):
+                drawn = [s.sample(rng) for s in strats]
+                drawn_kw = {k: s.sample(rng) for k, s in kw_strats.items()}
+                try:
+                    fn(*drawn, **drawn_kw)
+                except _Unsatisfied:
+                    continue
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper.hypothesis_fallback = True
+        return wrapper
+    return deco
+
+
+def settings(max_examples=_DEFAULT_EXAMPLES, deadline=None, **_kw):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def assume(condition):
+    if not condition:
+        raise _Unsatisfied()
+
+
+class _Unsatisfied(Exception):
+    pass
+
+
+class HealthCheck:
+    all = staticmethod(lambda: [])
+    too_slow = "too_slow"
