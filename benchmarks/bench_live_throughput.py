@@ -1,0 +1,138 @@
+"""Live hot-path throughput: compiled fused StageExecutor step vs the
+legacy eager ``jax.vjp`` + ``optim/sgd.sgd_update`` path, plus §III-F
+recovery wall time on the live runtime for both.
+
+Reports steps/sec for one stage's fwd+bwd+update cycle (the unit the 1F1B
+schedule repeats) and the kill->recovered wall time, and writes
+``BENCH_live_throughput.json`` (uploaded as a CI artifact by the smoke job).
+
+  python benchmarks/bench_live_throughput.py --quick
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+JSON_PATH = "BENCH_live_throughput.json"
+
+
+def _steady_steps_per_s(chain, a, e, batch, steps, *, compiled):
+    """One mid-stage repeated fwd+bwd+update cycle, like the 1F1B inner
+    loop (the last stage differs only by the loss head)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.runtime.stage_executor import StageExecutor
+
+    sl, buf = chain.flat_slice(a, e)
+    ex = StageExecutor(chain, sl, last=False, lr=0.05, momentum=0.9,
+                       weight_decay=4e-5, compiled=compiled)
+    rng = np.random.default_rng(0)
+    d_in = chain.params[a]["w"].shape[0]
+    d_out = chain.params[e]["w"].shape[1]
+    x = jnp.asarray(rng.normal(size=(batch, d_in)), jnp.float32)
+    ct = jnp.asarray(rng.normal(size=(batch, d_out)), jnp.float32)
+    b = None
+    mom = sl.zeros()
+    # warmup covers compilation (compiled) / first-dispatch (eager)
+    for _ in range(3):
+        y = ex.forward(buf, x, b)
+        dx, buf, mom = ex.step(buf, buf, mom, x, ct, b)
+        jax.block_until_ready(buf)
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        y = ex.forward(buf, x, b)
+        dx, buf, mom = ex.step(buf, buf, mom, x, ct, b)
+        jax.block_until_ready(buf)
+    jax.block_until_ready((y, dx))
+    return steps / (time.perf_counter() - t0)
+
+
+def _recovery_time_s(compiled: bool, quick: bool) -> float:
+    """Kill a worker mid-run; wall time from KILL to 'recovered' event."""
+    import jax
+
+    from repro.runtime.live import LiveConfig, run_live_training
+    from repro.runtime.protocol import ProtocolConfig
+    from repro.runtime.workload import classification_batches, mlp_chain
+
+    chain = mlp_chain(jax.random.PRNGKey(0), num_layers=8)
+    data = classification_batches("mlp", 8, batch=16, seed=0)
+    res = run_live_training(chain, data, LiveConfig(
+        num_workers=3, num_batches=20 if quick else 36,
+        protocol=ProtocolConfig(chain_every=6, global_every=12,
+                                repartition_first_at=10_000,
+                                repartition_every=10_000,
+                                detect_timeout=0.3),
+        lr=0.1, kill=(1, 8), compiled=compiled))
+    assert len(res.recoveries) == 1, res.events
+    t_kill = next(t for t, e in res.events if e.startswith("KILL"))
+    t_rec = next(t for t, e in res.events if e.startswith("recovered"))
+    return t_rec - t_kill
+
+
+def run(quick: bool = False):
+    import jax
+
+    from repro.runtime.workload import mlp_chain
+
+    width = 32 if quick else 64
+    layers = 8
+    batch = 32
+    steps = 30 if quick else 100
+    chain = mlp_chain(jax.random.PRNGKey(3), num_layers=layers, width=width)
+
+    mid = {c: _steady_steps_per_s(chain, 1, layers // 2, batch, steps,
+                                  compiled=c)
+           for c in (True, False)}
+    rec = {c: _recovery_time_s(c, quick) for c in (True, False)}
+    out = {
+        "quick": quick,
+        "backend": jax.default_backend(),
+        "stage_layers": layers // 2,
+        "width": width,
+        "batch": batch,
+        "steps_per_s_compiled": mid[True],
+        "steps_per_s_uncompiled": mid[False],
+        "compiled_speedup": mid[True] / mid[False],
+        "recovery_s_compiled": rec[True],
+        "recovery_s_uncompiled": rec[False],
+    }
+    with open(JSON_PATH, "w") as f:
+        json.dump(out, f, indent=2)
+    if out["backend"] == "cpu" and out["compiled_speedup"] < 2.0:
+        # RuntimeError (not SystemExit) so benchmarks/run.py's per-suite
+        # except-Exception stays fail-soft; the standalone CLI still exits
+        # non-zero for CI
+        raise RuntimeError(
+            f"compiled hot path only {out['compiled_speedup']:.2f}x the "
+            f"uncompiled path — below the 2x acceptance floor")
+    return [
+        ("live/steps_per_s_compiled", out["steps_per_s_compiled"], ""),
+        ("live/steps_per_s_uncompiled", out["steps_per_s_uncompiled"], ""),
+        ("live/compiled_speedup", out["compiled_speedup"],
+         "acceptance: >= 2x on CPU"),
+        ("live/recovery_s_compiled", out["recovery_s_compiled"],
+         "kill -> recovered wall time"),
+        ("live/recovery_s_uncompiled", out["recovery_s_uncompiled"], ""),
+    ]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    rows = run(quick=args.quick)
+    print("name,value,derived")
+    for n, v, d in rows:
+        print(f"{n},{v},{d}")
+    print(f"wrote {JSON_PATH}")
+
+
+if __name__ == "__main__":
+    main()

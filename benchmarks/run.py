@@ -13,14 +13,15 @@ import traceback
 
 def main() -> None:
     from benchmarks import (bench_continuous_learning, bench_dynamic_partition,
-                            bench_fault_recovery, bench_replication,
-                            bench_weight_aggregation)
+                            bench_fault_recovery, bench_live_throughput,
+                            bench_replication, bench_weight_aggregation)
     suites = [
         ("Fig5-dynamic-partition", bench_dynamic_partition.run),
         ("Fig4-weight-aggregation", bench_weight_aggregation.run),
         ("Fig6-TableIII-fault-recovery", bench_fault_recovery.run),
         ("Fig6-replication-overhead", bench_replication.run),
         ("Fig8-continuous-learning", bench_continuous_learning.run),
+        ("Live-hot-path-throughput", bench_live_throughput.run),
     ]
     print("name,value,derived")
     for title, fn in suites:

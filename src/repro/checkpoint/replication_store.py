@@ -69,6 +69,12 @@ class LayerReplicaStore:
     the partition moves; keying by layer makes global replicas survive
     dynamic re-partition (§III-D) and worker-list renumbering (§III-F) —
     the redistribution planner's central-fallback target always resolves.
+
+    Snapshots arrive as packed flat f32 buffers (per-layer slices of a
+    stage's contiguous weight buffer, ``runtime/stage_executor``), so a
+    replica is one array, its wire size is exact (``nbytes``), and serving
+    a §III-F fetch is a reference hand-off, not a pytree copy. The store is
+    value-agnostic: legacy pytree snapshots still work.
     """
 
     def __init__(self):
@@ -79,6 +85,20 @@ class LayerReplicaStore:
         cur = self._layers.get(layer)
         if cur is None or batch >= cur[0]:
             self._layers[layer] = (batch, params)
+
+    def put_many(self, batch: int, layers: dict) -> None:
+        """Absorb one replication message ({layer -> packed weights})."""
+        for j, p in layers.items():
+            self.put(j, batch, p)
+
+    def nbytes(self) -> int:
+        """Total stored replica bytes (exact for packed-buffer snapshots)."""
+        total = 0
+        for _, p in self._layers.values():
+            leaves = jax.tree.leaves(p)
+            total += sum(int(l.nbytes) for l in leaves
+                         if hasattr(l, "nbytes"))
+        return total
 
     def has(self, layer: int) -> bool:
         return layer in self._layers

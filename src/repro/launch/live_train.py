@@ -40,6 +40,12 @@ def main():
     ap.add_argument("--detect-timeout", type=float, default=0.5)
     ap.add_argument("--aggregate-every", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--uncompiled", action="store_true",
+                    help="legacy eager vjp + sgd_update hot path (the "
+                         "compiled fused StageExecutor is the default)")
+    ap.add_argument("--wire-codec", action="store_true",
+                    help="round-trip every transport payload through the "
+                         "bytes wire format (runtime/codec.py)")
     args = ap.parse_args()
 
     os.environ.setdefault("JAX_PLATFORMS", "cpu")
@@ -85,11 +91,14 @@ def main():
         lr=args.lr, momentum=args.momentum, kill=kill,
         device_specs=specs, emulate_capacity=args.emulate,
         capacity_source=args.capacity_source,
-        aggregate_every=args.aggregate_every)
+        aggregate_every=args.aggregate_every,
+        compiled=not args.uncompiled, wire_codec=args.wire_codec)
     res = run_live_training(chain, batches, cfg)
 
     print(f"live FTPipeHD run: {args.workers} workers, {args.batches} "
-          f"batches, chain={args.chain}")
+          f"batches, chain={args.chain}, "
+          f"hot path={'eager' if args.uncompiled else 'compiled'}"
+          f"{', wire codec on' if args.wire_codec else ''}")
     print(f"  loss: {res.losses[0]:.3f} -> {res.losses[-1]:.3f} "
           f"(median last 5: {np.median(res.losses[-5:]):.3f})")
     for t, e in res.events:

@@ -1,0 +1,143 @@
+"""Wire codec for the live FTPipeHD runtime: every transport payload to and
+from ``bytes``.
+
+The in-process queue transport could ship raw Python objects forever; a
+socket or multi-process transport cannot. This module defines the wire
+format and proves — when ``Transport(codec=True)`` round-trips every
+message through it — that the whole live protocol is serialization-clean:
+no closures, no shared references, nothing that would not survive a real
+network hop.
+
+Format (little-endian, no external deps, NOT pickle — decoding never
+executes code):
+
+    b"FTPH" | version u8 | kind: u16 len + utf8 | value
+
+with tagged values: None/bool, i64, f64, str/bytes (u32 len), list/tuple
+(u32 count), dict (u32 count, key-value pairs, int or str keys), and
+ndarray (dtype name, u8 ndim, u32 dims, raw row-major data). JAX arrays are
+encoded via ``np.asarray`` and decode as NumPy arrays (the consumer's next
+jnp op moves them back on-device); NumPy scalars collapse to Python
+int/float/bool. ``payload_bytes`` in ``runtime/transport.py`` counts array
+bytes only; ``len(encode(...))`` is the exact wire size including framing.
+"""
+from __future__ import annotations
+
+import struct
+from typing import Any
+
+import numpy as np
+
+MAGIC = b"FTPH"
+VERSION = 1
+
+_NONE, _TRUE, _FALSE, _INT, _FLOAT = 0, 1, 2, 3, 4
+_STR, _BYTES, _LIST, _TUPLE, _DICT, _ARRAY = 5, 6, 7, 8, 9, 10
+
+
+def _enc(x: Any, out: list) -> None:
+    if x is None:
+        out.append(bytes([_NONE]))
+    elif isinstance(x, (bool, np.bool_)):
+        out.append(bytes([_TRUE if x else _FALSE]))
+    elif isinstance(x, (int, np.integer)):
+        out.append(bytes([_INT]) + struct.pack("<q", int(x)))
+    elif isinstance(x, (float, np.floating)):
+        out.append(bytes([_FLOAT]) + struct.pack("<d", float(x)))
+    elif isinstance(x, str):
+        b = x.encode("utf-8")
+        out.append(bytes([_STR]) + struct.pack("<I", len(b)) + b)
+    elif isinstance(x, bytes):
+        out.append(bytes([_BYTES]) + struct.pack("<I", len(x)) + x)
+    elif isinstance(x, (list, tuple)):
+        out.append(bytes([_TUPLE if isinstance(x, tuple) else _LIST])
+                   + struct.pack("<I", len(x)))
+        for v in x:
+            _enc(v, out)
+    elif isinstance(x, dict):
+        out.append(bytes([_DICT]) + struct.pack("<I", len(x)))
+        for k, v in x.items():
+            _enc(k, out)
+            _enc(v, out)
+    elif hasattr(x, "shape") and hasattr(x, "dtype"):   # ndarray / jax.Array
+        arr = np.asarray(x)
+        name = str(arr.dtype).encode("ascii")
+        out.append(bytes([_ARRAY, len(name)]) + name + bytes([arr.ndim])
+                   + struct.pack(f"<{arr.ndim}I", *arr.shape)
+                   + np.ascontiguousarray(arr).tobytes())
+    else:
+        raise TypeError(f"codec cannot encode {type(x).__name__}: {x!r}")
+
+
+def _dec(buf: bytes, off: int) -> tuple[Any, int]:
+    tag = buf[off]
+    off += 1
+    if tag == _NONE:
+        return None, off
+    if tag == _TRUE:
+        return True, off
+    if tag == _FALSE:
+        return False, off
+    if tag == _INT:
+        return struct.unpack_from("<q", buf, off)[0], off + 8
+    if tag == _FLOAT:
+        return struct.unpack_from("<d", buf, off)[0], off + 8
+    if tag in (_STR, _BYTES):
+        (n,) = struct.unpack_from("<I", buf, off)
+        off += 4
+        raw = buf[off:off + n]
+        return (raw.decode("utf-8") if tag == _STR else raw), off + n
+    if tag in (_LIST, _TUPLE):
+        (n,) = struct.unpack_from("<I", buf, off)
+        off += 4
+        items = []
+        for _ in range(n):
+            v, off = _dec(buf, off)
+            items.append(v)
+        return (tuple(items) if tag == _TUPLE else items), off
+    if tag == _DICT:
+        (n,) = struct.unpack_from("<I", buf, off)
+        off += 4
+        d = {}
+        for _ in range(n):
+            k, off = _dec(buf, off)
+            v, off = _dec(buf, off)
+            d[k] = v
+        return d, off
+    if tag == _ARRAY:
+        nlen = buf[off]
+        off += 1
+        dtype = np.dtype(buf[off:off + nlen].decode("ascii"))
+        off += nlen
+        ndim = buf[off]
+        off += 1
+        shape = struct.unpack_from(f"<{ndim}I", buf, off)
+        off += 4 * ndim
+        count = int(np.prod(shape, dtype=np.int64)) if ndim else 1
+        nbytes = count * dtype.itemsize
+        arr = np.frombuffer(buf, dtype, count=count,
+                            offset=off).reshape(shape)
+        return arr, off + nbytes
+    raise ValueError(f"codec: unknown tag {tag} at offset {off - 1}")
+
+
+def encode(kind: str, payload: Any) -> bytes:
+    """One framed wire message."""
+    k = kind.encode("utf-8")
+    out = [MAGIC, bytes([VERSION]), struct.pack("<H", len(k)), k]
+    _enc(payload, out)
+    return b"".join(out)
+
+
+def decode(data: bytes) -> tuple[str, Any]:
+    """Inverse of ``encode``. Raises ValueError on framing errors."""
+    if data[:4] != MAGIC:
+        raise ValueError("codec: bad magic")
+    if data[4] != VERSION:
+        raise ValueError(f"codec: unsupported version {data[4]}")
+    (klen,) = struct.unpack_from("<H", data, 5)
+    kind = data[7:7 + klen].decode("utf-8")
+    payload, off = _dec(data, 7 + klen)
+    if off != len(data):
+        raise ValueError(f"codec: {len(data) - off} trailing bytes")
+    return kind, payload

@@ -3,12 +3,16 @@ passing, with the paper's full fault-tolerance protocol in the loop.
 
 A ``Coordinator`` (the paper's central node) drives N ``Worker`` threads
 over a queue-based ``runtime/transport.py`` (injectable drop/delay/kill
-faults). Each worker owns a contiguous slice of a ``runtime/workload.py``
-layer chain and executes REAL per-stage forward/backward (``jax.vjp``)
-under the async 1F1B schedule from ``core/schedule.py``, with vertical-sync
-weight versions retained per the in-flight rule (``VerticalSyncStash``;
-retention bounded by n+1, concurrent training versions by
-``schedule.stash_depth``).
+faults, optional wire codec). Each worker owns a contiguous slice of a
+``runtime/workload.py`` layer chain, held as ONE packed flat f32 buffer
+(``runtime/stage_executor.py``), and executes REAL per-stage training
+through a jitted fused ``StageExecutor.step`` (forward recompute, backward,
+``kernels/fused_sgd`` update in a single compiled call) under the async
+1F1B schedule from ``core/schedule.py``, with vertical-sync weight versions
+retained per the in-flight rule (``VerticalSyncStash``; retention bounded
+by n+1, concurrent training versions by ``schedule.stash_depth``). Weights
+travel the transport as per-layer slices of the packed buffer, keyed by
+layer id — the currency of replication, fetches, and the wire codec.
 
 Control flow is shared with the timing simulator through
 ``runtime/protocol.py`` — one source of truth for replication cadence
@@ -46,10 +50,9 @@ from repro.core import schedule as sched
 from repro.core.capacity import CapacityEstimator
 from repro.core.partition import PartitionResult, uniform_partition
 from repro.core.redistribution import RedistributionPlan
-from repro.core.stash import tree_mean
-from repro.optim.sgd import sgd_init, sgd_update
 from repro.runtime import protocol
 from repro.runtime.devices import DeviceSpec, WorkloadProfile, uniform_bandwidth
+from repro.runtime.stage_executor import ChainLayout, StageExecutor
 from repro.runtime.transport import FaultSpec, Heartbeat, Transport
 from repro.runtime.workload import LayerChain
 
@@ -73,17 +76,21 @@ class VerticalSyncStash:
     (``schedule.stash_depth``) counts concurrently TRAINING versions
     (distinct versions among in-flight batches), which this stash also
     respects (see tests/test_live_runtime.py).
+
+    The stashed value is opaque to the ring — the live runtime stores each
+    version as one packed flat f32 buffer (``runtime/stage_executor``), so
+    a version snapshot is a single array reference, not a pytree copy.
     """
 
-    def __init__(self, slice_params: dict, version: int = 0):
-        self.versions: dict[int, dict] = {version: slice_params}
+    def __init__(self, slice_params: Any, version: int = 0):
+        self.versions: dict[int, Any] = {version: slice_params}
         self.newest_v = version
         self.high_water = 1
 
-    def newest(self) -> dict:
+    def newest(self) -> Any:
         return self.versions[self.newest_v]
 
-    def get(self, version: int) -> dict:
+    def get(self, version: int) -> Any:
         """Exact, else nearest OLDER (PipeDream: never a newer one), else
         the oldest available (post-drain resume semantics)."""
         if version in self.versions:
@@ -93,7 +100,7 @@ class VerticalSyncStash:
             return self.versions[max(older)]
         return self.versions[min(self.versions)]
 
-    def push(self, version: int, slice_params: dict) -> None:
+    def push(self, version: int, slice_params: Any) -> None:
         self.versions[version] = slice_params
         self.newest_v = max(self.newest_v, version)
         self.high_water = max(self.high_water, len(self.versions))
@@ -133,6 +140,10 @@ class LiveConfig:
     fault: Optional[FaultSpec] = None
     segment_timeout: float = 120.0
     profile_repeats: int = 2
+    compiled: bool = True        # jitted fused StageExecutor hot path; False
+    #                              keeps the legacy eager vjp + sgd_update
+    wire_codec: bool = False     # round-trip every payload through codec.py
+    interpret: Optional[bool] = None   # Pallas interpret (None = autodetect)
 
 
 @dataclasses.dataclass
@@ -158,7 +169,7 @@ class Worker(threading.Thread):
 
     def __init__(self, dev: int, chain: LayerChain, data_fn, transport,
                  cfg: LiveConfig, abort_event: threading.Event,
-                 spec: DeviceSpec, global_store=None):
+                 spec: DeviceSpec, layout: ChainLayout, global_store=None):
         super().__init__(daemon=True, name=f"worker-{dev}")
         self.dev = dev
         self.chain = chain
@@ -167,17 +178,21 @@ class Worker(threading.Thread):
         self.cfg = cfg
         self.abort_event = abort_event
         self.spec = spec
+        self.layout = layout                   # shared packed-buffer layout
         self.global_store = global_store       # central worker only
         self.stop_event = threading.Event()
         self.hb = Heartbeat(transport, dev, COORD, cfg.heartbeat_interval)
         self.stash: Optional[VerticalSyncStash] = None
-        self.opt: dict[int, Any] = {}          # layer -> sgd state
-        self.replicas: dict[int, tuple[int, Any]] = {}   # chain replicas
+        self.slice_layout = None               # SliceLayout of layer_range
+        self.mom_buf = None                    # packed momentum, slice-sized
+        self.replicas: dict[int, tuple[int, Any]] = {}   # j -> (batch, flat)
         self.backwards_done = 0
         self._seg_id = -1
         self._req_seq = 0        # monotonic: stale fetch_res never matches
+        self._execs: dict[tuple, StageExecutor] = {}
         self._acts: dict[int, Any] = {}
         self._grads: dict[int, Any] = {}
+        self._fwd_ctx: dict[int, tuple] = {}   # batch -> (version buf, x)
         self._fetch_res: dict[int, dict] = {}
         # pre-refit snapshot: peers' redistribution plans reference the OLD
         # partition, so fetches must be served from it even after this
@@ -186,19 +201,40 @@ class Worker(threading.Thread):
 
     # ----------------------------- lifecycle -----------------------------
 
-    def install(self, layer_range: tuple[int, int], params: dict,
+    def install(self, layer_range: tuple[int, int], flats: dict,
                 version: int = 0) -> None:
-        """Install a layer slice (startup or redistribution commit)."""
+        """Install a layer slice (startup or redistribution commit).
+
+        ``flats`` maps each layer in range to its packed flat f32 weights
+        (the wire/replica currency). Momentum is preserved per layer across
+        re-partitions; layers new to this worker start at zero."""
         a, e = layer_range
+        old_mom: dict[int, Any] = {}
+        if self.slice_layout is not None and self.mom_buf is not None:
+            old_mom = {j: self.slice_layout.view(self.mom_buf, j)
+                       for j in self.slice_layout.layer_ids}
         self.layer_range = (a, e)
-        for j in range(a, e + 1):
-            if j not in self.opt:
-                self.opt[j] = sgd_init(params[j])
-        self.opt = {j: s for j, s in self.opt.items() if a <= j <= e}
+        self.slice_layout = self.layout.slice(a, e)
+        buf = self.slice_layout.pack(flats)
+        self.mom_buf = self.slice_layout.pack(
+            {j: old_mom.get(j, np.zeros(self.layout.layer_size(j),
+                                        np.float32))
+             for j in range(a, e + 1)})
         if self.stash is None:
-            self.stash = VerticalSyncStash(dict(params), version)
+            self.stash = VerticalSyncStash(buf, version)
         else:
-            self.stash.reset(dict(params), version)
+            self.stash.reset(buf, version)
+
+    def _executor(self, last: bool) -> StageExecutor:
+        """Per (slice, role) compiled executor; rebuilt only on refit."""
+        key = (self.layer_range, last)
+        if key not in self._execs:
+            self._execs[key] = StageExecutor(
+                self.chain, self.slice_layout, last=last, lr=self.cfg.lr,
+                momentum=self.cfg.momentum,
+                weight_decay=self.cfg.weight_decay,
+                compiled=self.cfg.compiled, interpret=self.cfg.interpret)
+        return self._execs[key]
 
     def crash(self) -> None:
         """Simulated device death: stops compute AND connectivity."""
@@ -273,16 +309,11 @@ class Worker(threading.Thread):
         self._seg_id = spec["seg_id"]
         self._acts.clear()
         self._grads.clear()
+        self._fwd_ctx.clear()
         self._pre_refit = {}          # redistribution is over once we train
-        a, e = self.layer_range
-        layer_ids = list(range(a, e + 1))
         last = stage == n - 1
+        ex = self._executor(last)
         cap = self.spec.capacity if self.cfg.emulate_capacity else 1.0
-
-        def stage_forward(plist, x):
-            for j, p in zip(layer_ids, plist):
-                x = self.chain.apply_layer(j, p, x)
-            return x
 
         ops = list(sched.stage_schedule(stage, n, nb))
         # for retention pruning: next fwd batch at-or-after each op index
@@ -291,7 +322,6 @@ class Worker(threading.Thread):
             next_fwd[idx] = (b0 + ops[idx].batch if ops[idx].kind == "fwd"
                              else next_fwd[idx + 1])
 
-        residuals: dict[int, Any] = {}
         batch_times: dict[int, float] = {}     # fwd+bwd wall time per batch
         busy, done_ops = 0.0, 0
         for idx, op in enumerate(ops):
@@ -306,21 +336,20 @@ class Worker(threading.Thread):
                     if x is None:
                         break
                 ver = sched.version_for_batch(gb, n)
-                plist = [self.stash.get(ver)[j] for j in layer_ids]
+                ver_buf = self.stash.get(ver)
                 t0 = time.perf_counter()
                 if last:
-                    batch = self.data_fn(gb)
-                    loss, vjp = jax.vjp(
-                        lambda ps, xx: self.chain.loss(stage_forward(ps, xx),
-                                                       batch), plist, x)
+                    loss = ex.forward(ver_buf, x, self.data_fn(gb))
                     jax.block_until_ready(loss)
-                    residuals[op.batch] = vjp
                     self.transport.send(self.dev, COORD, "loss",
                                         (gb, float(loss)))
                 else:
-                    y, vjp = jax.vjp(stage_forward, plist, x)
+                    y = ex.forward(ver_buf, x)
                     jax.block_until_ready(y)
-                    residuals[op.batch] = vjp
+                # the backward recomputes the forward from exactly this
+                # (version buffer, input) pair — same residuals the old
+                # vjp-closure path kept alive, without storing them
+                self._fwd_ctx[op.batch] = (ver_buf, x)
                 dt = time.perf_counter() - t0
                 if cap > 1.0:
                     time.sleep(dt * (cap - 1.0))
@@ -332,24 +361,19 @@ class Worker(threading.Thread):
                                         (self._seg_id, op.batch, y))
             else:
                 if last:
-                    ct = jnp.float32(1.0)
+                    ct = None
                 else:
                     ct = self._await(self._grads, op.batch)
                     if ct is None:
                         break
                 t0 = time.perf_counter()
-                g_params, g_x = residuals.pop(op.batch)(ct)
-                newest = self.stash.newest()
-                new_slice = dict(newest)
-                for j, gp in zip(layer_ids, g_params):
-                    p_new, self.opt[j] = sgd_update(
-                        newest[j], gp, self.opt[j], lr=self.cfg.lr,
-                        momentum=self.cfg.momentum,
-                        weight_decay=self.cfg.weight_decay)
-                    new_slice[j] = p_new
-                jax.block_until_ready(new_slice)
+                ver_buf, x = self._fwd_ctx.pop(op.batch)
+                g_x, new_buf, self.mom_buf = ex.step(
+                    ver_buf, self.stash.newest(), self.mom_buf, x, ct,
+                    self.data_fn(gb) if last else None)
+                jax.block_until_ready(new_buf)
                 self.stash.push(max(gb + 1, self.stash.newest_v + 1),
-                                new_slice)
+                                new_buf)
                 self.backwards_done += 1
                 dt = time.perf_counter() - t0
                 if cap > 1.0:
@@ -361,9 +385,11 @@ class Worker(threading.Thread):
                         and self.backwards_done % sched.aggregation_interval(
                             stage, n, self.cfg.aggregate_every) == 0):
                     # paper §III-C: average the live concurrent versions and
-                    # bump the counter (the Fig. 2 ver-3 -> ver-4 jump)
-                    mean = tree_mean([self.stash.versions[v]
-                                      for v in sorted(self.stash.versions)])
+                    # bump the counter (the Fig. 2 ver-3 -> ver-4 jump) —
+                    # on packed buffers this is one stacked mean
+                    mean = jnp.mean(jnp.stack(
+                        [self.stash.versions[v]
+                         for v in sorted(self.stash.versions)]), axis=0)
                     self.stash.push(self.stash.newest_v + 1, mean)
                 if stage > 0:
                     self.transport.send(self.dev, devs[stage - 1], "grad",
@@ -389,8 +415,11 @@ class Worker(threading.Thread):
     # --------------------------- control plane ---------------------------
 
     def _snapshot(self) -> dict:
+        """Newest weights as {layer -> packed flat f32}: cheap slices of the
+        packed buffer, keyed by layer offset — no pytree traversal."""
         newest = self.stash.newest()
-        return {j: jax.tree.map(lambda x: x, p) for j, p in newest.items()}
+        return {j: self.slice_layout.view(newest, j)
+                for j in self.slice_layout.layer_ids}
 
     def _do_replicate(self, spec: dict):
         snap = self._snapshot()
@@ -409,12 +438,12 @@ class Worker(threading.Thread):
 
     def _serve_fetch(self, msg):
         layers_out = {}
-        newest = self.stash.newest() if self.stash else {}
+        held = self._snapshot() if self.stash is not None else {}
         for j in msg.payload["layers"]:
             if j in self._pre_refit:
                 layers_out[j] = self._pre_refit[j]
-            elif j in newest:
-                layers_out[j] = newest[j]
+            elif j in held:
+                layers_out[j] = held[j]
             elif j in self.replicas:
                 layers_out[j] = self.replicas[j][1]
             elif self.global_store is not None and self.global_store.has(j):
@@ -443,12 +472,12 @@ class Worker(threading.Thread):
         weights + fetches per the redistribution plan, then ACK ready."""
         a, e = spec["range"]
         devs = spec["stage_devs"]
-        newest = self.stash.newest()
-        self._pre_refit = dict(newest)
+        held = self._snapshot()
+        self._pre_refit = dict(held)
         self._fetch_res.clear()     # drop any stale replies from a past refit
         new_params: dict[int, Any] = {}
         for j in spec["local"]:
-            new_params[j] = newest[j]
+            new_params[j] = held[j]
         pending: dict[int, list[int]] = {}
         for target, layers in spec["need"].items():
             dev_t = devs[target]
@@ -511,15 +540,17 @@ class Coordinator:
         assert len(self.specs) == N
         self.bandwidth = (cfg.bandwidth if cfg.bandwidth is not None
                           else uniform_bandwidth(N))
-        self.transport = transport or Transport(cfg.fault)
+        self.transport = transport or Transport(cfg.fault,
+                                                codec=cfg.wire_codec)
         self.transport.register(COORD)
         for dev in range(N):
             self.transport.register(dev)
+        self.layout = chain.flat_layout()
         self.global_store = LayerReplicaStore()
         self.abort_event = threading.Event()
         self.workers = [
             Worker(dev, chain, data_fn, self.transport, cfg,
-                   self.abort_event, self.specs[dev],
+                   self.abort_event, self.specs[dev], self.layout,
                    global_store=self.global_store if dev == 0 else None)
             for dev in range(N)]
         self.events: list = []
@@ -573,8 +604,8 @@ class Coordinator:
                 self.losses[gb] = v
             self.loss_log.append((gb, v))
         elif msg.kind == "global_put":
-            for j, p in msg.payload["layers"].items():
-                self.global_store.put(j, msg.payload["batch"], p)
+            self.global_store.put_many(msg.payload["batch"],
+                                       msg.payload["layers"])
         elif msg.kind == "hb":
             self._last_hb[msg.src] = time.monotonic()
         elif msg.kind == "seg_done":
@@ -724,7 +755,8 @@ class Coordinator:
         for i, dev in enumerate(worker_ids):
             a, e = part.ranges[i]
             self.workers[dev].install(
-                (a, e), {j: self.chain.params[j] for j in range(a, e + 1)})
+                (a, e), {j: self.layout.pack_layer(j, self.chain.params[j])
+                         for j in range(a, e + 1)})
         for w in self.workers:
             w.start()
         try:
@@ -816,22 +848,33 @@ class Coordinator:
                 continue
 
             # ---- capacity samples (Eqs. 1-3) ----------------------------
+            # Eq. 1 is a ratio against the central node's CURRENT speed.
+            # The startup profile times layers eagerly, but the compiled
+            # StageExecutor runs far faster than that, so raw
+            # measured/profile ratios would make every worker look fast
+            # relative to a central pinned at C_0 = 1. Calibrate by the
+            # central worker's own measured-vs-profile factor (the spec
+            # branch normalizes by c0 the same way).
+            def _median_bt(dev):
+                stats = info[dev]
+                # median per-batch time: robust to first-call tracing
+                # and thread-scheduling spikes
+                bt = stats.get("batch_times") or [
+                    stats["busy"] / max(stats["nb"], 1)]
+                return float(np.median(bt))
+
+            a0, e0 = part.ranges[0]
+            ref0 = float(np.sum(profile.exec_times[a0:e0 + 1]))
+            kappa = _median_bt(worker_ids[0]) / max(ref0, 1e-12)
             for i, dev in enumerate(worker_ids):
                 a, e = part.ranges[i]
                 if cfg.capacity_source == "spec":
-                    # Eq. 1 is a ratio against the central node's current
-                    # speed, so normalize by the central device's capacity
                     c0 = self.specs[worker_ids[0]].capacity_at(b0)
                     meas = float(np.sum(profile.exec_times[a:e + 1])
                                  * self.specs[dev].capacity_at(b0)
                                  / max(c0, 1e-12))
                 else:
-                    stats = info[dev]
-                    # median per-batch time: robust to first-call tracing
-                    # and thread-scheduling spikes
-                    bt = stats.get("batch_times") or [
-                        stats["busy"] / max(stats["nb"], 1)]
-                    meas = float(np.median(bt))
+                    meas = _median_bt(dev) / max(kappa, 1e-12)
                 est.update(i, meas, a, e)
             state.committed_forward_id = nxt - 1
             state.committed_backward_id = nxt - 1

@@ -1,0 +1,223 @@
+"""Compiled per-stage hot path for the live FTPipeHD runtime.
+
+The live runtime's unit of work is a contiguous layer slice. This module
+gives each slice ONE packed representation and ONE compiled step:
+
+``ChainLayout``
+    Per-layer flat-buffer layout for a whole ``runtime/workload.LayerChain``
+    (leaf treedefs/shapes/dtypes + sizes), built on the flatten helpers of
+    ``kernels/fused_sgd/ops.py``. Every node in the cluster can derive the
+    layout from the model definition alone, so a layer's weights travel the
+    wire as a bare flat f32 array keyed by layer id.
+
+``SliceLayout``
+    A contiguous [a, e] window of a ``ChainLayout``: the slice's parameters
+    (and momentum) live in one flat f32 buffer, and layer ``j``'s weights
+    are the cheap array slice ``buffer[offset(j):offset(j)+size(j)]`` — the
+    currency of vertical-sync stash copies, §III-E replication snapshots and
+    §III-F redistribution fetches.
+
+``StageExecutor``
+    The compiled hot path: a jitted ``forward`` (activation, or loss at the
+    last stage) and a jitted fused ``step`` that recomputes the forward
+    under the batch's vertical-sync weight version, runs the backward, and
+    applies the SGD+momentum+weight-decay update through the
+    ``kernels/fused_sgd`` Pallas kernel — one compiled call per backward
+    instead of an op-by-op ``jax.vjp`` + pytree update retraced every step.
+    Gradients come out of the VJP already packed (the forward reads weights
+    from the flat buffer, so d(loss)/d(buffer) IS the flat gradient).
+    Recomputing the forward from the stored (version-buffer, input) pair
+    reproduces the residuals the uncompiled path kept alive as a vjp
+    closure, so vertical-sync semantics are bit-for-bit preserved. The
+    momentum buffer is donated to the step on backends that support
+    donation; the parameter buffers are not (the stash retains them).
+    ``compiled=False`` keeps the legacy per-layer ``jax.vjp`` +
+    ``optim/sgd.sgd_update`` path (same packed interface) as a reference
+    and benchmark baseline.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.fused_sgd.ops import (default_interpret, fused_sgd,
+                                         pack_leaves, pallas_native_backend,
+                                         unpack_leaves)
+from repro.optim.sgd import sgd_update
+
+
+# ============================ packed layouts =============================
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """Flat-buffer layout of one layer's parameter pytree."""
+    treedef: Any
+    shapes: tuple
+    dtypes: tuple
+    size: int                    # total elements across leaves
+
+
+class ChainLayout:
+    """Per-layer packed layout for a whole layer chain."""
+
+    def __init__(self, layers: list[LayerSpec]):
+        self.layers = layers
+
+    @classmethod
+    def of_params(cls, params: list) -> "ChainLayout":
+        specs = []
+        for p in params:
+            leaves, treedef = jax.tree.flatten(p)
+            shapes = tuple(l.shape for l in leaves)
+            dtypes = tuple(l.dtype for l in leaves)
+            size = int(sum(np.prod(s, dtype=np.int64) if s else 1
+                           for s in shapes))
+            specs.append(LayerSpec(treedef, shapes, dtypes, size))
+        return cls(specs)
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.layers)
+
+    def layer_size(self, j: int) -> int:
+        return self.layers[j].size
+
+    def layer_nbytes(self, j: int) -> int:
+        return 4 * self.layers[j].size          # packed f32 on the wire
+
+    def pack_layer(self, j: int, pytree) -> jax.Array:
+        """Layer pytree -> flat f32 [size(j)]."""
+        return pack_leaves(jax.tree.leaves(pytree))
+
+    def unpack_layer(self, j: int, flat) -> Any:
+        """Flat f32 [size(j)] -> layer pytree (original shapes/dtypes)."""
+        spec = self.layers[j]
+        leaves = unpack_leaves(jnp.asarray(flat), spec.shapes, spec.dtypes)
+        return jax.tree.unflatten(spec.treedef, leaves)
+
+    def slice(self, a: int, e: int) -> "SliceLayout":
+        return SliceLayout(self, a, e)
+
+
+class SliceLayout:
+    """Flat-buffer layout of the contiguous layer window [a, e]."""
+
+    def __init__(self, chain_layout: ChainLayout, a: int, e: int):
+        self.chain_layout = chain_layout
+        self.a, self.e = a, e
+        self.offsets: dict[int, int] = {}
+        off = 0
+        for j in range(a, e + 1):
+            self.offsets[j] = off
+            off += chain_layout.layer_size(j)
+        self.size = off
+
+    @property
+    def layer_ids(self) -> list[int]:
+        return list(range(self.a, self.e + 1))
+
+    def view(self, buffer, j: int) -> jax.Array:
+        """Layer ``j``'s flat weights: a cheap slice of the packed buffer."""
+        off = self.offsets[j]
+        return buffer[off:off + self.chain_layout.layer_size(j)]
+
+    def pack(self, flats: dict[int, Any]) -> jax.Array:
+        """{layer -> flat f32} covering [a, e] -> one packed buffer."""
+        return jnp.concatenate(
+            [jnp.ravel(jnp.asarray(flats[j])).astype(jnp.float32)
+             for j in self.layer_ids]) if self.layer_ids else jnp.zeros((0,))
+
+    def unpack_layer(self, buffer, j: int) -> Any:
+        return self.chain_layout.unpack_layer(j, self.view(buffer, j))
+
+    def unpack(self, buffer) -> dict[int, Any]:
+        return {j: self.unpack_layer(buffer, j) for j in self.layer_ids}
+
+    def zeros(self) -> jax.Array:
+        return jnp.zeros((self.size,), jnp.float32)
+
+
+# ============================ stage executor =============================
+
+class StageExecutor:
+    """Fused fwd/bwd/update for one stage slice on packed flat buffers.
+
+    ``forward(buf, x, batch=None)``
+        activation ``y`` (mid stage) or scalar loss (last stage).
+    ``step(fwd_buf, new_buf, mom_buf, x, ct=None, batch=None)``
+        -> ``(dx, new_buf', mom_buf')``: recompute forward under
+        ``fwd_buf`` (the batch's vertical-sync version), backward with
+        cotangent ``ct`` (1.0 at the last stage), fused SGD update applied
+        to ``new_buf`` (the newest version) — the exact update order of the
+        uncompiled path.
+    """
+
+    def __init__(self, chain, slice_layout: SliceLayout, *, last: bool,
+                 lr: float, momentum: float = 0.9,
+                 weight_decay: float = 4e-5, compiled: bool = True,
+                 interpret: Optional[bool] = None):
+        self.slice = slice_layout
+        self.last = last
+        self.compiled = compiled
+        ids = slice_layout.layer_ids
+        if interpret is None:
+            interpret = default_interpret()
+
+        def fwd_out(buf, x, batch):
+            for j in ids:
+                x = chain.apply_layer(j, slice_layout.unpack_layer(buf, j), x)
+            return chain.loss(x, batch) if last else x
+
+        def step_fn(fwd_buf, new_buf, mom_buf, x, ct, batch):
+            out, vjp = jax.vjp(lambda b, xx: fwd_out(b, xx, batch),
+                               fwd_buf, x)
+            g_buf, dx = vjp(jnp.ones_like(out) if last else ct)
+            p_new, m_new = fused_sgd(new_buf, g_buf, mom_buf, lr=lr,
+                                     momentum=momentum,
+                                     weight_decay=weight_decay,
+                                     interpret=interpret)
+            return dx, p_new, m_new
+
+        def step_ref(fwd_buf, new_buf, mom_buf, x, ct, batch):
+            # legacy hot path: eager per-layer vjp + pytree sgd_update
+            plist = [slice_layout.unpack_layer(fwd_buf, j) for j in ids]
+
+            def sf(ps, xx):
+                for j, p in zip(ids, ps):
+                    xx = chain.apply_layer(j, p, xx)
+                return chain.loss(xx, batch) if last else xx
+
+            out, vjp = jax.vjp(sf, plist, x)
+            g_params, dx = vjp(jnp.ones_like(out) if last else ct)
+            new_flats, mom_flats = {}, {}
+            for j, gp in zip(ids, g_params):
+                p = slice_layout.unpack_layer(new_buf, j)
+                m = slice_layout.unpack_layer(mom_buf, j)
+                p_new, st = sgd_update(p, gp, {"momentum": m}, lr=lr,
+                                       momentum=momentum,
+                                       weight_decay=weight_decay)
+                new_flats[j] = pack_leaves(jax.tree.leaves(p_new))
+                mom_flats[j] = pack_leaves(jax.tree.leaves(st["momentum"]))
+            return (dx, slice_layout.pack(new_flats),
+                    slice_layout.pack(mom_flats))
+
+        if compiled:
+            # donate the momentum buffer (consumed every step); parameter
+            # buffers stay live in the vertical-sync stash. CPU ignores
+            # donation (with a warning), so only donate where it works.
+            donate = (2,) if pallas_native_backend() else ()
+            self._forward = jax.jit(fwd_out)
+            self._step = jax.jit(step_fn, donate_argnums=donate)
+        else:
+            self._forward = fwd_out
+            self._step = step_ref
+
+    def forward(self, buf, x, batch=None):
+        return self._forward(buf, x, batch)
+
+    def step(self, fwd_buf, new_buf, mom_buf, x, ct=None, batch=None):
+        return self._step(fwd_buf, new_buf, mom_buf, x, ct, batch)

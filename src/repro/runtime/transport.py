@@ -13,6 +13,13 @@ injectable so the fault-tolerance protocol can be exercised for real:
 The transport models *reachability*, not bandwidth: link speeds enter the
 protocol through the coordinator's bandwidth matrix (what the paper's
 central node measures), exactly as in ``runtime/simulator.py``.
+
+With ``codec=True`` every payload round-trips through the wire format of
+``runtime/codec.py`` (encode to ``bytes`` at send, decode at deliver), so
+the in-process queue behaves like a socket: receivers get a fresh
+deserialized copy (no shared references), anything unserializable fails
+loudly at the sender, and ``stats["bytes"]`` counts exact wire bytes
+instead of the array-leaf estimate.
 """
 from __future__ import annotations
 
@@ -22,6 +29,8 @@ import random
 import threading
 import time
 from typing import Any, Optional
+
+from repro.runtime import codec as wire
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,8 +71,10 @@ def payload_bytes(payload: Any) -> int:
 
 
 class Transport:
-    def __init__(self, fault: Optional[FaultSpec] = None):
+    def __init__(self, fault: Optional[FaultSpec] = None,
+                 codec: bool = False):
         self.fault = fault or FaultSpec()
+        self.codec = codec
         self._rng = random.Random(self.fault.seed)
         self._inboxes: dict[int, queue.Queue] = {}
         self._dead: set[int] = set()
@@ -116,9 +127,14 @@ class Transport:
             inbox = self._inboxes.get(dst)
         if inbox is None:
             return False
+        if self.codec:
+            data = wire.encode(kind, payload)
+            nbytes = len(data)
+            kind, payload = wire.decode(data)
+        else:
+            nbytes = payload_bytes(payload)
         msg = Message(src=src, dst=dst, kind=kind, payload=payload,
                       sent_at=time.monotonic())
-        nbytes = payload_bytes(payload)
 
         def _account():
             with self._lock:

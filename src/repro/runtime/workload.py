@@ -35,10 +35,34 @@ class LayerChain:
     apply_layer: Callable[[int, Any, Any], Any]     # (layer_idx, p, x) -> x
     loss: Callable[[Any, Any], Any]                 # (y_last, batch) -> scalar
     input_of: Callable[[dict], Any]                 # batch -> x0 (stage 0)
+    _layout: Any = dataclasses.field(default=None, repr=False)
 
     @property
     def num_layers(self) -> int:
         return len(self.params)
+
+    # ----------------------- packed flat views ---------------------------
+
+    def flat_layout(self):
+        """Packed-buffer layout of this chain (cached ``ChainLayout``) —
+        derivable from the model definition alone, so every node agrees on
+        it without exchanging metadata."""
+        if self._layout is None:
+            from repro.runtime.stage_executor import ChainLayout
+            self._layout = ChainLayout.of_params(self.params)
+        return self._layout
+
+    def flat_params(self, a: int = 0, e: int | None = None) -> dict:
+        """{layer -> packed flat f32 weights} for layers [a, e]."""
+        e = self.num_layers - 1 if e is None else e
+        lay = self.flat_layout()
+        return {j: lay.pack_layer(j, self.params[j]) for j in range(a, e + 1)}
+
+    def flat_slice(self, a: int, e: int):
+        """(SliceLayout, packed buffer) for the contiguous window [a, e] —
+        the representation a live-runtime stage trains on."""
+        lay = self.flat_layout().slice(a, e)
+        return lay, lay.pack(self.flat_params(a, e))
 
     # ------------------- sequential oracle (no pipeline) -----------------
 

@@ -116,6 +116,15 @@ class TestLayerReplicaStore:
         st.put(2, 1, "c")
         assert st.covers(3)
 
+    def test_put_many_and_nbytes_on_packed_buffers(self):
+        st = LayerReplicaStore()
+        st.put_many(4, {0: np.zeros(10, np.float32),
+                        1: np.zeros(6, np.float32)})
+        assert st.batches() == {0: 4, 1: 4}
+        assert st.nbytes() == 4 * (10 + 6)
+        st.put_many(2, {0: np.zeros(99, np.float32)})   # stale: ignored
+        assert st.get(0)[0] == 4 and st.nbytes() == 4 * (10 + 6)
+
 
 class TestTransport:
     def test_kill_isolates_node(self):
@@ -173,6 +182,38 @@ def test_steady_state_matches_async_semantics_oracle():
         lr=lr, momentum=0.0, weight_decay=0.0))
     np.testing.assert_allclose(res.losses, np.asarray(ref_losses),
                                rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.live
+def test_compiled_and_uncompiled_hot_paths_agree():
+    """The jitted fused StageExecutor step (fwd recompute + bwd +
+    kernels/fused_sgd update in one compiled call) reproduces the legacy
+    eager vjp + sgd_update path batch-for-batch, momentum and weight decay
+    on — the whole pipeline, not just one stage."""
+    chain, data = _chain_and_data()
+    B = 14
+    kw = dict(num_workers=3, num_batches=B, protocol=_quiet_protocol(),
+              lr=0.1, momentum=0.9, weight_decay=4e-5)
+    fused = run_live_training(chain, data, LiveConfig(compiled=True, **kw))
+    chain2, data2 = _chain_and_data()
+    eager = run_live_training(chain2, data2, LiveConfig(compiled=False, **kw))
+    np.testing.assert_allclose(fused.losses, eager.losses, rtol=1e-4,
+                               atol=1e-5)
+
+
+@pytest.mark.live
+def test_aggregation_cadence_trains_on_packed_buffers():
+    """§III-C weight aggregation (version-mean + counter bump) on the
+    packed representation: training completes and losses drop. (Aggregation
+    pushes mean versions ahead of what forwards pin, so the n+1
+    vertical-sync retention bound intentionally does not apply here.)"""
+    chain, data = _chain_and_data()
+    res = run_live_training(chain, data, LiveConfig(
+        num_workers=3, num_batches=18, protocol=_quiet_protocol(),
+        lr=0.1, aggregate_every=4))
+    assert not np.isnan(res.losses).any()
+    assert float(np.median(res.losses[-5:])) \
+        < 0.8 * float(np.median(res.losses[:3]))
 
 
 @pytest.mark.live
