@@ -1,6 +1,8 @@
 """Live hot-path throughput: compiled fused StageExecutor step vs the
-legacy eager ``jax.vjp`` + ``optim/sgd.sgd_update`` path, plus §III-F
-recovery wall time on the live runtime for both.
+legacy eager ``jax.vjp`` + ``optim/sgd.sgd_update`` path, §III-F recovery
+wall time on the live runtime for both, and wire throughput of the two
+transports (in-memory queue with codec vs real TCP sockets over
+localhost, ``runtime/net.py``) on activation-sized messages.
 
 Reports steps/sec for one stage's fwd+bwd+update cycle (the unit the 1F1B
 schedule repeats) and the kill->recovered wall time, and writes
@@ -76,6 +78,55 @@ def _recovery_time_s(compiled: bool, quick: bool) -> float:
     return t_rec - t_kill
 
 
+def _wire_throughput(transport_kind: str, msgs: int, payload_kb: int,
+                     window: int = 16):
+    """(msgs/s, MB/s) shipping activation-sized payloads node 0 -> node 1
+    with a bounded in-flight window, receiver draining concurrently. For
+    "queue" this is the in-process transport with the codec on (bytes are
+    encoded/decoded but never cross a process boundary); for "tcp" the
+    same frames cross two real localhost sockets (runtime/net.py)."""
+    import numpy as np
+
+    payload = (0, 0, np.zeros(payload_kb * 256, np.float32))  # 1KB = 256 f32
+    if transport_kind == "queue":
+        from repro.runtime.transport import Transport
+        t = Transport(codec=True)
+        t.register(0)
+        t.register(1)
+        send_t = recv_t = t
+        closers = []
+    else:
+        from repro.runtime.net import SocketTransport, cluster_addresses
+        addr_of = cluster_addresses(2)
+        send_t = SocketTransport(addr_of, local=(0,))
+        recv_t = SocketTransport(addr_of, local=(1,))
+        closers = [send_t, recv_t]
+    try:
+        def _recv_one(got):
+            for _ in range(6):                      # bounded: ~30s worst case
+                if recv_t.recv(1, timeout=5.0) is not None:
+                    return
+            raise RuntimeError(f"wire bench lost messages: "
+                               f"{got}/{msgs} received")
+
+        got = 0
+        t0 = time.perf_counter()
+        for i in range(msgs):
+            send_t.send(0, 1, "act", payload)
+            if i - got >= window:
+                _recv_one(got)
+                got += 1
+        while got < msgs:
+            _recv_one(got)
+            got += 1
+        dt = time.perf_counter() - t0
+    finally:
+        for c in closers:
+            c.close()
+    wire_bytes = recv_t.stats["bytes"]
+    return msgs / dt, wire_bytes / dt / 1e6
+
+
 def run(quick: bool = False):
     import jax
 
@@ -91,6 +142,10 @@ def run(quick: bool = False):
                                   compiled=c)
            for c in (True, False)}
     rec = {c: _recovery_time_s(c, quick) for c in (True, False)}
+    wire_msgs = 300 if quick else 2000
+    payload_kb = 32
+    wire = {k: _wire_throughput(k, wire_msgs, payload_kb)
+            for k in ("queue", "tcp")}
     out = {
         "quick": quick,
         "backend": jax.default_backend(),
@@ -102,6 +157,11 @@ def run(quick: bool = False):
         "compiled_speedup": mid[True] / mid[False],
         "recovery_s_compiled": rec[True],
         "recovery_s_uncompiled": rec[False],
+        "wire_payload_kb": payload_kb,
+        "wire_msgs_per_s_queue": wire["queue"][0],
+        "wire_MBps_queue": wire["queue"][1],
+        "wire_msgs_per_s_tcp": wire["tcp"][0],
+        "wire_MBps_tcp": wire["tcp"][1],
     }
     with open(JSON_PATH, "w") as f:
         json.dump(out, f, indent=2)
@@ -120,6 +180,10 @@ def run(quick: bool = False):
         ("live/recovery_s_compiled", out["recovery_s_compiled"],
          "kill -> recovered wall time"),
         ("live/recovery_s_uncompiled", out["recovery_s_uncompiled"], ""),
+        ("live/wire_MBps_queue", out["wire_MBps_queue"],
+         f"{payload_kb}KB msgs, in-process queue + codec"),
+        ("live/wire_MBps_tcp", out["wire_MBps_tcp"],
+         f"{payload_kb}KB msgs, localhost TCP (runtime/net.py)"),
     ]
 
 

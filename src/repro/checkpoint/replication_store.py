@@ -63,52 +63,107 @@ class ReplicatedCheckpointer:
         return best
 
 
+def _replica_nbytes(params: Any) -> int:
+    leaves = jax.tree.leaves(params)
+    return sum(int(l.nbytes) for l in leaves if hasattr(l, "nbytes"))
+
+
 class LayerReplicaStore:
-    """LAYER-keyed global replica store for the live runtime's central node
-    (``runtime/live.py``). Stage-keyed stores (above) go stale the moment
-    the partition moves; keying by layer makes global replicas survive
-    dynamic re-partition (§III-D) and worker-list renumbering (§III-F) —
-    the redistribution planner's central-fallback target always resolves.
+    """LAYER-keyed replica store for the live runtime (``runtime/live.py``).
+    Stage-keyed stores (above) go stale the moment the partition moves;
+    keying by layer makes replicas survive dynamic re-partition (§III-D)
+    and worker-list renumbering (§III-F) — the redistribution planner's
+    fallback targets always resolve.
 
     Snapshots arrive as packed flat f32 buffers (per-layer slices of a
     stage's contiguous weight buffer, ``runtime/stage_executor``), so a
     replica is one array, its wire size is exact (``nbytes``), and serving
     a §III-F fetch is a reference hand-off, not a pytree copy. The store is
     value-agnostic: legacy pytree snapshots still work.
+
+    Replicas live in named TIERS matching the paper's two replication
+    paths: ``"chain"`` (neighbor copies, §III-E) and ``"global"`` (central
+    store) — ``tier`` defaults to ``"global"`` everywhere, so single-tier
+    callers never see the distinction. A layer snapshotted at the same
+    batch into both tiers is ONE logical replica held twice; ``nbytes()``
+    therefore reports the DEDUPED total (each distinct ``(layer, batch)``
+    snapshot counted once), ``nbytes(tier)`` the exact per-tier bytes, and
+    ``nbytes_report()`` both plus the duplicated remainder. The old
+    behavior — summing tiers blindly — double-counted exactly those
+    shared snapshots (see ``docs/protocol.md``).
     """
 
+    CHAIN = "chain"
+    GLOBAL = "global"
+
     def __init__(self):
-        self._layers: dict[int, tuple[int, Any]] = {}
+        self._tiers: dict[str, dict[int, tuple[int, Any]]] = {}
 
-    def put(self, layer: int, batch: int, params: Any) -> None:
-        """Keep the freshest snapshot per layer."""
-        cur = self._layers.get(layer)
+    def put(self, layer: int, batch: int, params: Any,
+            tier: str = GLOBAL) -> None:
+        """Keep the freshest snapshot per layer within ``tier``."""
+        t = self._tiers.setdefault(tier, {})
+        cur = t.get(layer)
         if cur is None or batch >= cur[0]:
-            self._layers[layer] = (batch, params)
+            t[layer] = (batch, params)
 
-    def put_many(self, batch: int, layers: dict) -> None:
+    def put_many(self, batch: int, layers: dict, tier: str = GLOBAL) -> None:
         """Absorb one replication message ({layer -> packed weights})."""
         for j, p in layers.items():
-            self.put(j, batch, p)
+            self.put(j, batch, p, tier)
 
-    def nbytes(self) -> int:
-        """Total stored replica bytes (exact for packed-buffer snapshots)."""
-        total = 0
-        for _, p in self._layers.values():
-            leaves = jax.tree.leaves(p)
-            total += sum(int(l.nbytes) for l in leaves
-                         if hasattr(l, "nbytes"))
-        return total
+    def nbytes(self, tier: Optional[str] = None) -> int:
+        """Stored replica bytes. With ``tier``: that tier's exact footprint.
+        Without: the deduped logical total — each distinct (layer, batch)
+        snapshot counted once even when both tiers hold it."""
+        if tier is not None:
+            return sum(_replica_nbytes(p)
+                       for _, p in self._tiers.get(tier, {}).values())
+        seen: dict[tuple[int, int], int] = {}
+        for t in self._tiers.values():
+            for layer, (batch, p) in t.items():
+                seen.setdefault((layer, batch), _replica_nbytes(p))
+        return sum(seen.values())
 
-    def has(self, layer: int) -> bool:
-        return layer in self._layers
+    def nbytes_report(self) -> dict:
+        """{"per_tier": {tier -> bytes}, "deduped": int, "duplicated": int}
+        where ``duplicated`` is the bytes a naive sum over tiers would
+        over-report (snapshots present in more than one tier)."""
+        per_tier = {t: self.nbytes(t) for t in self._tiers}
+        deduped = self.nbytes()
+        return {"per_tier": per_tier, "deduped": deduped,
+                "duplicated": sum(per_tier.values()) - deduped}
 
-    def get(self, layer: int) -> Optional[tuple[int, Any]]:
-        return self._layers.get(layer)
+    def has(self, layer: int, tier: Optional[str] = None) -> bool:
+        """Whether any tier (or the given one) holds the layer."""
+        tiers = [self._tiers.get(tier, {})] if tier is not None \
+            else self._tiers.values()
+        return any(layer in t for t in tiers)
 
-    def batches(self) -> dict[int, int]:
-        """layer -> batch id of its stored snapshot."""
-        return {l: b for l, (b, _) in self._layers.items()}
+    def get(self, layer: int,
+            tier: Optional[str] = None) -> Optional[tuple[int, Any]]:
+        """Freshest (batch, params) for the layer across tiers (or within
+        ``tier``); None if absent."""
+        tiers = [self._tiers.get(tier, {})] if tier is not None \
+            else self._tiers.values()
+        best = None
+        for t in tiers:
+            cur = t.get(layer)
+            if cur is not None and (best is None or cur[0] > best[0]):
+                best = cur
+        return best
 
-    def covers(self, num_layers: int) -> bool:
-        return all(l in self._layers for l in range(num_layers))
+    def batches(self, tier: Optional[str] = None) -> dict[int, int]:
+        """layer -> batch id of its freshest stored snapshot."""
+        out: dict[int, int] = {}
+        tiers = [self._tiers.get(tier, {})] if tier is not None \
+            else self._tiers.values()
+        for t in tiers:
+            for layer, (b, _) in t.items():
+                if layer not in out or b > out[layer]:
+                    out[layer] = b
+        return out
+
+    def covers(self, num_layers: int, tier: Optional[str] = None) -> bool:
+        """Every layer 0..num_layers-1 recoverable from the store."""
+        return all(self.has(l, tier) for l in range(num_layers))

@@ -1,23 +1,42 @@
-"""Live multi-worker FTPipeHD training driver (runtime/live.py).
+"""Live multi-worker FTPipeHD training driver (runtime/live.py + net.py).
 
-Spins up a coordinator + N worker threads over the fault-injectable
-transport and trains a real layer chain under the full protocol: 1F1B with
+Trains a real layer chain under the full protocol — 1F1B with
 vertical-sync weight versions, chain/global replication, dynamic
-re-partition, and (optionally) a mid-run worker kill with §III-F recovery.
+re-partition, and (optionally) a mid-run worker kill with §III-F recovery
+— over either transport:
+
+  * ``--transport queue`` (default): coordinator + N worker THREADS in one
+    process over the fault-injectable in-memory transport;
+  * ``--transport tcp``: coordinator + N-1 worker PROCESSES over
+    length-prefixed TCP sockets (``runtime/net.py``); a ``--kill`` here
+    SIGKILLs a real process. Without ``--role`` the driver spawns the
+    whole localhost cluster itself (tests/CI); with ``--role`` it runs ONE
+    process, for real multi-host clusters — start the same command on
+    every host, varying only ``--role``/``--dev``/``--listen``.
 
 Examples:
   PYTHONPATH=src python -m repro.launch.live_train --chain mlp --batches 40
   PYTHONPATH=src python -m repro.launch.live_train --chain mobilenet \
       --workers 3 --batches 30 --kill 1@12
-  PYTHONPATH=src python -m repro.launch.live_train --capacities 1,1,4 \
-      --emulate --batches 60
+  PYTHONPATH=src python -m repro.launch.live_train --transport tcp \
+      --batches 30 --kill 1@12
+  # multi-host (one line per host; 'coord' covers COORD + worker 0):
+  PYTHONPATH=src python -m repro.launch.live_train --transport tcp \
+      --role coordinator --listen 0.0.0.0:9000 \
+      --peers coord=10.0.0.1:9000,1=10.0.0.2:9001,2=10.0.0.3:9002
+  PYTHONPATH=src python -m repro.launch.live_train --transport tcp \
+      --role worker --dev 1 --listen 0.0.0.0:9001 \
+      --peers coord=10.0.0.1:9000,1=10.0.0.2:9001,2=10.0.0.3:9002
 """
 import argparse
 import os
 
 
-def main():
-    ap = argparse.ArgumentParser()
+def build_parser() -> argparse.ArgumentParser:
+    """The CLI surface (also introspected by ``tools/check_docs.py`` to
+    keep the docs' flag listings honest)."""
+    ap = argparse.ArgumentParser(
+        description="Live FTPipeHD training over queue or TCP transport")
     ap.add_argument("--chain", default="mlp", choices=["mlp", "mobilenet"])
     ap.add_argument("--workers", type=int, default=3)
     ap.add_argument("--batches", type=int, default=40)
@@ -27,7 +46,8 @@ def main():
     ap.add_argument("--layers", type=int, default=8,
                     help="mlp chain depth (mobilenet is fixed at 19)")
     ap.add_argument("--kill", default=None, metavar="DEV@BATCH",
-                    help="crash worker DEV when BATCH commits, e.g. 1@12")
+                    help="crash worker DEV when BATCH commits, e.g. 1@12 "
+                         "(a real SIGKILL under --transport tcp)")
     ap.add_argument("--capacities", default=None,
                     help="comma list of per-device capacities (C_i)")
     ap.add_argument("--emulate", action="store_true",
@@ -44,44 +64,31 @@ def main():
                     help="legacy eager vjp + sgd_update hot path (the "
                          "compiled fused StageExecutor is the default)")
     ap.add_argument("--wire-codec", action="store_true",
-                    help="round-trip every transport payload through the "
-                         "bytes wire format (runtime/codec.py)")
-    args = ap.parse_args()
+                    help="queue transport only: round-trip every payload "
+                         "through the bytes wire format (runtime/codec.py); "
+                         "TCP always does")
+    ap.add_argument("--transport", default="queue", choices=["queue", "tcp"],
+                    help="queue = threads in one process; tcp = one OS "
+                         "process per worker over runtime/net.py sockets")
+    ap.add_argument("--role", default=None,
+                    choices=["coordinator", "worker"],
+                    help="tcp only: run ONE process of a multi-host "
+                         "cluster (omit to spawn the whole cluster locally)")
+    ap.add_argument("--dev", type=int, default=None,
+                    help="tcp --role worker: this process's device id")
+    ap.add_argument("--listen", default=None, metavar="HOST:PORT",
+                    help="tcp with --role: address THIS process binds")
+    ap.add_argument("--peers", default=None,
+                    metavar="coord=H:P,1=H:P,...",
+                    help="tcp with --role: every node's address; the "
+                         "'coord' entry covers COORD and worker 0")
+    return ap
 
-    os.environ.setdefault("JAX_PLATFORMS", "cpu")
-    import jax
-    import numpy as np
 
-    from repro.runtime.devices import DeviceSpec
-    from repro.runtime.live import LiveConfig, run_live_training
+def _build_cfg(args, specs, kill):
+    from repro.runtime.live import LiveConfig
     from repro.runtime.protocol import ProtocolConfig
-    from repro.runtime.workload import (classification_batches, mlp_chain,
-                                        mobilenet_chain)
-
-    key = jax.random.PRNGKey(args.seed)
-    if args.chain == "mlp":
-        chain = mlp_chain(key, num_layers=args.layers)
-        batches = classification_batches("mlp", 8, batch=args.batch_size,
-                                         seed=args.seed)
-    else:
-        chain = mobilenet_chain(key)
-        batches = classification_batches("mobilenet", 4,
-                                         batch=args.batch_size,
-                                         seed=args.seed, image_hw=16,
-                                         num_classes=10)
-
-    specs = None
-    if args.capacities:
-        caps = [float(c) for c in args.capacities.split(",")]
-        assert len(caps) == args.workers, (caps, args.workers)
-        specs = [DeviceSpec(f"dev-{i}", c) for i, c in enumerate(caps)]
-
-    kill = None
-    if args.kill:
-        dev, b = args.kill.split("@")
-        kill = (int(dev), int(b))
-
-    cfg = LiveConfig(
+    return LiveConfig(
         num_workers=args.workers, num_batches=args.batches,
         protocol=ProtocolConfig(chain_every=args.chain_every,
                                 global_every=args.global_every,
@@ -93,10 +100,19 @@ def main():
         capacity_source=args.capacity_source,
         aggregate_every=args.aggregate_every,
         compiled=not args.uncompiled, wire_codec=args.wire_codec)
-    res = run_live_training(chain, batches, cfg)
 
+
+def _workload_spec(args):
+    from repro.runtime.workload import WorkloadSpec
+    return WorkloadSpec(kind=args.chain, seed=args.seed,
+                        num_layers=args.layers, batch_size=args.batch_size,
+                        num_data_batches=8 if args.chain == "mlp" else 4)
+
+
+def _report(res, args):
+    import numpy as np
     print(f"live FTPipeHD run: {args.workers} workers, {args.batches} "
-          f"batches, chain={args.chain}, "
+          f"batches, chain={args.chain}, transport={args.transport}, "
           f"hot path={'eager' if args.uncompiled else 'compiled'}"
           f"{', wire codec on' if args.wire_codec else ''}")
     print(f"  loss: {res.losses[0]:.3f} -> {res.losses[-1]:.3f} "
@@ -112,6 +128,69 @@ def main():
     s = res.transport_stats
     print(f"  transport: {s['delivered']} delivered / {s['dropped']} "
           f"dropped / {s['to_dead']} to-dead, {s['bytes'] / 1e6:.2f} MB")
+    if res.worker_exitcodes:
+        print(f"  worker exit codes: {res.worker_exitcodes} "
+              f"(-9 = SIGKILLed by fault injection)")
+
+
+def main():
+    args = build_parser().parse_args()
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    import jax  # noqa: F401  (select platform before any jax usage below)
+
+    from repro.runtime.devices import DeviceSpec
+
+    specs = None
+    if args.capacities:
+        caps = [float(c) for c in args.capacities.split(",")]
+        assert len(caps) == args.workers, (caps, args.workers)
+        specs = [DeviceSpec(f"dev-{i}", c) for i, c in enumerate(caps)]
+
+    kill = None
+    if args.kill:
+        dev, b = args.kill.split("@")
+        kill = (int(dev), int(b))
+
+    cfg = _build_cfg(args, specs, kill)
+    spec = _workload_spec(args)
+
+    if args.transport == "tcp":
+        from repro.runtime import net
+        if args.role == "worker":
+            assert args.dev is not None and args.listen and args.peers, \
+                "--role worker needs --dev, --listen and --peers"
+            addr_of = net.parse_peers(args.peers)
+            host, _, port = args.listen.rpartition(":")
+            addr_of[args.dev] = (host, int(port))
+            net.worker_main(args.dev, addr_of, spec, cfg)
+            return
+        if args.role == "coordinator":
+            assert args.listen and args.peers, \
+                "--role coordinator needs --listen and --peers"
+            from repro.runtime.live import COORD, Coordinator
+            addr_of = net.parse_peers(args.peers)
+            host, _, port = args.listen.rpartition(":")
+            addr_of[COORD] = addr_of[0] = (host, int(port))
+            chain, batches = spec.build()
+            transport = net.SocketTransport(addr_of, local=(COORD, 0),
+                                            fault=cfg.fault)
+            coord = Coordinator(chain, lambda gb: batches[gb % len(batches)],
+                                cfg, transport=transport,
+                                remote_devs=set(range(1, args.workers)))
+            try:
+                res = coord.run()
+            finally:
+                transport.close()
+            _report(res, args)
+            return
+        res = net.run_tcp_training(spec, cfg)
+        _report(res, args)
+        return
+
+    from repro.runtime.live import run_live_training
+    chain, batches = spec.build()
+    res = run_live_training(chain, batches, cfg)
+    _report(res, args)
 
 
 if __name__ == "__main__":

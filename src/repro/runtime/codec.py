@@ -20,6 +20,10 @@ encoded via ``np.asarray`` and decode as NumPy arrays (the consumer's next
 jnp op moves them back on-device); NumPy scalars collapse to Python
 int/float/bool. ``payload_bytes`` in ``runtime/transport.py`` counts array
 bytes only; ``len(encode(...))`` is the exact wire size including framing.
+
+``runtime/net.py`` ships exactly these bytes across process boundaries
+(one message per length-prefixed TCP frame); the full byte-level spec,
+including the frame header, lives in ``docs/protocol.md``.
 """
 from __future__ import annotations
 

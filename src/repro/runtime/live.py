@@ -1,9 +1,12 @@
 """Live multi-worker FTPipeHD runtime: real JAX training over message
 passing, with the paper's full fault-tolerance protocol in the loop.
 
-A ``Coordinator`` (the paper's central node) drives N ``Worker`` threads
-over a queue-based ``runtime/transport.py`` (injectable drop/delay/kill
-faults, optional wire codec). Each worker owns a contiguous slice of a
+A ``Coordinator`` (the paper's central node) drives N ``Worker``s over a
+transport — in-process queues (``runtime/transport.py``: injectable
+drop/delay/kill faults, optional wire codec) with workers as threads, or
+length-prefixed TCP sockets (``runtime/net.py``) with workers as separate
+OS processes, where fault injection SIGKILLs a real process
+(``Coordinator(remote_devs=...)``). Each worker owns a contiguous slice of a
 ``runtime/workload.py`` layer chain, held as ONE packed flat f32 buffer
 (``runtime/stage_executor.py``), and executes REAL per-stage training
 through a jitted fused ``StageExecutor.step`` (forward recompute, backward,
@@ -156,6 +159,9 @@ class LiveResult:
     transport_stats: dict
     stash_high_water: dict                 # device -> max live versions
     recoveries: list                       # [{failed, restart, partition}]
+    worker_exitcodes: dict = dataclasses.field(default_factory=dict)
+    #   dev -> OS exit code, filled by net.run_tcp_training (multi-process
+    #   runs only; a SIGKILLed worker reports -9)
 
     @property
     def final_partition(self) -> tuple:
@@ -169,7 +175,8 @@ class Worker(threading.Thread):
 
     def __init__(self, dev: int, chain: LayerChain, data_fn, transport,
                  cfg: LiveConfig, abort_event: threading.Event,
-                 spec: DeviceSpec, layout: ChainLayout, global_store=None):
+                 spec: DeviceSpec, layout: ChainLayout, global_store=None,
+                 remote: bool = False):
         super().__init__(daemon=True, name=f"worker-{dev}")
         self.dev = dev
         self.chain = chain
@@ -180,15 +187,21 @@ class Worker(threading.Thread):
         self.spec = spec
         self.layout = layout                   # shared packed-buffer layout
         self.global_store = global_store       # central worker only
+        self.remote = remote                   # own-process worker (net.py):
+        #                                        abort arrives as a message,
+        #                                        "die" means SIGKILL yourself
         self.stop_event = threading.Event()
         self.hb = Heartbeat(transport, dev, COORD, cfg.heartbeat_interval)
         self.stash: Optional[VerticalSyncStash] = None
         self.slice_layout = None               # SliceLayout of layer_range
         self.mom_buf = None                    # packed momentum, slice-sized
-        self.replicas: dict[int, tuple[int, Any]] = {}   # j -> (batch, flat)
+        self.replicas = LayerReplicaStore()    # neighbor copies, tier "chain"
         self.backwards_done = 0
         self._seg_id = -1
         self._req_seq = 0        # monotonic: stale fetch_res never matches
+        self._refit_cancel = False   # coordinator abandoned the refit in
+        #                              flight (a holder died): do NOT
+        #                              install, keep the pre-refit state
         self._execs: dict[tuple, StageExecutor] = {}
         self._acts: dict[int, Any] = {}
         self._grads: dict[int, Any] = {}
@@ -242,13 +255,27 @@ class Worker(threading.Thread):
         self.hb.stop()
         self.transport.kill(self.dev)
 
+    def _die(self) -> None:
+        """Injected fatal fault. A remote (own-process) worker SIGKILLs its
+        process — no cleanup, sockets break mid-stream, heartbeats stop —
+        which is the real §III-F trigger. An in-process worker falls back
+        to the simulated crash."""
+        if self.remote:
+            import os
+            import signal
+            os.kill(os.getpid(), signal.SIGKILL)
+        self.crash()
+
     def shutdown(self) -> None:
+        """Cooperative stop (end of run): cease the loop and the beacon."""
         self.stop_event.set()
         self.hb.stop()
 
     # ------------------------------- main --------------------------------
 
     def run(self):
+        """Message loop: react to coordinator commands and peer traffic
+        until a ``stop`` (clean shutdown) or ``die`` (injected crash)."""
         self.hb.start()
         while not self.stop_event.is_set():
             msg = self.transport.recv(self.dev, timeout=self.cfg.poll)
@@ -261,6 +288,8 @@ class Worker(threading.Thread):
                 self._do_replicate(msg.payload)
             elif k in ("repart", "recover"):
                 self._do_refit(msg.payload)
+            elif k == "install":
+                self._do_install(msg.payload)
             elif k == "fetch_req":
                 self._serve_fetch(msg)
             elif k == "chain_put":
@@ -268,6 +297,12 @@ class Worker(threading.Thread):
             elif k == "probe":
                 self.transport.send(self.dev, COORD, "probe_ack",
                                     {"status": "ok"})
+            elif k == "abort":
+                self.abort_event.set()
+            elif k == "refit_abort":
+                self._refit_cancel = True
+            elif k == "die":
+                self._die()
             elif k == "stop":
                 break
         self.hb.stop()
@@ -290,6 +325,12 @@ class Worker(threading.Thread):
             self._serve_fetch(msg)
         elif k == "fetch_res":
             self._fetch_res[msg.payload["req_id"]] = msg.payload["layers"]
+        elif k == "abort":
+            self.abort_event.set()
+        elif k == "refit_abort":
+            self._refit_cancel = True
+        elif k == "die":
+            self._die()
         elif k == "stop":
             self.stop_event.set()
 
@@ -303,6 +344,8 @@ class Worker(threading.Thread):
         return store.pop(key)
 
     def _run_segment(self, spec: dict):
+        if self.remote:      # any past abort is over once new work arrives
+            self.abort_event.clear()
         stage, n = spec["stage"], spec["n"]
         b0, nb = spec["b0"], spec["nb"]
         devs = spec["stage_devs"]
@@ -433,8 +476,8 @@ class Worker(threading.Thread):
                             {"stage": spec["stage"]})
 
     def _store_chain(self, payload: dict):
-        for j, p in payload["layers"].items():
-            self.replicas[j] = (payload["batch"], p)
+        self.replicas.put_many(payload["batch"], payload["layers"],
+                               tier=LayerReplicaStore.CHAIN)
 
     def _serve_fetch(self, msg):
         layers_out = {}
@@ -444,8 +487,8 @@ class Worker(threading.Thread):
                 layers_out[j] = self._pre_refit[j]
             elif j in held:
                 layers_out[j] = held[j]
-            elif j in self.replicas:
-                layers_out[j] = self.replicas[j][1]
+            elif self.replicas.has(j):
+                layers_out[j] = self.replicas.get(j)[1]
             elif self.global_store is not None and self.global_store.has(j):
                 layers_out[j] = self.global_store.get(j)[1]
         self.transport.send(self.dev, msg.src, "fetch_res",
@@ -453,8 +496,15 @@ class Worker(threading.Thread):
                              "layers": layers_out})
 
     def _await_fetches(self, pending: dict, new_params: dict) -> None:
-        """Wait for fetch_res replies (serving peers' requests meanwhile)."""
-        deadline = time.monotonic() + self.cfg.segment_timeout
+        """Wait for fetch_res replies (serving peers' requests meanwhile).
+
+        The deadline is HALF the coordinator's ready-collection window: if
+        a holder is dead, this worker must still get its (global-backstop)
+        ``ready`` out before the coordinator gives up on it — equal
+        timeouts would turn every stalled fetch into a coordinator-side
+        shortfall. An ``abort`` (the coordinator starting failure
+        handling) releases the wait immediately."""
+        deadline = time.monotonic() + 0.5 * self.cfg.segment_timeout
         while pending and time.monotonic() < deadline:
             for rid in [r for r in pending if r in self._fetch_res]:
                 got = self._fetch_res.pop(rid)
@@ -463,28 +513,57 @@ class Worker(threading.Thread):
                         new_params[j] = got[j]
             if not pending:
                 break
+            if self._refit_cancel or self.stop_event.is_set() \
+                    or self.abort_event.is_set():
+                break
             msg = self.transport.recv(self.dev, timeout=self.cfg.poll)
             if msg is not None:
                 self._dispatch(msg)
 
+    def _do_install(self, spec: dict):
+        """Startup install for a remote worker: the coordinator ships the
+        initial slice over the wire (range + per-layer packed weights);
+        ACK with ``ready`` so the control plane can start segment 0."""
+        a, e = spec["range"]
+        self.install((a, e), {int(j): p for j, p in spec["layers"].items()},
+                     version=spec.get("version", 0))
+        self.transport.send(self.dev, COORD, "ready",
+                            {"stage": spec.get("stage", -1), "missing": [],
+                             "version": spec.get("version", 0)})
+
     def _do_refit(self, spec: dict):
         """Re-partition / recovery commit: assemble the new slice from local
-        weights + fetches per the redistribution plan, then ACK ready."""
+        weights + fetches per the redistribution plan, then ACK ready. A
+        ``refit_abort`` received mid-fetch abandons the refit WITHOUT
+        installing (the coordinator found a dead holder and will send a
+        fresh ``recover``; completing from the stale global backstop here
+        would swap in old weights)."""
+        if self.remote:      # the drain this refit follows has completed
+            self.abort_event.clear()
+        self._refit_cancel = False
         a, e = spec["range"]
         devs = spec["stage_devs"]
         held = self._snapshot()
-        self._pre_refit = dict(held)
+        # MERGE (not replace): back-to-back refits — an abandoned
+        # re-partition followed by a §III-F recovery — leave peers (and
+        # this worker's own plan) referencing slices from either layout;
+        # the union keeps every layer serveable until training resumes
+        # (_run_segment clears it)
+        self._pre_refit = {**self._pre_refit, **held}
         self._fetch_res.clear()     # drop any stale replies from a past refit
         new_params: dict[int, Any] = {}
         for j in spec["local"]:
-            new_params[j] = held[j]
+            if j in self._pre_refit:
+                new_params[j] = self._pre_refit[j]
+            # else: the plan thought we held j but a refit moved it away —
+            # the missing/backstop path below fetches it instead
         pending: dict[int, list[int]] = {}
         for target, layers in spec["need"].items():
             dev_t = devs[target]
             if dev_t == self.dev:               # I hold the replica myself
                 for j in layers:
-                    if j in self.replicas:
-                        new_params[j] = self.replicas[j][1]
+                    if self.replicas.has(j):
+                        new_params[j] = self.replicas.get(j)[1]
                     elif (self.global_store is not None
                           and self.global_store.has(j)):
                         new_params[j] = self.global_store.get(j)[1]
@@ -496,6 +575,8 @@ class Worker(threading.Thread):
                                  "layers": list(layers),
                                  "reply_to": self.dev})
         self._await_fetches(pending, new_params)
+        if self._refit_cancel:
+            return           # keep the pre-refit slice; a fresh refit follows
         missing = [j for j in range(a, e + 1) if j not in new_params]
         if missing:
             # §III-F backstop: a planned holder may be unable to serve —
@@ -514,11 +595,15 @@ class Worker(threading.Thread):
                                      "layers": missing,
                                      "reply_to": self.dev})
                 self._await_fetches({self._req_seq: missing}, new_params)
+                if self._refit_cancel:
+                    return       # same guard as above: never install a
+                    #              backstop result the coordinator cancelled
             missing = [j for j in range(a, e + 1) if j not in new_params]
         if not missing:
             self.install((a, e), new_params, version=spec["version"])
         self.transport.send(self.dev, COORD, "ready",
-                            {"stage": spec["stage"], "missing": missing})
+                            {"stage": spec["stage"], "missing": missing,
+                             "version": spec["version"]})
 
 
 # ============================== coordinator ==============================
@@ -526,10 +611,17 @@ class Worker(threading.Thread):
 class Coordinator:
     """The central node (§III-A): owns the worker list, the fault timer,
     the capacity estimator, the partition DP, and the global replica store.
-    The coordinator device (0) also runs stage 0 — it never fails."""
+    The coordinator device (0) also runs stage 0 — it never fails.
+
+    ``remote_devs`` lists worker devices that run in their OWN processes
+    (``runtime/net.py``): no ``Worker`` thread is created for them, their
+    initial slice is shipped as an ``install`` message, aborts reach them
+    as ``abort`` messages, and fault injection sends ``die`` (the worker
+    process SIGKILLs itself) instead of calling ``Worker.crash``."""
 
     def __init__(self, chain: LayerChain, data_fn: Callable[[int], dict],
-                 cfg: LiveConfig, transport: Optional[Transport] = None):
+                 cfg: LiveConfig, transport: Optional[Transport] = None,
+                 remote_devs: Optional[set] = None):
         self.chain = chain
         self.data_fn = data_fn
         self.cfg = cfg
@@ -542,17 +634,20 @@ class Coordinator:
                           else uniform_bandwidth(N))
         self.transport = transport or Transport(cfg.fault,
                                                 codec=cfg.wire_codec)
+        self.remote_devs = set(remote_devs or ())
+        assert 0 not in self.remote_devs, \
+            "worker 0 shares the coordinator process (the central node)"
         self.transport.register(COORD)
         for dev in range(N):
             self.transport.register(dev)
         self.layout = chain.flat_layout()
         self.global_store = LayerReplicaStore()
         self.abort_event = threading.Event()
-        self.workers = [
-            Worker(dev, chain, data_fn, self.transport, cfg,
-                   self.abort_event, self.specs[dev], self.layout,
-                   global_store=self.global_store if dev == 0 else None)
-            for dev in range(N)]
+        self.workers = {
+            dev: Worker(dev, chain, data_fn, self.transport, cfg,
+                        self.abort_event, self.specs[dev], self.layout,
+                        global_store=self.global_store if dev == 0 else None)
+            for dev in range(N) if dev not in self.remote_devs}
         self.events: list = []
         self.loss_log: list = []
         self.losses = np.full(cfg.num_batches, np.nan)
@@ -563,6 +658,8 @@ class Coordinator:
         self._done: dict[int, dict] = {}
         self._committed = -1
         self._last_hb: dict[int, float] = {}
+        self._ready_acks: dict[int, set] = {}    # refit version -> acked devs
+        self._ready_missing: dict[int, list] = {}
         self._t0 = time.monotonic()
         if cfg.kill is not None:
             assert cfg.kill[0] != 0, "the central node (device 0) never fails"
@@ -598,11 +695,22 @@ class Coordinator:
         seg_done / commit / hb drained during _probe or a _collect phase is
         never lost (losing a seg_done would wedge _abort_segment; losing a
         commit would regress the restart point)."""
+        # ANY message from a worker proves liveness — not just heartbeats
+        if msg.src != COORD:
+            self._last_hb[msg.src] = time.monotonic()
         if msg.kind == "loss":
             gb, v = msg.payload
             if 0 <= gb < len(self.losses):
                 self.losses[gb] = v
             self.loss_log.append((gb, v))
+        elif msg.kind == "ready":
+            # recorded here (not in _redistribute's own loop) so an ack
+            # drained by ANY nested receive loop — a probe, an abort
+            # drain — is never lost
+            v = msg.payload.get("version")
+            self._ready_acks.setdefault(v, set()).add(msg.src)
+            self._ready_missing.setdefault(v, []).extend(
+                msg.payload.get("missing", []))
         elif msg.kind == "global_put":
             self.global_store.put_many(msg.payload["batch"],
                                        msg.payload["layers"])
@@ -619,10 +727,54 @@ class Coordinator:
             for dev, kb in list(self._kill.items()):
                 if msg.payload >= kb:
                     self._log(f"KILL worker dev{dev} @batch {msg.payload}")
-                    self.workers[dev].crash()
+                    self._kill_worker(dev)
                     del self._kill[dev]
 
+    def _kill_worker(self, dev: int) -> None:
+        """Inject a fatal fault. In-process workers crash directly (queue
+        drained, transport fenced); an own-process worker gets a ``die``
+        message and SIGKILLs itself — the coordinator learns of the death
+        only through heartbeat silence, as with a real device."""
+        if dev in self.workers:
+            self.workers[dev].crash()
+        else:
+            # a few duplicates: SIGKILL is idempotent and "die" is
+            # best-effort like any message — a drop-faulted transport must
+            # not silently skip the scheduled fault injection
+            for _ in range(3):
+                self.transport.send(COORD, dev, "die", {})
+
+    def _fence_worker(self, dev: int) -> None:
+        """Ensure a classified-dead worker is truly unreachable before
+        recovery renumbers around it (a zombie's late messages must not
+        corrupt the new epoch)."""
+        if dev in self.workers:
+            self.workers[dev].crash()
+        else:
+            self.transport.kill(dev)
+
     # ----------------------------- phases --------------------------------
+
+    def _await_remote_workers(self) -> None:
+        """Block until every own-process worker has been heard from (its
+        ``hello`` or first heartbeat) — their interpreters cold-start JAX,
+        so this gate keeps segment 0 from racing the cluster bring-up."""
+        if not self.remote_devs:
+            return
+        heard: set = set()
+        deadline = time.monotonic() + self.cfg.segment_timeout
+        while len(heard) < len(self.remote_devs) \
+                and time.monotonic() < deadline:
+            msg = self.transport.recv(COORD, timeout=self.cfg.poll)
+            if msg is None:
+                continue
+            self._absorb(msg)
+            if msg.src in self.remote_devs and msg.kind in ("hello", "hb"):
+                heard.add(msg.src)
+        missing = sorted(self.remote_devs - heard)
+        if missing:
+            raise RuntimeError(f"worker processes never connected: {missing}")
+        self._log(f"remote workers connected: {sorted(heard)}")
 
     def _replicate(self, batch: int, do_chain: bool, do_global: bool,
                    part: PartitionResult, worker_ids: list):
@@ -646,7 +798,18 @@ class Coordinator:
             self._log(f"{kind} replication @batch {batch}")
 
     def _redistribute(self, part_new: PartitionResult, plans, worker_ids,
-                      version: int, kind: str):
+                      version: int, kind: str) -> list:
+        """Ship a re-partition/recovery and collect ``ready`` acks (matched
+        by ``version`` so a stale ack from an aborted earlier refit is
+        never counted). Returns the devices that did NOT ack in time —
+        empty on success; the caller decides whether a shortfall means a
+        dead worker (run §III-F) or a genuine wedge (raise). Unserved
+        layers are always fatal: training on a hole is silent corruption."""
+        # reset BEFORE sending: a version number can recur (an identity
+        # refit then a real recovery at the same restart batch) and stale
+        # acks must not satisfy the new round
+        self._ready_acks[version] = set()
+        self._ready_missing[version] = []
         self._send_all(
             worker_ids, kind,
             lambda i, dev: {"stage": i, "n": len(worker_ids),
@@ -654,20 +817,35 @@ class Coordinator:
                             "stage_devs": list(worker_ids),
                             "need": plans[i].need, "local": plans[i].local,
                             "version": version})
-        missing: list = []
-        got = self._collect({"ready"}, len(worker_ids),
-                            timeout=self.cfg.segment_timeout,
-                            on_msg=lambda m: missing.extend(
-                                m.payload.get("missing", []))
-                            if m.kind == "ready" else None)
+        deadline = time.monotonic() + self.cfg.segment_timeout
+
+        def _pending():
+            return [d for d in worker_ids
+                    if d not in self._ready_acks[version]]
+
+        while _pending() and time.monotonic() < deadline:
+            msg = self.transport.recv(COORD, timeout=self.cfg.poll)
+            if msg is not None:
+                self._absorb(msg)
+            # fail fast on in-flight death: a pending worker that has gone
+            # heartbeat-silent is probed NOW rather than waiting out the
+            # whole collection window (the §III-F timer keeps running)
+            now = time.monotonic()
+            stale = [d for d in _pending() if d != worker_ids[0]
+                     and now - self._last_hb.get(d, now)
+                     > self.proto.detect_timeout]
+            if stale:
+                responses = self._probe(worker_ids)
+                case, dead = fault_sm.classify(responses)
+                if case is fault_sm.Case.FAILURES and dead:
+                    break                       # hand shortfall to caller
+                for d in stale:                 # transient: keep waiting
+                    self._last_hb[d] = time.monotonic()
+        missing = self._ready_missing.get(version, [])
         if missing:
             raise RuntimeError(f"redistribution left layers unserved: "
                                f"{sorted(set(missing))}")
-        if got < len(worker_ids):
-            # proceeding would run the next segment against workers in an
-            # unknown partition state — fail loudly instead
-            raise RuntimeError(f"redistribution incomplete: {got}/"
-                               f"{len(worker_ids)} workers ready")
+        return _pending()
 
     def _run_segment(self, b0: int, nb: int, part: PartitionResult,
                      worker_ids: list):
@@ -724,12 +902,28 @@ class Coordinator:
     def _abort_segment(self, worker_ids: list, dead: set):
         """Drain the wedged pipeline: wait until every survivor has posted
         seg_done for the CURRENT segment (self._done, fed by _absorb from
-        any receive loop — including the probe that preceded this call)."""
+        any receive loop — including the probe that preceded this call).
+        In-process workers see the shared abort event; own-process workers
+        get an ``abort`` message — resent periodically while the drain is
+        pending, because a message (unlike the shared event) can be lost
+        and a worker wedged in ``_await`` has no other way out."""
         self.abort_event.set()
+
+        def _send_aborts():
+            for dev in self.remote_devs:
+                if dev not in dead and self.transport.is_alive(dev):
+                    self.transport.send(COORD, dev, "abort", {})
+
+        _send_aborts()
+        resend_every = max(0.1, self.proto.detect_timeout / 2)
+        last_sent = time.monotonic()
         deadline = time.monotonic() + self.cfg.segment_timeout
         while time.monotonic() < deadline:
             if all(d in self._done for d in worker_ids if d not in dead):
                 break
+            if time.monotonic() - last_sent > resend_every:
+                _send_aborts()
+                last_sent = time.monotonic()
             msg = self.transport.recv(COORD, timeout=self.cfg.poll)
             if msg is not None:
                 self._absorb(msg)
@@ -738,6 +932,11 @@ class Coordinator:
     # ------------------------------- run ---------------------------------
 
     def run(self) -> LiveResult:
+        """Train ``cfg.num_batches`` batches under the full protocol and
+        return the ``LiveResult`` (losses, partitions, events, recovery
+        records). Installs slices, starts local workers / waits for remote
+        ones, then drives the segment loop; always tears the cluster down
+        (threads joined, remote workers told to stop)."""
         cfg, proto = self.cfg, self.proto
         N = cfg.num_workers
         L = self.chain.num_layers
@@ -749,28 +948,50 @@ class Coordinator:
         partitions = [(0, part.points)]
         state = fault_sm.TrainingState(learning_rate=cfg.lr)
 
-        # startup: install uniform slices everywhere, then replicate the
+        # startup: install uniform slices everywhere (directly for local
+        # workers, over the wire for own-process ones), then replicate the
         # init weights so replicas exist even for a failure before the
-        # first cadence point
-        for i, dev in enumerate(worker_ids):
-            a, e = part.ranges[i]
-            self.workers[dev].install(
-                (a, e), {j: self.layout.pack_layer(j, self.chain.params[j])
-                         for j in range(a, e + 1)})
-        for w in self.workers:
-            w.start()
+        # first cadence point. The WHOLE startup sits inside the teardown
+        # try: a failed bring-up (workers never connect, installs unacked)
+        # must not leak worker/heartbeat threads or leave remote processes
+        # polling forever.
         try:
+            self._await_remote_workers()
+            for i, dev in enumerate(worker_ids):
+                a, e = part.ranges[i]
+                flats = {j: self.layout.pack_layer(j, self.chain.params[j])
+                         for j in range(a, e + 1)}
+                if dev in self.workers:
+                    self.workers[dev].install((a, e), flats)
+                else:
+                    self.transport.send(COORD, dev, "install",
+                                        {"range": (a, e), "layers": flats,
+                                         "version": 0, "stage": i})
+            for w in self.workers.values():
+                w.start()
+            if self.remote_devs:
+                got = self._collect({"ready"}, len(self.remote_devs),
+                                    timeout=self.cfg.segment_timeout)
+                if got < len(self.remote_devs):
+                    raise RuntimeError(
+                        f"remote install incomplete: {got}/"
+                        f"{len(self.remote_devs)} workers acked")
             est, partitions = self._run_protocol(est, part, partitions,
                                                  worker_ids, profile, state)
         finally:
             # error paths (wedged restarts, incomplete redistribution) must
-            # not leak N worker + heartbeat threads
-            for w in self.workers:
+            # not leak N worker + heartbeat threads — and own-process
+            # workers must be told to exit so their processes can be joined
+            for dev in sorted(self.remote_devs):
+                if self.transport.is_alive(dev):
+                    self.transport.send(COORD, dev, "stop", {})
+            for w in self.workers.values():
                 if self.transport.is_alive(w.dev):
                     self.transport.send(COORD, w.dev, "stop", {})
                 w.shutdown()
-            for w in self.workers:
-                w.join(timeout=5.0)
+            for w in self.workers.values():
+                if w.ident is not None:      # never started -> nothing to join
+                    w.join(timeout=5.0)
         return LiveResult(
             losses=self.losses, loss_log=self.loss_log,
             partitions=partitions, events=self.events,
@@ -819,32 +1040,21 @@ class Coordinator:
                     plans = [RedistributionPlan(
                         need={}, local=list(range(a, e + 1)))
                         for a, e in part.ranges]
-                    self._redistribute(part, plans, worker_ids,
-                                       version=restart, kind="recover")
-                    b0 = restart
-                    self._log(f"transient stall; restart @batch {b0}")
+                    shortfall = self._redistribute(part, plans, worker_ids,
+                                                   version=restart,
+                                                   kind="recover")
+                    if shortfall:
+                        # a worker died between the probe and the refit
+                        worker_ids, part, est, b0 = \
+                            self._handle_shortfall(shortfall, worker_ids,
+                                                   part, est, profile,
+                                                   state, partitions)
+                    else:
+                        b0 = restart
+                        self._log(f"transient stall; restart @batch {b0}")
                     continue
-                self._log(f"failure detected: devs {dead}; probing done")
-                for dev in dead:      # ensure a non-responder is truly gone
-                    self.workers[dev].crash()
-                self._abort_segment(worker_ids, set(dead))
-                failed_pos = [worker_ids.index(d) for d in dead]
-                dec = protocol.plan_failure_recovery(
-                    part, worker_ids, failed_pos, est, profile,
-                    self.bandwidth, proto.comm_factor)
-                restart = self._committed + 1
-                state.reset_after_recovery(restart)
-                self._redistribute(dec.partition, dec.plans, dec.worker_ids,
-                                   version=restart, kind="recover")
-                worker_ids, part, est = (dec.worker_ids, dec.partition,
-                                         dec.est)
-                partitions.append((restart, part.points))
-                self.recoveries.append({"failed": list(dead),
-                                        "restart": restart,
-                                        "partition": part.points})
-                self._log(f"recovered: {len(worker_ids)} workers, "
-                          f"partition {part.counts}, resume @batch {restart}")
-                b0 = restart
+                worker_ids, part, est, b0 = self._run_failure_recovery(
+                    dead, worker_ids, part, est, profile, state, partitions)
                 continue
 
             # ---- capacity samples (Eqs. 1-3) ----------------------------
@@ -882,6 +1092,26 @@ class Coordinator:
             if b0 >= B:
                 break
 
+            # ---- boundary liveness sweep (§III-F fault timer) -----------
+            # the paper's fault timer runs continuously at the central
+            # node. A worker that died right as the segment drained (its
+            # seg_done already sent) is silent NOW — catch it before a
+            # control event tries to include it, not one segment later.
+            now = time.monotonic()
+            suspects = [dev for dev in worker_ids
+                        if dev != worker_ids[0]
+                        and now - self._last_hb.get(dev, now)
+                        > proto.detect_timeout]
+            if suspects:
+                state.enter_recovery()
+                responses = self._probe(worker_ids)
+                case, dead = fault_sm.classify(responses)
+                if case is fault_sm.Case.FAILURES and dead:
+                    worker_ids, part, est, b0 = self._run_failure_recovery(
+                        dead, worker_ids, part, est, profile, state,
+                        partitions)
+                    continue
+
             # ---- replication cadence (§III-E) ---------------------------
             do_chain, do_global = proto.replication_due(b0)
             if do_chain or do_global:
@@ -897,11 +1127,81 @@ class Coordinator:
                         new_part, part, len(worker_ids))
                     self._log(f"re-partition {part.counts} -> "
                               f"{new_part.counts} @batch {b0}")
-                    self._redistribute(new_part, plans, worker_ids,
-                                       version=b0, kind="repart")
+                    shortfall = self._redistribute(new_part, plans,
+                                                   worker_ids, version=b0,
+                                                   kind="repart")
+                    if shortfall:
+                        # a worker died during the re-partition: recover
+                        # against the OLD partition — every live worker
+                        # still serves its pre-refit slice (_pre_refit)
+                        state.enter_recovery()
+                        worker_ids, part, est, b0 = self._handle_shortfall(
+                            shortfall, worker_ids, part, est, profile,
+                            state, partitions)
+                        continue
                     part = new_part
                     partitions.append((b0, part.points))
         return est, partitions
+
+    def _handle_shortfall(self, shortfall, worker_ids, part, est, profile,
+                          state, partitions):
+        """A redistribution ended with workers that never acked: decide
+        dead-vs-wedged by probing. Dead -> §III-F recovery (returns the
+        post-recovery view); all-normal -> the cluster is in an unknown
+        mixed-partition state and proceeding would corrupt training, so
+        fail loudly."""
+        responses = self._probe(worker_ids)
+        case, dead = fault_sm.classify(responses)
+        if case is fault_sm.Case.FAILURES and dead:
+            return self._run_failure_recovery(dead, worker_ids, part, est,
+                                              profile, state, partitions)
+        raise RuntimeError(f"redistribution incomplete: {sorted(shortfall)} "
+                           f"never acked (probe says all alive)")
+
+    def _run_failure_recovery(self, dead, worker_ids, part, est, profile,
+                              state, partitions, depth: int = 0):
+        """§III-F commit: fence the dead, drain survivors, renumber the
+        worker list, re-solve the partition over survivor capacities, and
+        redistribute weights per the recovery plans. Returns the new
+        ``(worker_ids, part, est, restart_batch)``. A FURTHER failure
+        during the recovery redistribution recurses (each round removes at
+        least one worker, so depth is bounded by the cluster size)."""
+        self._log(f"failure detected: devs {sorted(dead)}; probing done")
+        for dev in dead:      # ensure a non-responder is truly gone
+            self._fence_worker(dev)
+        for dev in worker_ids:      # release anyone mid-refit fetching from
+            if dev not in dead:     # the corpse — abandon, don't backstop
+                self.transport.send(COORD, dev, "refit_abort", {})
+        self._abort_segment(worker_ids, set(dead))
+        failed_pos = [worker_ids.index(d) for d in dead]
+        dec = protocol.plan_failure_recovery(
+            part, worker_ids, failed_pos, est, profile,
+            self.bandwidth, self.proto.comm_factor)
+        restart = self._committed + 1
+        state.reset_after_recovery(restart)
+        shortfall = self._redistribute(dec.partition, dec.plans,
+                                       dec.worker_ids, version=restart,
+                                       kind="recover")
+        worker_ids, part, est = dec.worker_ids, dec.partition, dec.est
+        if shortfall:
+            if depth + 1 >= self.cfg.num_workers:
+                raise RuntimeError(
+                    f"recovery redistribution incomplete: {shortfall}")
+            responses = self._probe(worker_ids)
+            case, dead2 = fault_sm.classify(responses)
+            if case is fault_sm.Case.FAILURES and dead2:
+                return self._run_failure_recovery(
+                    dead2, worker_ids, part, est, profile, state,
+                    partitions, depth + 1)
+            raise RuntimeError(
+                f"recovery redistribution incomplete: {shortfall} "
+                f"never acked (probe says all alive)")
+        partitions.append((restart, part.points))
+        self.recoveries.append({"failed": sorted(dead), "restart": restart,
+                                "partition": part.points})
+        self._log(f"recovered: {len(worker_ids)} workers, "
+                  f"partition {part.counts}, resume @batch {restart}")
+        return worker_ids, part, est, restart
 
 
 def run_live_training(chain: LayerChain, batches: list,

@@ -1,0 +1,465 @@
+"""Multi-process TCP transport for the live FTPipeHD runtime.
+
+``runtime/transport.Transport`` moves messages between threads of ONE
+process; this module moves the same messages between separate OS processes
+(or separate hosts) over TCP, so that "a worker dies" means a SIGKILLed
+process and a broken socket, not a drained queue. The wire format is the
+tagged binary codec of ``runtime/codec.py`` — every payload crosses the
+process boundary as the exact bytes ``Transport(codec=True)`` already
+round-trips in-process, which is what makes queue and TCP runs
+byte-equivalent at the protocol layer (see ``tests/test_net.py``).
+
+Pieces:
+
+``SocketTransport``
+    Drop-in replacement for ``Transport`` (same ``register`` / ``send`` /
+    ``recv`` / ``kill`` / ``revive`` / ``is_alive`` / ``stats`` surface)
+    backed by length-prefixed TCP frames. One process may host several
+    node ids (the coordinator process hosts the control plane ``COORD``
+    and worker device 0); each remote peer gets a dedicated sender thread
+    with reconnect-with-backoff, and inbound connections get reader
+    threads that demultiplex frames into per-node inboxes. Delivery is
+    best-effort exactly like the queue transport: a frame that cannot be
+    sent within its retry window is dropped, and the protocol's
+    heartbeats/timeouts are what detect the loss.
+
+``worker_main`` / ``run_tcp_training``
+    The multi-process harness. ``run_tcp_training`` spawns one OS process
+    per non-central worker (``multiprocessing`` "spawn" context, so each
+    child is a fresh interpreter with its own JAX runtime), runs the
+    coordinator + worker 0 in the calling process, and returns the usual
+    ``LiveResult``. Each worker process rebuilds the identical chain and
+    batch stream from a ``runtime/workload.WorkloadSpec`` (both are
+    deterministic in the seed), so only activations, gradients, weights
+    and control traffic travel the wire — the same division of labor the
+    paper assumes between edge devices. ``launch/live_train.py --transport
+    tcp`` drives this harness; with ``--role coordinator|worker`` the same
+    entry point runs one process per host for real multi-host use.
+
+Fault injection is real here: the coordinator's ``kill`` schedule sends a
+``die`` control message and the worker process SIGKILLs itself — no
+goodbye, sockets break mid-stream, heartbeats stop — and §III-F recovery
+proceeds from observed silence, exactly as on a crashed edge device.
+
+Frame layout (little-endian)::
+
+    u32 length | i32 src | i32 dst | codec.encode(kind, payload)
+
+``length`` counts everything after itself. Node ids are signed because the
+coordinator control plane is node ``-1`` (``live.COORD``).
+"""
+from __future__ import annotations
+
+import queue
+import socket
+import struct
+import threading
+import time
+from typing import Any, Dict, Iterable, Optional, Sequence, Tuple
+
+from repro.runtime import codec as wire
+from repro.runtime.transport import FaultSpec, Message
+
+_HDR = struct.Struct("<Iii")          # length | src | dst (length excludes u32)
+_MAX_FRAME = 1 << 31                  # sanity bound on inbound frame length
+
+Addr = Tuple[str, int]
+
+
+def free_port(host: str = "127.0.0.1") -> int:
+    """Ask the OS for a currently-free TCP port (races are possible but
+    fine for localhost test harnesses)."""
+    with socket.socket() as s:
+        s.bind((host, 0))
+        return s.getsockname()[1]
+
+
+def parse_peers(spec: str) -> Dict[int, Addr]:
+    """Parse ``--peers`` strings: ``coord=HOST:PORT,1=HOST:PORT,...``.
+
+    ``coord`` expands to BOTH node ids hosted by the coordinator process
+    (the control plane ``COORD`` = -1 and worker device 0); integer keys
+    name worker devices. Returns {node id -> (host, port)}."""
+    out: Dict[int, Addr] = {}
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        key, _, addr = part.partition("=")
+        host, _, port = addr.rpartition(":")
+        if not host or not port:
+            raise ValueError(f"--peers entry {part!r} is not KEY=HOST:PORT")
+        a = (host, int(port))
+        if key.strip() == "coord":
+            out[-1] = a
+            out[0] = a
+        else:
+            out[int(key)] = a
+    return out
+
+
+class _Peer:
+    """Outbound connection to one remote address: a frame queue drained by
+    a sender thread that dials with exponential backoff and retries each
+    frame until its per-frame window expires (then drops it — the network
+    gives no delivery guarantee and the protocol must not assume one)."""
+
+    def __init__(self, addr: Addr, transport: "SocketTransport"):
+        self.addr = addr
+        self.transport = transport
+        self.q: "queue.Queue[Optional[tuple]]" = queue.Queue()
+        self.sock: Optional[socket.socket] = None
+        self.thread = threading.Thread(
+            target=self._run, daemon=True,
+            name=f"net-send-{addr[0]}:{addr[1]}")
+        self.thread.start()
+
+    def enqueue(self, frame: bytes) -> None:
+        self.q.put((time.monotonic(), frame))
+
+    def close(self) -> None:
+        self.q.put(None)
+
+    def _connect(self) -> socket.socket:
+        s = socket.create_connection(self.addr, timeout=2.0)
+        s.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        s.settimeout(None)
+        return s
+
+    def _run(self):
+        t = self.transport
+        backoff = t.backoff_initial
+        while not t.closed:
+            item = self.q.get()
+            if item is None:
+                break
+            born, frame = item
+            deadline = born + t.retry_window
+            while not t.closed:
+                try:
+                    if self.sock is None:
+                        self.sock = self._connect()
+                        backoff = t.backoff_initial
+                    self.sock.sendall(frame)
+                    with t._lock:
+                        t.stats["tx_bytes"] += len(frame)
+                    break
+                except OSError:
+                    if self.sock is not None:
+                        try:
+                            self.sock.close()
+                        except OSError:
+                            pass
+                        self.sock = None
+                    if time.monotonic() > deadline:
+                        with t._lock:
+                            t.stats["net_dropped"] += 1
+                        break                 # frame expired: drop it
+                    time.sleep(backoff)
+                    backoff = min(backoff * 2, t.backoff_max)
+        if self.sock is not None:
+            try:
+                self.sock.close()
+            except OSError:
+                pass
+
+
+class SocketTransport:
+    """``Transport`` over length-prefixed TCP frames (see module docstring).
+
+    Parameters
+    ----------
+    addr_of : {node id -> (host, port)} for EVERY node in the cluster;
+        node ids hosted by the same process share one address.
+    local : the node ids hosted by THIS process. The transport binds and
+        listens on ``addr_of[local[0]]``.
+    fault : optional ``FaultSpec`` — Bernoulli ``drop`` and fixed ``delay``
+        are applied on the send path exactly as in the queue transport
+        (useful for tests; REAL faults here are dead processes).
+    retry_window : seconds a frame may sit in a peer's outbound queue
+        while the sender dials/redials before it is dropped.
+    """
+
+    def __init__(self, addr_of: Dict[int, Addr], local: Sequence[int],
+                 fault: Optional[FaultSpec] = None, *,
+                 retry_window: float = 10.0,
+                 backoff: Tuple[float, float] = (0.05, 1.0)):
+        import random
+        self.addr_of = dict(addr_of)
+        self.local = tuple(local)
+        self.fault = fault or FaultSpec()
+        self._rng = random.Random(self.fault.seed)
+        self.retry_window = retry_window
+        self.backoff_initial, self.backoff_max = backoff
+        self.closed = False
+        self._lock = threading.Lock()
+        self._inboxes: Dict[int, queue.Queue] = {n: queue.Queue()
+                                                 for n in self.local}
+        self._dead: set = set()
+        self._peers: Dict[Addr, _Peer] = {}
+        self._readers: list = []
+        self.stats = {"sent": 0, "delivered": 0, "dropped": 0, "to_dead": 0,
+                      "bytes": 0, "tx_bytes": 0, "net_dropped": 0}
+        host, port = self.addr_of[self.local[0]]
+        self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._listener.bind((host, port))
+        self._listener.listen(32)
+        self._accept_thread = threading.Thread(
+            target=self._accept_loop, daemon=True, name=f"net-accept-{port}")
+        self._accept_thread.start()
+
+    # ------------------------------ wiring ------------------------------
+
+    def register(self, node: int) -> None:
+        """Interface parity with ``Transport.register``: local nodes get an
+        inbox at construction; registering a remote node is a no-op (its
+        inbox lives in its own process)."""
+        if node in self.local:
+            self._inboxes.setdefault(node, queue.Queue())
+
+    def kill(self, node: int) -> None:
+        """Fence a node locally: frames to and from it are dropped from now
+        on. For a remote node this models the coordinator's *belief* that
+        the device is gone (late frames from a zombie are ignored); the
+        process itself dies by SIGKILL, not by this call."""
+        with self._lock:
+            self._dead.add(node)
+        q = self._inboxes.get(node)
+        if q is not None:
+            try:
+                while True:
+                    q.get_nowait()
+            except queue.Empty:
+                pass
+
+    def revive(self, node: int) -> None:
+        """Un-fence a node (paper case 2: a worker restarts, same slot)."""
+        with self._lock:
+            self._dead.discard(node)
+
+    def is_alive(self, node: int) -> bool:
+        with self._lock:
+            return node not in self._dead
+
+    # ----------------------------- messaging ----------------------------
+
+    def send(self, src: int, dst: int, kind: str, payload: Any = None) -> bool:
+        """Encode and ship one message. Local destinations loop back through
+        the codec (fresh deserialized copy, same as one TCP hop); remote
+        destinations are framed and enqueued on the peer's sender thread.
+        The return value only means "accepted for delivery" — like a real
+        socket write, it is NOT an acknowledgment."""
+        with self._lock:
+            self.stats["sent"] += 1
+            if src in self._dead or dst in self._dead:
+                self.stats["to_dead"] += 1
+                return False
+            if (self.fault.drop > 0.0 and kind not in self.fault.protect
+                    and self._rng.random() < self.fault.drop):
+                self.stats["dropped"] += 1
+                return False
+        data = wire.encode(kind, payload)
+
+        def _ship():
+            if dst in self._inboxes:
+                self._deliver(src, dst, data)
+            else:
+                addr = self.addr_of.get(dst)
+                if addr is None:
+                    return
+                frame = _HDR.pack(len(data) + 8, src, dst) + data
+                self._peer(addr).enqueue(frame)
+
+        if self.fault.delay > 0.0:
+            threading.Timer(self.fault.delay, _ship).start()
+        else:
+            _ship()
+        return True
+
+    def recv(self, node: int, timeout: float = 0.05) -> Optional[Message]:
+        """Blocking receive with timeout; None on timeout or if fenced."""
+        with self._lock:
+            dead = node in self._dead
+        inbox = self._inboxes.get(node)
+        if inbox is None or dead:
+            time.sleep(min(timeout, 0.01))
+            return None
+        try:
+            return inbox.get(timeout=timeout)
+        except queue.Empty:
+            return None
+
+    # ----------------------------- internals ----------------------------
+
+    def _peer(self, addr: Addr) -> _Peer:
+        with self._lock:
+            p = self._peers.get(addr)
+            if p is None:
+                p = self._peers[addr] = _Peer(addr, self)
+            return p
+
+    def _deliver(self, src: int, dst: int, data: bytes) -> None:
+        with self._lock:
+            if src in self._dead or dst in self._dead:
+                self.stats["to_dead"] += 1
+                return
+        inbox = self._inboxes.get(dst)
+        if inbox is None:
+            return
+        kind, payload = wire.decode(data)
+        inbox.put(Message(src=src, dst=dst, kind=kind, payload=payload,
+                          sent_at=time.monotonic()))
+        with self._lock:
+            self.stats["delivered"] += 1
+            self.stats["bytes"] += len(data)
+
+    def _accept_loop(self):
+        while not self.closed:
+            try:
+                conn, _ = self._listener.accept()
+            except OSError:
+                return
+            conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            t = threading.Thread(target=self._read_loop, args=(conn,),
+                                 daemon=True, name="net-read")
+            t.start()
+            self._readers.append(t)
+
+    @staticmethod
+    def _read_exact(conn: socket.socket, n: int) -> Optional[bytes]:
+        buf = b""
+        while len(buf) < n:
+            chunk = conn.recv(n - len(buf))
+            if not chunk:
+                return None
+            buf += chunk
+        return buf
+
+    def _read_loop(self, conn: socket.socket):
+        try:
+            while not self.closed:
+                hdr = self._read_exact(conn, 4)
+                if hdr is None:
+                    return
+                (length,) = struct.unpack("<I", hdr)
+                if not 8 <= length < _MAX_FRAME:
+                    return                        # framing corruption: drop
+                body = self._read_exact(conn, length)
+                if body is None:
+                    return
+                src, dst = struct.unpack_from("<ii", body)
+                self._deliver(src, dst, body[8:])
+        except OSError:
+            return
+        finally:
+            try:
+                conn.close()
+            except OSError:
+                pass
+
+    def close(self) -> None:
+        """Tear down the listener and all sender threads. Safe to call more
+        than once; in-flight frames may be lost (like pulling the cable)."""
+        self.closed = True
+        try:
+            self._listener.close()
+        except OSError:
+            pass
+        with self._lock:
+            peers = list(self._peers.values())
+        for p in peers:
+            p.close()
+
+
+# ======================= multi-process harness ===========================
+
+def worker_main(dev: int, addr_of: Dict[int, Addr], spec, cfg) -> None:
+    """Entry point of one worker PROCESS (spawned by ``run_tcp_training``
+    or run per-host via ``launch/live_train.py --role worker``).
+
+    Rebuilds the chain/batches from the deterministic ``WorkloadSpec``,
+    connects a ``SocketTransport`` for its single node id, announces itself
+    to the coordinator, and runs the standard ``live.Worker`` loop until a
+    ``stop`` (clean end) or ``die`` (self-SIGKILL fault injection)."""
+    import os
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    from repro.runtime.devices import DeviceSpec
+    from repro.runtime.live import COORD, Worker
+
+    chain, batches = spec.build()
+    data_fn = lambda gb: batches[gb % len(batches)]
+    specs = (cfg.device_specs
+             or [DeviceSpec(f"dev-{i}") for i in range(cfg.num_workers)])
+    transport = SocketTransport(addr_of, local=(dev,), fault=cfg.fault)
+    worker = Worker(dev, chain, data_fn, transport, cfg, threading.Event(),
+                    specs[dev], chain.flat_layout(), remote=True)
+    transport.send(dev, COORD, "hello", {"dev": dev})
+    try:
+        worker.run()
+    finally:
+        worker.hb.stop()
+        transport.close()
+
+
+def cluster_addresses(num_workers: int, host: str = "127.0.0.1",
+                      ports: Optional[Iterable[int]] = None
+                      ) -> Dict[int, Addr]:
+    """Address map for a localhost cluster: the coordinator process hosts
+    COORD (-1) and worker 0 on one port; workers 1..N-1 get their own."""
+    ps = list(ports) if ports is not None else [free_port(host)
+                                               for _ in range(num_workers)]
+    addr_of: Dict[int, Addr] = {-1: (host, ps[0]), 0: (host, ps[0])}
+    for dev in range(1, num_workers):
+        addr_of[dev] = (host, ps[dev])
+    return addr_of
+
+
+def run_tcp_training(spec, cfg, *, host: str = "127.0.0.1",
+                     join_timeout: float = 15.0):
+    """Train over real OS processes: coordinator + worker 0 here, workers
+    1..N-1 spawned as separate interpreters, all talking TCP through
+    ``SocketTransport``. Returns the usual ``LiveResult`` with
+    ``worker_exitcodes`` filled in ({dev -> process exit code}; a worker
+    SIGKILLed by fault injection reports ``-9``)."""
+    import multiprocessing as mp
+    import os
+
+    import repro
+    from repro.runtime.live import COORD, Coordinator
+
+    addr_of = cluster_addresses(cfg.num_workers, host)
+    ctx = mp.get_context("spawn")
+    procs = {dev: ctx.Process(target=worker_main,
+                              args=(dev, addr_of, spec, cfg), daemon=True)
+             for dev in range(1, cfg.num_workers)}
+    # spawned interpreters inherit os.environ, not sys.path — make sure the
+    # package is importable even when the parent got it via pytest's
+    # `pythonpath` ini option rather than an installed dist or $PYTHONPATH
+    pkg_root = os.path.dirname(os.path.abspath(list(repro.__path__)[0]))
+    old_pp = os.environ.get("PYTHONPATH")
+    parts = [pkg_root] + ([old_pp] if old_pp else [])
+    os.environ["PYTHONPATH"] = os.pathsep.join(parts)
+    try:
+        for p in procs.values():
+            p.start()
+    finally:
+        if old_pp is None:
+            os.environ.pop("PYTHONPATH", None)
+        else:
+            os.environ["PYTHONPATH"] = old_pp
+    chain, batches = spec.build()
+    transport = SocketTransport(addr_of, local=(COORD, 0), fault=cfg.fault)
+    coord = Coordinator(chain, lambda gb: batches[gb % len(batches)], cfg,
+                        transport=transport, remote_devs=set(procs))
+    try:
+        res = coord.run()
+    finally:
+        for p in procs.values():
+            p.join(timeout=join_timeout)
+            if p.is_alive():
+                p.terminate()
+                p.join(timeout=5.0)
+        transport.close()
+    res.worker_exitcodes = {dev: p.exitcode for dev, p in procs.items()}
+    return res

@@ -69,6 +69,10 @@ class ChainLayout:
 
     @classmethod
     def of_params(cls, params: list) -> "ChainLayout":
+        """Derive the layout from a chain's parameter list — a pure
+        function of the model definition, so every node (thread, process,
+        or host) computes the identical layer->offset map without
+        exchanging metadata."""
         specs = []
         for p in params:
             leaves, treedef = jax.tree.flatten(p)
@@ -217,7 +221,15 @@ class StageExecutor:
             self._step = step_ref
 
     def forward(self, buf, x, batch=None):
+        """Run the slice forward under packed weights ``buf``: activation
+        for a mid stage, scalar loss at the last (``batch`` supplies the
+        labels there)."""
         return self._forward(buf, x, batch)
 
     def step(self, fwd_buf, new_buf, mom_buf, x, ct=None, batch=None):
+        """One fused backward+update: recompute the forward under
+        ``fwd_buf`` (the batch's vertical-sync version), backpropagate
+        cotangent ``ct`` (implicit 1.0 at the last stage), and apply the
+        SGD update to ``new_buf`` (the newest version). Returns
+        ``(dx, new_buf', mom_buf')``; ``mom_buf`` may be donated."""
         return self._step(fwd_buf, new_buf, mom_buf, x, ct, batch)

@@ -35,6 +35,10 @@ from repro.runtime import codec as wire
 
 @dataclasses.dataclass(frozen=True)
 class Message:
+    """One delivered transport message: ``kind`` names the protocol event
+    (see ``docs/protocol.md`` for the full catalog), ``payload`` its
+    decoded body. Shared by the queue transport and ``runtime/net.py``'s
+    TCP transport, so receivers never know which one they are on."""
     src: int
     dst: int
     kind: str
@@ -71,6 +75,12 @@ def payload_bytes(payload: Any) -> int:
 
 
 class Transport:
+    """In-process (thread-to-thread) transport: per-node inboxes over
+    ``queue.Queue`` with injectable faults. ``runtime/net.py``'s
+    ``SocketTransport`` implements this same surface (``register`` /
+    ``send`` / ``recv`` / ``kill`` / ``revive`` / ``is_alive`` /
+    ``stats``) over TCP — code written against either runs on both."""
+
     def __init__(self, fault: Optional[FaultSpec] = None,
                  codec: bool = False):
         self.fault = fault or FaultSpec()
@@ -85,6 +95,7 @@ class Transport:
     # ------------------------------ wiring ------------------------------
 
     def register(self, node: int) -> None:
+        """Create the node's inbox (idempotent); must precede recv."""
         with self._lock:
             self._inboxes.setdefault(node, queue.Queue())
 

@@ -108,6 +108,45 @@ class LayerChain:
 
 # ------------------------------ constructors -----------------------------
 
+@dataclasses.dataclass(frozen=True)
+class WorkloadSpec:
+    """Picklable recipe for a (chain, batches) pair, deterministic in the
+    seed — the contract that lets every PROCESS of a multi-host run
+    (``runtime/net.py``) rebuild the identical model and batch stream
+    locally, so only activations/gradients/weights travel the wire.
+    ``kind`` selects the constructor below ("mlp" or "mobilenet")."""
+    kind: str = "mlp"
+    seed: int = 0
+    num_layers: int = 8              # mlp depth (mobilenet is fixed at 19)
+    width: int = 16                  # mlp hidden width
+    in_dim: int = 8                  # mlp input features
+    num_classes: int = 4             # mlp default; mobilenet uses 10
+    num_data_batches: int = 8        # distinct batches, cycled over
+    batch_size: int = 16
+    image_hw: int = 16               # mobilenet input resolution
+
+    def build(self) -> tuple[LayerChain, list]:
+        """(chain, batches) — identical on every process for equal specs."""
+        import jax
+        key = jax.random.PRNGKey(self.seed)
+        if self.kind == "mlp":
+            chain = mlp_chain(key, num_layers=self.num_layers,
+                              width=self.width, in_dim=self.in_dim,
+                              num_classes=self.num_classes)
+            batches = classification_batches(
+                "mlp", self.num_data_batches, batch=self.batch_size,
+                seed=self.seed, in_dim=self.in_dim,
+                num_classes=self.num_classes)
+        elif self.kind == "mobilenet":
+            chain = mobilenet_chain(key, num_classes=10)
+            batches = classification_batches(
+                "mobilenet", self.num_data_batches, batch=self.batch_size,
+                seed=self.seed, image_hw=self.image_hw, num_classes=10)
+        else:
+            raise ValueError(f"unknown workload kind {self.kind!r}")
+        return chain, batches
+
+
 def mlp_chain(key, num_layers: int = 8, width: int = 16, in_dim: int = 8,
               num_classes: int = 4) -> LayerChain:
     """Dense tanh chain ending in a linear classifier head (layer L-1)."""

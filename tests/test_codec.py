@@ -57,7 +57,7 @@ MESSAGES = [
                 "need": {1: [2, 3]}, "local": [0, 1], "version": 9}),
     ("recover", {"stage": 1, "n": 2, "range": (4, 7), "stage_devs": [0, 2],
                  "need": {0: [4]}, "local": [5, 6, 7], "version": 9}),
-    ("ready", {"stage": 1, "missing": []}),
+    ("ready", {"stage": 1, "missing": [], "version": 9}),
     ("probe", {}),
     ("probe_ack", {"status": "ok"}),
     ("stop", {}),

@@ -125,6 +125,36 @@ class TestLayerReplicaStore:
         st.put_many(2, {0: np.zeros(99, np.float32)})   # stale: ignored
         assert st.get(0)[0] == 4 and st.nbytes() == 4 * (10 + 6)
 
+    def test_nbytes_dedupes_across_tiers(self):
+        """A layer snapshotted at the same batch into BOTH tiers is one
+        logical replica: the deduped total counts it once, per-tier totals
+        count their own copies, and nbytes_report surfaces the overlap
+        (the old single-number nbytes double-counted exactly this)."""
+        st = LayerReplicaStore()
+        snap = np.zeros(10, np.float32)
+        st.put(0, 5, snap, tier=LayerReplicaStore.GLOBAL)
+        st.put(0, 5, snap, tier=LayerReplicaStore.CHAIN)
+        st.put(1, 5, np.zeros(6, np.float32), tier=LayerReplicaStore.CHAIN)
+        assert st.nbytes(LayerReplicaStore.GLOBAL) == 40
+        assert st.nbytes(LayerReplicaStore.CHAIN) == 40 + 24
+        assert st.nbytes() == 40 + 24                  # layer 0 counted once
+        rep = st.nbytes_report()
+        assert rep["per_tier"] == {"global": 40, "chain": 64}
+        assert rep["deduped"] == 64 and rep["duplicated"] == 40
+
+    def test_tiers_track_freshness_independently(self):
+        """Different batches in different tiers are distinct snapshots:
+        get() returns the freshest across tiers, and the deduped total
+        keeps both (they hold different data)."""
+        st = LayerReplicaStore()
+        st.put(0, 4, np.zeros(10, np.float32), tier=LayerReplicaStore.CHAIN)
+        st.put(0, 8, np.zeros(10, np.float32), tier=LayerReplicaStore.GLOBAL)
+        assert st.get(0)[0] == 8
+        assert st.get(0, tier=LayerReplicaStore.CHAIN)[0] == 4
+        assert st.batches() == {0: 8}
+        assert st.nbytes() == 80                       # two real snapshots
+        assert st.covers(1) and not st.covers(2)
+
 
 class TestTransport:
     def test_kill_isolates_node(self):
@@ -251,8 +281,8 @@ def test_replication_store_holds_cadence_snapshots():
         holder = coord.workers[(s + 1) % 3]
         a, e = part.ranges[s]
         for j in range(a, e + 1):
-            assert j in holder.replicas
-            assert holder.replicas[j][0] == 15
+            assert holder.replicas.has(j)
+            assert holder.replicas.get(j)[0] == 15
     # version retention stayed within the vertical-sync bound
     for dev, hw in res.stash_high_water.items():
         assert hw <= 3 + 1, (dev, hw)
@@ -333,6 +363,37 @@ def test_kill_at_segment_boundary_detected_in_next_segment():
         lr=0.1, kill=(2, 9)))
     assert not np.isnan(res.losses).any()
     assert len(res.recoveries) == 1 and res.recoveries[0]["failed"] == [2]
+
+
+@pytest.mark.live
+def test_kill_at_boundary_before_repartition_recovers():
+    """The nastiest §III-F window: the victim dies at the LAST batch of a
+    segment (its seg_done already sent, so in-segment detection cannot
+    fire) and a RE-PARTITION is due at the very next control point. The
+    redistribution must fail fast on the corpse's heartbeat silence and
+    hand over to recovery — not wedge for segment_timeout, not install
+    stale backstop weights, not crash the run."""
+    chain, data = _chain_and_data()
+    specs = [DeviceSpec("central", 1.0), DeviceSpec("peer", 1.0),
+             DeviceSpec("slow", 4.0)]
+    profile = chain.measure_profile(data[0], repeats=2)
+    res = run_live_training(chain, data, LiveConfig(
+        num_workers=3, num_batches=20,
+        protocol=ProtocolConfig(chain_every=10_000, global_every=10_000,
+                                repartition_first_at=5,
+                                repartition_every=10_000,
+                                detect_timeout=0.4),
+        lr=0.1, device_specs=specs, bandwidth=uniform_bandwidth(3, 1e9),
+        profile=profile, capacity_source="spec", kill=(1, 4),
+        segment_timeout=30.0))
+    assert not np.isnan(res.losses).any()
+    assert len(res.recoveries) == 1 and res.recoveries[0]["failed"] == [1]
+    assert len(res.final_partition) == 2
+    # no stale-weight swap: post-recovery losses keep improving
+    restart = res.recoveries[0]["restart"]
+    untrained = float(np.median(res.losses[:3]))
+    post = float(np.median(res.losses[restart:restart + 5]))
+    assert post < 0.9 * untrained, (post, untrained)
 
 
 @pytest.mark.live
