@@ -84,7 +84,9 @@ def _wire_throughput(transport_kind: str, msgs: int, payload_kb: int,
     with a bounded in-flight window, receiver draining concurrently. For
     "queue" this is the in-process transport with the codec on (bytes are
     encoded/decoded but never cross a process boundary); for "tcp" the
-    same frames cross two real localhost sockets (runtime/net.py)."""
+    same frames cross two real localhost sockets (runtime/net.py);
+    "tcp_nocoalesce" disables the sender-side frame coalescing — the
+    before/after of that optimization is recorded in the results JSON."""
     import numpy as np
 
     payload = (0, 0, np.zeros(payload_kb * 256, np.float32))  # 1KB = 256 f32
@@ -98,7 +100,9 @@ def _wire_throughput(transport_kind: str, msgs: int, payload_kb: int,
     else:
         from repro.runtime.net import SocketTransport, cluster_addresses
         addr_of = cluster_addresses(2)
-        send_t = SocketTransport(addr_of, local=(0,))
+        coalesce = 0 if transport_kind == "tcp_nocoalesce" else 1 << 20
+        send_t = SocketTransport(addr_of, local=(0,),
+                                 coalesce_bytes=coalesce)
         recv_t = SocketTransport(addr_of, local=(1,))
         closers = [send_t, recv_t]
     try:
@@ -127,7 +131,7 @@ def _wire_throughput(transport_kind: str, msgs: int, payload_kb: int,
     return msgs / dt, wire_bytes / dt / 1e6
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, out_path: str = JSON_PATH):
     import jax
 
     from repro.runtime.workload import mlp_chain
@@ -145,7 +149,7 @@ def run(quick: bool = False):
     wire_msgs = 300 if quick else 2000
     payload_kb = 32
     wire = {k: _wire_throughput(k, wire_msgs, payload_kb)
-            for k in ("queue", "tcp")}
+            for k in ("queue", "tcp", "tcp_nocoalesce")}
     out = {
         "quick": quick,
         "backend": jax.default_backend(),
@@ -162,8 +166,12 @@ def run(quick: bool = False):
         "wire_MBps_queue": wire["queue"][1],
         "wire_msgs_per_s_tcp": wire["tcp"][0],
         "wire_MBps_tcp": wire["tcp"][1],
+        # the pre-optimization sender (no frame coalescing), kept as a
+        # measured point so the win stays visible in the baseline
+        "wire_msgs_per_s_tcp_nocoalesce": wire["tcp_nocoalesce"][0],
+        "wire_MBps_tcp_nocoalesce": wire["tcp_nocoalesce"][1],
     }
-    with open(JSON_PATH, "w") as f:
+    with open(out_path, "w") as f:
         json.dump(out, f, indent=2)
     if out["backend"] == "cpu" and out["compiled_speedup"] < 2.0:
         # RuntimeError (not SystemExit) so benchmarks/run.py's per-suite
@@ -184,18 +192,25 @@ def run(quick: bool = False):
          f"{payload_kb}KB msgs, in-process queue + codec"),
         ("live/wire_MBps_tcp", out["wire_MBps_tcp"],
          f"{payload_kb}KB msgs, localhost TCP (runtime/net.py)"),
+        ("live/wire_MBps_tcp_nocoalesce", out["wire_MBps_tcp_nocoalesce"],
+         "same, sender coalescing off (the pre-optimization path)"),
     ]
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default=JSON_PATH,
+                    help="where to write the results JSON (default "
+                         f"{JSON_PATH}; CI writes elsewhere so "
+                         "tools/check_bench.py can gate against the "
+                         "committed baseline)")
     args = ap.parse_args()
-    rows = run(quick=args.quick)
+    rows = run(quick=args.quick, out_path=args.out)
     print("name,value,derived")
     for n, v, d in rows:
         print(f"{n},{v},{d}")
-    print(f"wrote {JSON_PATH}")
+    print(f"wrote {args.out}")
 
 
 if __name__ == "__main__":

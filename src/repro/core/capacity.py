@@ -50,3 +50,17 @@ class CapacityEstimator:
         est._have_sample = self._have_sample[keep].copy()
         est.capacities[0] = 1.0
         return est
+
+    def add_worker(self, capacity: float = 1.0,
+                   have_sample: bool = True) -> "CapacityEstimator":
+        """Capacities for a GROWN worker list (elastic admission, appended
+        at the end): the joiner enters at ``capacity`` — a probe result, a
+        spec'd value, or the paper's homogeneity assumption (1.0, §III-B)
+        until its first measured segment refines it."""
+        est = CapacityEstimator(self.layer_times0, self.num_workers + 1,
+                                self.ema)
+        est.capacities = np.append(self.capacities, float(capacity))
+        est._have_sample = np.append(self._have_sample, bool(have_sample))
+        est.capacities[0] = 1.0
+        est._have_sample[0] = True
+        return est

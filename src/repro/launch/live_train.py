@@ -48,6 +48,24 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--kill", default=None, metavar="DEV@BATCH",
                     help="crash worker DEV when BATCH commits, e.g. 1@12 "
                          "(a real SIGKILL under --transport tcp)")
+    ap.add_argument("--rejoin", default=None, metavar="DEV@BATCH",
+                    help="relaunch the previously-killed worker DEV when "
+                         "BATCH commits; it rejoins with a bumped "
+                         "incarnation and the pipeline expands back "
+                         "(pair with --kill, e.g. --kill 1@10 "
+                         "--rejoin 1@16)")
+    ap.add_argument("--join-after", type=int, default=None, metavar="BATCH",
+                    help="hot-join a NEW device (id = --workers) when "
+                         "BATCH commits, growing the pipeline beyond the "
+                         "launch set")
+    ap.add_argument("--join-wait", type=float, default=20.0,
+                    help="max seconds the coordinator waits at a control "
+                         "point for a scheduled joiner's hello")
+    ap.add_argument("--incarnation", type=int, default=0,
+                    help="tcp --role worker: this process's incarnation — "
+                         "relaunch a dead worker by re-running its exact "
+                         "command with this bumped (the coordinator fences "
+                         "stale incarnations and admits the new one)")
     ap.add_argument("--capacities", default=None,
                     help="comma list of per-device capacities (C_i)")
     ap.add_argument("--emulate", action="store_true",
@@ -85,6 +103,14 @@ def build_parser() -> argparse.ArgumentParser:
     return ap
 
 
+def _parse_at(value):
+    """'DEV@BATCH' -> (dev, batch) or None."""
+    if not value:
+        return None
+    dev, b = value.split("@")
+    return (int(dev), int(b))
+
+
 def _build_cfg(args, specs, kill):
     from repro.runtime.live import LiveConfig
     from repro.runtime.protocol import ProtocolConfig
@@ -99,7 +125,9 @@ def _build_cfg(args, specs, kill):
         device_specs=specs, emulate_capacity=args.emulate,
         capacity_source=args.capacity_source,
         aggregate_every=args.aggregate_every,
-        compiled=not args.uncompiled, wire_codec=args.wire_codec)
+        compiled=not args.uncompiled, wire_codec=args.wire_codec,
+        rejoin=_parse_at(args.rejoin), join_after=args.join_after,
+        join_wait=args.join_wait)
 
 
 def _workload_spec(args):
@@ -125,12 +153,18 @@ def _report(res, args):
         print(f"    from batch {b:4d}: {tuple(int(c) for c in counts)}")
     print(f"  capacities (C_i): "
           f"{[round(float(c), 3) for c in res.capacities]}")
+    for adm in res.admissions:
+        print(f"  admitted devs {adm['devs']} (incarnations "
+              f"{adm['incs']}) @batch {adm['batch']}")
     s = res.transport_stats
     print(f"  transport: {s['delivered']} delivered / {s['dropped']} "
           f"dropped / {s['to_dead']} to-dead, {s['bytes'] / 1e6:.2f} MB")
     if res.worker_exitcodes:
         print(f"  worker exit codes: {res.worker_exitcodes} "
               f"(-9 = SIGKILLed by fault injection)")
+    if any(len(h) > 1 for h in res.exitcode_history.values()):
+        print(f"  exit-code history (per incarnation): "
+              f"{res.exitcode_history}")
 
 
 def main():
@@ -146,10 +180,7 @@ def main():
         assert len(caps) == args.workers, (caps, args.workers)
         specs = [DeviceSpec(f"dev-{i}", c) for i, c in enumerate(caps)]
 
-    kill = None
-    if args.kill:
-        dev, b = args.kill.split("@")
-        kill = (int(dev), int(b))
+    kill = _parse_at(args.kill)
 
     cfg = _build_cfg(args, specs, kill)
     spec = _workload_spec(args)
@@ -162,11 +193,17 @@ def main():
             addr_of = net.parse_peers(args.peers)
             host, _, port = args.listen.rpartition(":")
             addr_of[args.dev] = (host, int(port))
-            net.worker_main(args.dev, addr_of, spec, cfg)
+            net.worker_main(args.dev, addr_of, spec, cfg,
+                            incarnation=args.incarnation)
             return
         if args.role == "coordinator":
             assert args.listen and args.peers, \
                 "--role coordinator needs --listen and --peers"
+            assert not (args.rejoin or args.join_after is not None), \
+                "--rejoin/--join-after cannot spawn processes on OTHER " \
+                "hosts: relaunch the worker's own command with " \
+                "--incarnation bumped; the coordinator admits it " \
+                "automatically"
             from repro.runtime.live import COORD, Coordinator
             addr_of = net.parse_peers(args.peers)
             host, _, port = args.listen.rpartition(":")

@@ -147,6 +147,16 @@ class LiveConfig:
     #                              keeps the legacy eager vjp + sgd_update
     wire_codec: bool = False     # round-trip every payload through codec.py
     interpret: Optional[bool] = None   # Pallas interpret (None = autodetect)
+    # ---- elastic membership (rejoin / hot-join) -------------------------
+    rejoin: Optional[tuple[int, int]] = None   # (device, batch): relaunch
+    #   the previously-killed device when that batch commits; it rejoins
+    #   with a bumped incarnation and the pipeline expands back
+    join_after: Optional[int] = None   # batch: hot-join a NEVER-seen device
+    #   (id = num_workers) when that batch commits, growing the pipeline
+    #   beyond the launch set
+    join_wait: float = 20.0      # max seconds the coordinator waits at a
+    #   control point for a scheduled joiner's hello before giving up on
+    #   admitting it there (bounded — a no-show can never wedge the run)
 
 
 @dataclasses.dataclass
@@ -162,6 +172,12 @@ class LiveResult:
     worker_exitcodes: dict = dataclasses.field(default_factory=dict)
     #   dev -> OS exit code, filled by net.run_tcp_training (multi-process
     #   runs only; a SIGKILLed worker reports -9)
+    admissions: list = dataclasses.field(default_factory=list)
+    #   [{devs, incs, batch, partition}] — one record per elastic
+    #   admission (worker rejoin or hot-join)
+    exitcode_history: dict = dataclasses.field(default_factory=dict)
+    #   dev -> [exit codes in incarnation order] (multi-process runs; a
+    #   SIGKILL-then-rejoin device reads [-9, 0])
 
     @property
     def final_partition(self) -> tuple:
@@ -176,7 +192,9 @@ class Worker(threading.Thread):
     def __init__(self, dev: int, chain: LayerChain, data_fn, transport,
                  cfg: LiveConfig, abort_event: threading.Event,
                  spec: DeviceSpec, layout: ChainLayout, global_store=None,
-                 remote: bool = False):
+                 remote: bool = False, incarnation: int = 0,
+                 announce: bool = False,
+                 hello_payload: Optional[dict] = None):
         super().__init__(daemon=True, name=f"worker-{dev}")
         self.dev = dev
         self.chain = chain
@@ -190,6 +208,19 @@ class Worker(threading.Thread):
         self.remote = remote                   # own-process worker (net.py):
         #                                        abort arrives as a message,
         #                                        "die" means SIGKILL yourself
+        self.incarnation = incarnation         # bumped per relaunch; a die
+        #                                        naming an older incarnation
+        #                                        is a stale frame — ignored
+        self.announce = announce               # hello the coordinator at
+        #                                        loop start, and RESEND it
+        #                                        until any inbound message
+        #                                        proves we are known (a
+        #                                        single hello lost to a
+        #                                        drop fault or an expired
+        #                                        retry window must not
+        #                                        silently cancel a join)
+        self.hello_payload = (hello_payload
+                              or {"dev": dev, "inc": incarnation})
         self.stop_event = threading.Event()
         self.hb = Heartbeat(transport, dev, COORD, cfg.heartbeat_interval)
         self.stash: Optional[VerticalSyncStash] = None
@@ -266,6 +297,16 @@ class Worker(threading.Thread):
             os.kill(os.getpid(), signal.SIGKILL)
         self.crash()
 
+    def _maybe_die(self, payload) -> None:
+        """Epoch-fenced ``die``: fault injection names the incarnation it
+        was aimed at. A relaunched worker (higher incarnation) reusing the
+        dead one's port could otherwise be killed by a stale frame still
+        in a sender's retry queue."""
+        inc = payload.get("inc") if isinstance(payload, dict) else None
+        if inc is not None and inc != self.incarnation:
+            return
+        self._die()
+
     def shutdown(self) -> None:
         """Cooperative stop (end of run): cease the loop and the beacon."""
         self.stop_event.set()
@@ -276,11 +317,24 @@ class Worker(threading.Thread):
     def run(self):
         """Message loop: react to coordinator commands and peer traffic
         until a ``stop`` (clean shutdown) or ``die`` (injected crash)."""
+        greeted = not self.announce
+        last_hello = 0.0
         self.hb.start()
         while not self.stop_event.is_set():
+            if not greeted:
+                # announce (and re-announce) the incarnation: hello is the
+                # one message that crosses the kill-fence, and until we
+                # are admitted it is our only voice — resend until ANY
+                # inbound message proves the coordinator unfenced us
+                now = time.monotonic()
+                if now - last_hello > max(0.5, self.cfg.heartbeat_interval):
+                    self.transport.send(self.dev, COORD, "hello",
+                                        self.hello_payload)
+                    last_hello = now
             msg = self.transport.recv(self.dev, timeout=self.cfg.poll)
             if msg is None:
                 continue
+            greeted = True
             k = msg.kind
             if k == "segment":
                 self._run_segment(msg.payload)
@@ -297,12 +351,17 @@ class Worker(threading.Thread):
             elif k == "probe":
                 self.transport.send(self.dev, COORD, "probe_ack",
                                     {"status": "ok"})
+            elif k == "cap_probe":
+                self._do_cap_probe(msg.payload)
+            elif k == "admit":
+                pass      # admission confirmed; the repart that follows
+                #           carries everything this worker must act on
             elif k == "abort":
                 self.abort_event.set()
             elif k == "refit_abort":
                 self._refit_cancel = True
             elif k == "die":
-                self._die()
+                self._maybe_die(msg.payload)
             elif k == "stop":
                 break
         self.hb.stop()
@@ -325,12 +384,14 @@ class Worker(threading.Thread):
             self._serve_fetch(msg)
         elif k == "fetch_res":
             self._fetch_res[msg.payload["req_id"]] = msg.payload["layers"]
+        elif k == "cap_probe":
+            self._do_cap_probe(msg.payload)
         elif k == "abort":
             self.abort_event.set()
         elif k == "refit_abort":
             self._refit_cancel = True
         elif k == "die":
-            self._die()
+            self._maybe_die(msg.payload)
         elif k == "stop":
             self.stop_event.set()
 
@@ -343,9 +404,20 @@ class Worker(threading.Thread):
                 self._dispatch(msg)
         return store.pop(key)
 
+    def _learn_routes(self, spec: dict) -> None:
+        """Install coordinator-provided peer addresses (TCP runs): a device
+        admitted after this worker's bring-up is absent from its startup
+        ``addr_of``, and acts/grads/fetches to it would otherwise drop."""
+        addrs = spec.get("addrs")
+        if addrs and hasattr(self.transport, "add_route"):
+            for d, a in addrs.items():
+                if int(d) != self.dev:
+                    self.transport.add_route(int(d), (a[0], int(a[1])))
+
     def _run_segment(self, spec: dict):
         if self.remote:      # any past abort is over once new work arrives
             self.abort_event.clear()
+        self._learn_routes(spec)
         stage, n = spec["stage"], spec["n"]
         b0, nb = spec["b0"], spec["nb"]
         devs = spec["stage_devs"]
@@ -464,7 +536,32 @@ class Worker(threading.Thread):
         return {j: self.slice_layout.view(newest, j)
                 for j in self.slice_layout.layer_ids}
 
+    def _do_cap_probe(self, spec: dict):
+        """Admission capacity probe: time an eager forward over the given
+        layer range on this device's OWN chain copy (init weights — timing
+        only), so the coordinator can form an Eq. 1 capacity estimate for
+        a joiner before it has run a single segment. The reference is the
+        central node's profiled forward time for the same range."""
+        a, e = spec.get("range", (0, self.chain.num_layers - 1))
+        reps = max(1, int(spec.get("repeats", 2)))
+        x0 = self.chain.input_of(self.data_fn(0))
+        ts = []
+        for _ in range(reps):
+            x = x0
+            t0 = time.perf_counter()
+            for j in range(a, e + 1):
+                x = self.chain.apply_layer(j, self.chain.params[j], x)
+            jax.block_until_ready(x)
+            ts.append(time.perf_counter() - t0)
+        self.transport.send(self.dev, COORD, "cap_probe_ack",
+                            {"dev": self.dev, "t": float(np.median(ts)),
+                             "range": (a, e)})
+
     def _do_replicate(self, spec: dict):
+        if self.stash is None:
+            return            # admitted but not yet installed: nothing to
+            #                   snapshot; the coordinator's short ack window
+            #                   tolerates the missing ack
         snap = self._snapshot()
         if spec["chain"]:
             self.transport.send(self.dev, spec["chain_to"], "chain_put",
@@ -540,10 +637,13 @@ class Worker(threading.Thread):
         would swap in old weights)."""
         if self.remote:      # the drain this refit follows has completed
             self.abort_event.clear()
+        self._learn_routes(spec)
         self._refit_cancel = False
         a, e = spec["range"]
         devs = spec["stage_devs"]
-        held = self._snapshot()
+        # a JOINER (admission refit) holds no slice yet: nothing local to
+        # serve, everything arrives by fetch
+        held = self._snapshot() if self.stash is not None else {}
         # MERGE (not replace): back-to-back refits — an abandoned
         # re-partition followed by a §III-F recovery — leave peers (and
         # this worker's own plan) referencing slices from either layout;
@@ -621,14 +721,15 @@ class Coordinator:
 
     def __init__(self, chain: LayerChain, data_fn: Callable[[int], dict],
                  cfg: LiveConfig, transport: Optional[Transport] = None,
-                 remote_devs: Optional[set] = None):
+                 remote_devs: Optional[set] = None,
+                 spawner: Optional[Callable[[int, int], None]] = None):
         self.chain = chain
         self.data_fn = data_fn
         self.cfg = cfg
         self.proto = cfg.protocol
         N = cfg.num_workers
-        self.specs = (cfg.device_specs
-                      or [DeviceSpec(f"dev-{i}") for i in range(N)])
+        self.specs = list(cfg.device_specs
+                          or [DeviceSpec(f"dev-{i}") for i in range(N)])
         assert len(self.specs) == N
         self.bandwidth = (cfg.bandwidth if cfg.bandwidth is not None
                           else uniform_bandwidth(N))
@@ -664,6 +765,32 @@ class Coordinator:
         if cfg.kill is not None:
             assert cfg.kill[0] != 0, "the central node (device 0) never fails"
         self._kill = dict([cfg.kill]) if cfg.kill else {}
+        # ---- elastic membership state -----------------------------------
+        self.spawner = spawner           # harness hook: launch a new worker
+        #                                  process (dev, incarnation); None
+        #                                  = spawn an in-process thread
+        self.admissions: list = []
+        self._inc: dict[int, int] = {dev: 0 for dev in range(N)}
+        #   admitted incarnation per device; a hello at or below it while
+        #   the device is fenced is a stale frame and is ignored
+        self._pending_joins: dict[int, dict] = {}   # dev -> {inc, addr}
+        self._spawn_queue: dict[int, int] = {}      # dev -> incarnation,
+        #   deferred until the dev has left the worker list (a rejoin
+        #   scheduled before its death is even detected must not race
+        #   §III-F fencing)
+        self._join_deadline: dict[int, float] = {}  # dev -> give-up time
+        self._cap_acks: dict[int, dict] = {}
+        self._dev_addrs: dict[int, tuple] = {}      # dev -> (host, port)
+        #   learned from hellos; shipped to peers with segment/refit
+        #   payloads so workers can route to devices admitted after their
+        #   own bring-up (TCP runs; empty under the queue transport)
+        self._respawn: dict[int, int] = {}          # dev -> commit batch
+        if cfg.rejoin is not None:
+            dev, b = cfg.rejoin
+            assert dev != 0, "the central node (device 0) cannot rejoin"
+            self._respawn[dev] = b
+        if cfg.join_after is not None:
+            self._respawn[N] = cfg.join_after       # hot-join: next free id
 
     # ------------------------------ helpers ------------------------------
 
@@ -673,6 +800,15 @@ class Coordinator:
     def _send_all(self, worker_ids, kind, payload_fn):
         for i, dev in enumerate(worker_ids):
             self.transport.send(COORD, dev, kind, payload_fn(i, dev))
+
+    def _addrs_payload(self, worker_ids) -> dict:
+        """{dev -> (host, port)} for the listed workers, from their hellos.
+        Piggybacked on segment/refit payloads so every peer can reach a
+        device admitted after that peer's own bring-up (its startup
+        ``addr_of`` predates the joiner). Empty under the queue transport
+        (no hellos carry addresses)."""
+        return {dev: list(self._dev_addrs[dev]) for dev in worker_ids
+                if dev in self._dev_addrs}
 
     def _collect(self, kinds: set, expect: int, timeout: float,
                  on_msg=None) -> int:
@@ -722,6 +858,10 @@ class Coordinator:
                 self.stash_high_water[msg.src] = max(
                     self.stash_high_water.get(msg.src, 0),
                     msg.payload["stash_high_water"])
+        elif msg.kind == "hello":
+            self._absorb_hello(msg)
+        elif msg.kind == "cap_probe_ack":
+            self._cap_acks[msg.payload.get("dev", msg.src)] = msg.payload
         elif msg.kind == "commit":
             self._committed = max(self._committed, msg.payload)
             for dev, kb in list(self._kill.items()):
@@ -729,6 +869,34 @@ class Coordinator:
                     self._log(f"KILL worker dev{dev} @batch {msg.payload}")
                     self._kill_worker(dev)
                     del self._kill[dev]
+            for dev, rb in list(self._respawn.items()):
+                if msg.payload >= rb:
+                    self._request_spawn(dev)
+                    del self._respawn[dev]
+
+    def _absorb_hello(self, msg) -> None:
+        """Record a join/rejoin request. Epoch fencing happens HERE: a
+        hello whose incarnation does not exceed the one last admitted for
+        that device is a stale frame (duplicate startup announce, or a
+        zombie's replay) and is dropped. Genuinely new incarnations stay
+        pending until the device is out of the worker list — admission
+        itself runs at control points (`_admit_pending`)."""
+        p = msg.payload if isinstance(msg.payload, dict) else {}
+        dev = int(p.get("dev", msg.src))
+        inc = int(p.get("inc", 0))
+        addr = ((p["host"], int(p["port"]))
+                if "host" in p and "port" in p else None)
+        if addr is not None:
+            # remember where the device listens — propagated to peers in
+            # segment/refit payloads so everyone can reach late joiners
+            self._dev_addrs[dev] = addr
+        if inc <= self._inc.get(dev, -1):
+            if inc > 0 or dev not in self._inc:   # not the startup announce
+                self._log(f"stale hello fenced: dev{dev} inc{inc}")
+            return
+        cur = self._pending_joins.get(dev)
+        if cur is None or inc > cur["inc"]:
+            self._pending_joins[dev] = {"inc": inc, "addr": addr}
 
     def _kill_worker(self, dev: int) -> None:
         """Inject a fatal fault. In-process workers crash directly (queue
@@ -740,9 +908,12 @@ class Coordinator:
         else:
             # a few duplicates: SIGKILL is idempotent and "die" is
             # best-effort like any message — a drop-faulted transport must
-            # not silently skip the scheduled fault injection
+            # not silently skip the scheduled fault injection. The payload
+            # names the incarnation being killed, so a stale retry cannot
+            # fell a relaunched worker on the same port (epoch fencing).
             for _ in range(3):
-                self.transport.send(COORD, dev, "die", {})
+                self.transport.send(COORD, dev, "die",
+                                    {"inc": self._inc.get(dev, 0)})
 
     def _fence_worker(self, dev: int) -> None:
         """Ensure a classified-dead worker is truly unreachable before
@@ -752,6 +923,177 @@ class Coordinator:
             self.workers[dev].crash()
         else:
             self.transport.kill(dev)
+
+    # ------------------- elastic membership (admission) -------------------
+
+    def _ensure_spec(self, dev: int) -> None:
+        """Grow ``self.specs`` to cover ``dev`` — device ids need not be
+        contiguous (an operator may hot-join ``--dev 5`` into a 3-device
+        cluster); gap devices get default specs too, since both the spec
+        capacity branch and worker construction index by device id."""
+        while len(self.specs) <= dev:
+            self.specs.append(DeviceSpec(f"dev-{len(self.specs)}"))
+
+    def _request_spawn(self, dev: int) -> None:
+        """A scheduled relaunch (``cfg.rejoin`` / ``cfg.join_after``)
+        fired. The actual launch is DEFERRED to the next control point at
+        which the device is out of the worker list: a rejoin scheduled
+        right after the kill must not race §III-F fencing of the old
+        incarnation."""
+        inc = self._inc.get(dev, 0) + 1
+        self._spawn_queue[dev] = inc
+        self._log(f"relaunch requested: dev{dev} inc{inc}")
+
+    def _spawn_local(self, dev: int, inc: int) -> None:
+        """In-process (queue transport) relaunch: a FRESH Worker thread for
+        the device (threads cannot restart; state starts empty, exactly
+        like a rebooted edge device). It announces itself with a hello —
+        admission still flows through the same path as a TCP rejoin."""
+        self.transport.register(dev)
+        w = Worker(dev, self.chain, self.data_fn, self.transport, self.cfg,
+                   self.abort_event, self.specs[dev], self.layout,
+                   incarnation=inc, announce=True)
+        self.workers[dev] = w
+        w.start()
+
+    def _await_scheduled_joiners(self, worker_ids: list) -> None:
+        """Bounded wait for a spawned joiner's hello so admission lands at
+        THIS control point instead of segments later (a fresh process
+        cold-starts JAX). ``cfg.join_wait`` caps the wait per joiner — a
+        no-show is logged and abandoned, never waited on again."""
+        while True:
+            now = time.monotonic()
+            waiting = [d for d in self._join_deadline
+                       if d not in self._pending_joins
+                       and d not in worker_ids]
+            for d in [d for d in waiting if now >= self._join_deadline[d]]:
+                del self._join_deadline[d]
+                waiting.remove(d)
+                self._log(f"joiner dev{d} never said hello — giving up")
+            if not waiting:
+                return
+            msg = self.transport.recv(COORD, timeout=self.cfg.poll)
+            if msg is not None:
+                self._absorb(msg)
+
+    def _joiner_capacity(self, dev: int, b0: int, profile) -> float:
+        """Capacity estimate for a joiner BEFORE its first segment: the
+        spec'd value under ``capacity_source='spec'`` (deterministic —
+        what the transport-parity tests rely on), else a live capacity
+        probe — the joiner times an eager forward over the whole chain and
+        the ratio against the central node's profiled forward time is its
+        Eq. 1 capacity. No answer within the window -> the paper's
+        homogeneity assumption (1.0) until measured."""
+        if self.cfg.capacity_source == "spec":
+            c0 = self.specs[0].capacity_at(b0)
+            return self.specs[dev].capacity_at(b0) / max(c0, 1e-12)
+        self._cap_acks.pop(dev, None)
+        L = self.chain.num_layers
+        self.transport.send(COORD, dev, "cap_probe",
+                            {"range": (0, L - 1), "repeats": 3})
+        deadline = time.monotonic() + max(2.0, 5 * self.proto.detect_timeout)
+        while dev not in self._cap_acks and time.monotonic() < deadline:
+            msg = self.transport.recv(COORD, timeout=self.cfg.poll)
+            if msg is not None:
+                self._absorb(msg)
+        ack = self._cap_acks.pop(dev, None)
+        if ack is None:
+            self._log(f"cap_probe dev{dev}: no answer, assuming C=1.0")
+            return 1.0
+        ref = float(np.sum(profile.fwd_times))
+        return max(float(ack["t"]) / max(ref, 1e-12), 1e-6)
+
+    def _admit_pending(self, worker_ids, part, est, profile, state,
+                       partitions, b0):
+        """Admission commit, run at control points: launch deferred spawns,
+        wait (bounded) for their hellos, then fold every admissible joiner
+        into the cluster — un-fence its transport, form its capacity,
+        re-solve the §III-D partition over the GROWN worker list, and
+        redistribute slices (the joiner fetches everything; peers donate
+        per plan, with the usual chain/global §III-F fallbacks). Returns
+        ``(worker_ids, part, est, b0, admitted)``. A death during the
+        expansion falls into the standard shortfall -> probe -> §III-F
+        recovery machinery, so a failed admission can shrink but never
+        wedge the run."""
+        for dev, inc in list(self._spawn_queue.items()):
+            if dev in worker_ids:
+                continue                   # §III-F has not evicted it yet
+            del self._spawn_queue[dev]
+            self._join_deadline[dev] = time.monotonic() + self.cfg.join_wait
+            self._ensure_spec(dev)
+            if self.spawner is not None:
+                self.remote_devs.add(dev)
+                self._log(f"spawning dev{dev} inc{inc} (process)")
+                self.spawner(dev, inc)
+            elif hasattr(self.transport, "add_route"):
+                # socket transport without a spawner (multi-host
+                # coordinator role): this process cannot host a worker
+                # thread for a remote device — the operator relaunches the
+                # worker's own command with --incarnation bumped instead
+                self._join_deadline.pop(dev, None)
+                self._log(f"cannot spawn dev{dev} here (no spawner); "
+                          f"relaunch it on its host with a bumped "
+                          f"incarnation")
+            else:
+                self._log(f"spawning dev{dev} inc{inc} (thread)")
+                self._spawn_local(dev, inc)
+        self._await_scheduled_joiners(worker_ids)
+        ready = {dev: info for dev, info in self._pending_joins.items()
+                 if dev not in worker_ids}
+        if not ready:
+            return worker_ids, part, est, b0, False
+        devs = sorted(ready)
+        est_new = est
+        for dev in devs:
+            info = ready[dev]
+            self._pending_joins.pop(dev, None)
+            self._join_deadline.pop(dev, None)
+            self._inc[dev] = info["inc"]
+            if dev not in self.workers:
+                # no local thread for it -> it lives in its own process
+                # (covers operator-relaunched workers on other hosts that
+                # were never in the startup remote set)
+                self.remote_devs.add(dev)
+            self._ensure_spec(dev)
+            if info.get("addr") is not None \
+                    and hasattr(self.transport, "add_route"):
+                self.transport.add_route(dev, info["addr"])
+            self.transport.register(dev)
+            self.transport.revive(dev)
+            self.transport.send(COORD, dev, "admit",
+                                {"dev": dev, "inc": info["inc"],
+                                 "batch": b0})
+            est_new = est_new.add_worker(
+                self._joiner_capacity(dev, b0, profile))
+        new_ids = list(worker_ids) + devs
+        self.bandwidth = protocol.expand_bandwidth(self.bandwidth,
+                                                   max(new_ids) + 1)
+        new_part = protocol.solve_from_estimates(
+            profile, self.bandwidth, new_ids, est_new,
+            self.proto.comm_factor)
+        plans = protocol.plan_admission(new_part, part, len(worker_ids))
+        self._log(f"admit devs {devs}: {part.counts} -> "
+                  f"{new_part.counts} @batch {b0}")
+        shortfall = self._redistribute(new_part, plans, new_ids,
+                                       version=b0, kind="repart")
+        if shortfall:
+            # a death during the expansion (possibly the joiner itself):
+            # standard §III-F recovery over the EXPANDED list — survivors
+            # still serve their pre-refit slices, the global store
+            # backstops the rest
+            state.enter_recovery()
+            worker_ids, part, est, b0 = self._handle_shortfall(
+                shortfall, new_ids, new_part, est_new, profile, state,
+                partitions)
+            return worker_ids, part, est, b0, True
+        partitions.append((b0, new_part.points))
+        self.admissions.append({"devs": devs,
+                                "incs": [self._inc[d] for d in devs],
+                                "batch": b0,
+                                "partition": new_part.points})
+        self._log(f"admitted: {len(new_ids)} workers, "
+                  f"partition {new_part.counts}")
+        return new_ids, new_part, est_new, b0, True
 
     # ----------------------------- phases --------------------------------
 
@@ -810,13 +1152,14 @@ class Coordinator:
         # acks must not satisfy the new round
         self._ready_acks[version] = set()
         self._ready_missing[version] = []
+        addrs = self._addrs_payload(worker_ids)
         self._send_all(
             worker_ids, kind,
             lambda i, dev: {"stage": i, "n": len(worker_ids),
                             "range": part_new.ranges[i],
                             "stage_devs": list(worker_ids),
                             "need": plans[i].need, "local": plans[i].local,
-                            "version": version})
+                            "version": version, "addrs": addrs})
         deadline = time.monotonic() + self.cfg.segment_timeout
 
         def _pending():
@@ -856,11 +1199,12 @@ class Coordinator:
         self._done = {}
         self._committed = b0 - 1
         self._last_hb = {dev: time.monotonic() for dev in worker_ids}
+        addrs = self._addrs_payload(worker_ids)
         self._send_all(
             worker_ids, "segment",
             lambda i, dev: {"stage": i, "n": n, "b0": b0, "nb": nb,
                             "stage_devs": list(worker_ids),
-                            "seg_id": self._cur_seg})
+                            "seg_id": self._cur_seg, "addrs": addrs})
         deadline = time.monotonic() + self.cfg.segment_timeout
         while len(self._done) < n:
             now = time.monotonic()
@@ -983,6 +1327,12 @@ class Coordinator:
             # not leak N worker + heartbeat threads — and own-process
             # workers must be told to exit so their processes can be joined
             for dev in sorted(self.remote_devs):
+                if not self.transport.is_alive(dev) \
+                        and dev in self._pending_joins:
+                    # a joiner process that was never admitted is alive
+                    # behind the fence of its dead predecessor: un-fence so
+                    # the stop reaches it and its process can be joined
+                    self.transport.revive(dev)
                 if self.transport.is_alive(dev):
                     self.transport.send(COORD, dev, "stop", {})
             for w in self.workers.values():
@@ -998,7 +1348,7 @@ class Coordinator:
             capacities=np.array(est.capacities),
             transport_stats=dict(self.transport.stats),
             stash_high_water=dict(self.stash_high_water),
-            recoveries=self.recoveries)
+            recoveries=self.recoveries, admissions=self.admissions)
 
     def _run_protocol(self, est, part, partitions, worker_ids, profile,
                       state):
@@ -1110,6 +1460,19 @@ class Coordinator:
                     worker_ids, part, est, b0 = self._run_failure_recovery(
                         dead, worker_ids, part, est, profile, state,
                         partitions)
+                    continue
+
+            # ---- elastic admission (rejoin / hot-join) ------------------
+            if self._spawn_queue or self._pending_joins \
+                    or self._join_deadline:
+                worker_ids, part, est, b0, admitted = self._admit_pending(
+                    worker_ids, part, est, profile, state, partitions, b0)
+                if admitted:
+                    # re-seed replica tiers over the grown layout (a
+                    # joiner's chain tier starts empty) and skip the
+                    # regular cadence this boundary — fresh replicas were
+                    # just made and the partition was just re-solved
+                    self._replicate(b0, True, True, part, worker_ids)
                     continue
 
             # ---- replication cadence (§III-E) ---------------------------

@@ -51,6 +51,7 @@ coordinator control plane is node ``-1`` (``live.COORD``).
 from __future__ import annotations
 
 import queue
+import select
 import socket
 import struct
 import threading
@@ -102,7 +103,18 @@ class _Peer:
     """Outbound connection to one remote address: a frame queue drained by
     a sender thread that dials with exponential backoff and retries each
     frame until its per-frame window expires (then drops it — the network
-    gives no delivery guarantee and the protocol must not assume one)."""
+    gives no delivery guarantee and the protocol must not assume one).
+
+    The sender COALESCES: after blocking on the first frame it drains
+    whatever else is already queued (up to ``coalesce_bytes``) and ships
+    the batch as one ``sendall``. Small control frames (acts, grads,
+    heartbeats) otherwise cost one syscall each, which is what capped the
+    TCP transport at a fraction of the in-process throughput; with
+    TCP_NODELAY set (no Nagle delay on the last partial segment) batching
+    in userspace is both lower latency AND higher throughput. On a send
+    failure the whole batch is retried on a fresh connection — duplicates
+    are possible (exactly as with per-frame retries) and every protocol
+    message is idempotent by design."""
 
     def __init__(self, addr: Addr, transport: "SocketTransport"):
         self.addr = addr
@@ -126,23 +138,66 @@ class _Peer:
         s.settimeout(None)
         return s
 
+    def _stale(self) -> bool:
+        """Per-incarnation reconnect guard: connections are write-only by
+        construction (each process dials its own outbound links), so this
+        socket turning READABLE can only mean peer EOF/RST — the process
+        behind it died (and may have been relaunched on the same port).
+        Detected BEFORE writing, because the first write into a half-open
+        socket "succeeds" into the void: without this check a frame to a
+        rejoined worker would be silently swallowed by the corpse's
+        CLOSE_WAIT socket instead of reaching the new incarnation."""
+        if self.sock is None:
+            return False
+        try:
+            readable, _, _ = select.select([self.sock], [], [], 0)
+            return bool(readable)
+        except (OSError, ValueError):
+            return True
+
+    def _next_batch(self) -> Optional[list]:
+        """Block for one frame, then coalesce already-queued ones. Returns
+        the list of (born, frame) items, or None on shutdown sentinel."""
+        item = self.q.get()
+        if item is None:
+            return None
+        batch = [item]
+        limit = self.transport.coalesce_bytes
+        size = len(item[1])
+        while size < limit:
+            try:
+                nxt = self.q.get_nowait()
+            except queue.Empty:
+                break
+            if nxt is None:              # keep the sentinel for the caller
+                self.q.put(None)
+                break
+            batch.append(nxt)
+            size += len(nxt[1])
+        return batch
+
     def _run(self):
         t = self.transport
         backoff = t.backoff_initial
         while not t.closed:
-            item = self.q.get()
-            if item is None:
+            batch = self._next_batch()
+            if batch is None:
                 break
-            born, frame = item
-            deadline = born + t.retry_window
+            blob = b"".join(frame for _, frame in batch)
             while not t.closed:
                 try:
+                    if self._stale():
+                        try:
+                            self.sock.close()
+                        except OSError:
+                            pass
+                        self.sock = None
                     if self.sock is None:
                         self.sock = self._connect()
                         backoff = t.backoff_initial
-                    self.sock.sendall(frame)
+                    self.sock.sendall(blob)
                     with t._lock:
-                        t.stats["tx_bytes"] += len(frame)
+                        t.stats["tx_bytes"] += len(blob)
                     break
                 except OSError:
                     if self.sock is not None:
@@ -151,10 +206,21 @@ class _Peer:
                         except OSError:
                             pass
                         self.sock = None
-                    if time.monotonic() > deadline:
+                    # expiry is PER FRAME, as before coalescing: shed only
+                    # the frames whose own retry window lapsed, keep
+                    # retrying the rest (a fresh control frame must not
+                    # inherit a stale queue-mate's deadline)
+                    now = time.monotonic()
+                    alive = [it for it in batch
+                             if now <= it[0] + t.retry_window]
+                    if len(alive) != len(batch):
                         with t._lock:
-                            t.stats["net_dropped"] += 1
-                        break                 # frame expired: drop it
+                            t.stats["net_dropped"] += \
+                                len(batch) - len(alive)
+                        batch = alive
+                        if not batch:
+                            break             # every frame expired
+                        blob = b"".join(frame for _, frame in batch)
                     time.sleep(backoff)
                     backoff = min(backoff * 2, t.backoff_max)
         if self.sock is not None:
@@ -178,18 +244,24 @@ class SocketTransport:
         (useful for tests; REAL faults here are dead processes).
     retry_window : seconds a frame may sit in a peer's outbound queue
         while the sender dials/redials before it is dropped.
+    coalesce_bytes : sender-side batching bound — a sender thread drains
+        up to this many queued bytes into one ``sendall`` (0 disables
+        coalescing; used by the throughput benchmark to record the
+        before/after of the optimization).
     """
 
     def __init__(self, addr_of: Dict[int, Addr], local: Sequence[int],
                  fault: Optional[FaultSpec] = None, *,
                  retry_window: float = 10.0,
-                 backoff: Tuple[float, float] = (0.05, 1.0)):
+                 backoff: Tuple[float, float] = (0.05, 1.0),
+                 coalesce_bytes: int = 1 << 20):
         import random
         self.addr_of = dict(addr_of)
         self.local = tuple(local)
         self.fault = fault or FaultSpec()
         self._rng = random.Random(self.fault.seed)
         self.retry_window = retry_window
+        self.coalesce_bytes = coalesce_bytes
         self.backoff_initial, self.backoff_max = backoff
         self.closed = False
         self._lock = threading.Lock()
@@ -217,6 +289,15 @@ class SocketTransport:
         inbox lives in its own process)."""
         if node in self.local:
             self._inboxes.setdefault(node, queue.Queue())
+
+    def add_route(self, node: int, addr: Addr) -> None:
+        """Learn (or update) a remote node's address at runtime — how a
+        hot-joined device becomes reachable: its ``hello`` carries the
+        address it listens on, and the coordinator installs the route
+        before admitting it. Safe while senders are running (routes are
+        resolved per ``send``)."""
+        with self._lock:
+            self.addr_of[node] = tuple(addr)
 
     def kill(self, node: int) -> None:
         """Fence a node locally: frames to and from it are dropped from now
@@ -249,10 +330,13 @@ class SocketTransport:
         the codec (fresh deserialized copy, same as one TCP hop); remote
         destinations are framed and enqueued on the peer's sender thread.
         The return value only means "accepted for delivery" — like a real
-        socket write, it is NOT an acknowledgment."""
+        socket write, it is NOT an acknowledgment. ``hello`` crosses a
+        kill-fence (see ``Transport.send``): it announces a NEW incarnation
+        of a fenced device, and admission is decided by the incarnation in
+        its payload, not by the transport."""
         with self._lock:
             self.stats["sent"] += 1
-            if src in self._dead or dst in self._dead:
+            if (src in self._dead or dst in self._dead) and kind != "hello":
                 self.stats["to_dead"] += 1
                 return False
             if (self.fault.drop > 0.0 and kind not in self.fault.protect
@@ -265,7 +349,7 @@ class SocketTransport:
             if dst in self._inboxes:
                 self._deliver(src, dst, data)
             else:
-                addr = self.addr_of.get(dst)
+                addr = self._route(dst)
                 if addr is None:
                     return
                 frame = _HDR.pack(len(data) + 8, src, dst) + data
@@ -276,6 +360,10 @@ class SocketTransport:
         else:
             _ship()
         return True
+
+    def _route(self, dst: int) -> Optional[Addr]:
+        with self._lock:
+            return self.addr_of.get(dst)
 
     def recv(self, node: int, timeout: float = 0.05) -> Optional[Message]:
         """Blocking receive with timeout; None on timeout or if fenced."""
@@ -300,14 +388,14 @@ class SocketTransport:
             return p
 
     def _deliver(self, src: int, dst: int, data: bytes) -> None:
-        with self._lock:
-            if src in self._dead or dst in self._dead:
-                self.stats["to_dead"] += 1
-                return
         inbox = self._inboxes.get(dst)
         if inbox is None:
             return
         kind, payload = wire.decode(data)
+        with self._lock:
+            if (src in self._dead or dst in self._dead) and kind != "hello":
+                self.stats["to_dead"] += 1
+                return
         inbox.put(Message(src=src, dst=dst, kind=kind, payload=payload,
                           sent_at=time.monotonic()))
         with self._lock:
@@ -324,32 +412,28 @@ class SocketTransport:
             t = threading.Thread(target=self._read_loop, args=(conn,),
                                  daemon=True, name="net-read")
             t.start()
-            self._readers.append(t)
-
-    @staticmethod
-    def _read_exact(conn: socket.socket, n: int) -> Optional[bytes]:
-        buf = b""
-        while len(buf) < n:
-            chunk = conn.recv(n - len(buf))
-            if not chunk:
-                return None
-            buf += chunk
-        return buf
+            self._readers.append((t, conn))
 
     def _read_loop(self, conn: socket.socket):
+        """Reader for one inbound connection: buffered recv (the sender
+        coalesces frames, so one recv often yields several) with complete
+        frames parsed out of the accumulation buffer."""
+        buf = bytearray()
         try:
             while not self.closed:
-                hdr = self._read_exact(conn, 4)
-                if hdr is None:
+                while len(buf) >= 4:
+                    (length,) = struct.unpack_from("<I", buf, 0)
+                    if not 8 <= length < _MAX_FRAME:
+                        return                    # framing corruption: drop
+                    if len(buf) < 4 + length:
+                        break
+                    src, dst = struct.unpack_from("<ii", buf, 4)
+                    self._deliver(src, dst, bytes(buf[12:4 + length]))
+                    del buf[:4 + length]
+                chunk = conn.recv(1 << 18)
+                if not chunk:
                     return
-                (length,) = struct.unpack("<I", hdr)
-                if not 8 <= length < _MAX_FRAME:
-                    return                        # framing corruption: drop
-                body = self._read_exact(conn, length)
-                if body is None:
-                    return
-                src, dst = struct.unpack_from("<ii", body)
-                self._deliver(src, dst, body[8:])
+                buf += chunk
         except OSError:
             return
         finally:
@@ -359,13 +443,34 @@ class SocketTransport:
                 pass
 
     def close(self) -> None:
-        """Tear down the listener and all sender threads. Safe to call more
-        than once; in-flight frames may be lost (like pulling the cable)."""
+        """Tear down the listener, accepted connections, and all sender
+        threads. Safe to call more than once; in-flight frames may be lost
+        (like pulling the cable). Closing accepted connections matters for
+        elasticity: it frees the listen port AND sends peers the EOF their
+        per-incarnation reconnect check keys on — the same signals a
+        SIGKILLed process's kernel would emit."""
         self.closed = True
+        try:
+            # shutdown BEFORE close: close() alone does not wake a thread
+            # blocked in accept(), and the in-flight syscall would keep
+            # the listening socket alive — blocking a relaunch (same
+            # process) from rebinding this port
+            self._listener.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
         try:
             self._listener.close()
         except OSError:
             pass
+        for _, conn in self._readers:
+            try:
+                conn.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
+                conn.close()
+            except OSError:
+                pass
         with self._lock:
             peers = list(self._peers.values())
         for p in peers:
@@ -374,14 +479,22 @@ class SocketTransport:
 
 # ======================= multi-process harness ===========================
 
-def worker_main(dev: int, addr_of: Dict[int, Addr], spec, cfg) -> None:
+def worker_main(dev: int, addr_of: Dict[int, Addr], spec, cfg,
+                incarnation: int = 0) -> None:
     """Entry point of one worker PROCESS (spawned by ``run_tcp_training``
     or run per-host via ``launch/live_train.py --role worker``).
 
     Rebuilds the chain/batches from the deterministic ``WorkloadSpec``,
     connects a ``SocketTransport`` for its single node id, announces itself
     to the coordinator, and runs the standard ``live.Worker`` loop until a
-    ``stop`` (clean end) or ``die`` (self-SIGKILL fault injection)."""
+    ``stop`` (clean end) or ``die`` (self-SIGKILL fault injection).
+
+    ``incarnation`` > 0 marks a RELAUNCH (elastic rejoin, or a hot-joined
+    device never in the startup set): the ``hello`` carries the incarnation
+    and this process's listen address, the coordinator admits it at the
+    next control point (see ``live.Coordinator``), and a ``die`` addressed
+    to an older incarnation is ignored instead of SIGKILLing the fresh
+    process."""
     import os
     os.environ.setdefault("JAX_PLATFORMS", "cpu")
     from repro.runtime.devices import DeviceSpec
@@ -391,10 +504,18 @@ def worker_main(dev: int, addr_of: Dict[int, Addr], spec, cfg) -> None:
     data_fn = lambda gb: batches[gb % len(batches)]
     specs = (cfg.device_specs
              or [DeviceSpec(f"dev-{i}") for i in range(cfg.num_workers)])
+    my_spec = (specs[dev] if dev < len(specs)
+               else DeviceSpec(f"dev-{dev}"))          # hot-joined device
     transport = SocketTransport(addr_of, local=(dev,), fault=cfg.fault)
+    host, port = addr_of[dev]
+    # announce=True: the Worker loop sends the hello AND re-sends it until
+    # the coordinator is heard from — one lost hello (drop fault, expired
+    # retry window) must not silently cancel a bring-up or a rejoin
     worker = Worker(dev, chain, data_fn, transport, cfg, threading.Event(),
-                    specs[dev], chain.flat_layout(), remote=True)
-    transport.send(dev, COORD, "hello", {"dev": dev})
+                    my_spec, chain.flat_layout(), remote=True,
+                    incarnation=incarnation, announce=True,
+                    hello_payload={"dev": dev, "inc": incarnation,
+                                   "host": host, "port": port})
     try:
         worker.run()
     finally:
@@ -415,51 +536,86 @@ def cluster_addresses(num_workers: int, host: str = "127.0.0.1",
     return addr_of
 
 
-def run_tcp_training(spec, cfg, *, host: str = "127.0.0.1",
-                     join_timeout: float = 15.0):
-    """Train over real OS processes: coordinator + worker 0 here, workers
-    1..N-1 spawned as separate interpreters, all talking TCP through
-    ``SocketTransport``. Returns the usual ``LiveResult`` with
-    ``worker_exitcodes`` filled in ({dev -> process exit code}; a worker
-    SIGKILLed by fault injection reports ``-9``)."""
-    import multiprocessing as mp
+def _spawn_with_pythonpath(procs) -> None:
+    """Start processes with the repro package importable in the children:
+    spawned interpreters inherit os.environ, not sys.path — make sure the
+    package is importable even when the parent got it via pytest's
+    `pythonpath` ini option rather than an installed dist or $PYTHONPATH."""
     import os
 
     import repro
-    from repro.runtime.live import COORD, Coordinator
 
-    addr_of = cluster_addresses(cfg.num_workers, host)
-    ctx = mp.get_context("spawn")
-    procs = {dev: ctx.Process(target=worker_main,
-                              args=(dev, addr_of, spec, cfg), daemon=True)
-             for dev in range(1, cfg.num_workers)}
-    # spawned interpreters inherit os.environ, not sys.path — make sure the
-    # package is importable even when the parent got it via pytest's
-    # `pythonpath` ini option rather than an installed dist or $PYTHONPATH
     pkg_root = os.path.dirname(os.path.abspath(list(repro.__path__)[0]))
     old_pp = os.environ.get("PYTHONPATH")
     parts = [pkg_root] + ([old_pp] if old_pp else [])
     os.environ["PYTHONPATH"] = os.pathsep.join(parts)
     try:
-        for p in procs.values():
+        for p in procs:
             p.start()
     finally:
         if old_pp is None:
             os.environ.pop("PYTHONPATH", None)
         else:
             os.environ["PYTHONPATH"] = old_pp
+
+
+def run_tcp_training(spec, cfg, *, host: str = "127.0.0.1",
+                     join_timeout: float = 15.0):
+    """Train over real OS processes: coordinator + worker 0 here, workers
+    1..N-1 spawned as separate interpreters, all talking TCP through
+    ``SocketTransport``. Returns the usual ``LiveResult`` with
+    ``worker_exitcodes`` filled in ({dev -> process exit code}; a worker
+    SIGKILLed by fault injection reports ``-9``).
+
+    Elastic membership: when ``cfg.rejoin``/``cfg.join_after`` schedule a
+    relaunch, the coordinator calls back into this harness (``spawner``)
+    and a FRESH process is started for the device — same address for a
+    rejoining device (the dead process freed its port), a new port for a
+    hot-joined one (its ``hello`` teaches the coordinator the route).
+    ``LiveResult.exitcode_history`` then lists every incarnation's exit
+    code in launch order (e.g. ``{1: [-9, 0]}`` for SIGKILL-then-rejoin);
+    ``worker_exitcodes`` keeps the LAST incarnation per device."""
+    import multiprocessing as mp
+
+    from repro.runtime.live import COORD, Coordinator
+
+    addr_of = cluster_addresses(cfg.num_workers, host)
+    ctx = mp.get_context("spawn")
+    history: Dict[int, list] = {
+        dev: [ctx.Process(target=worker_main,
+                          args=(dev, addr_of, spec, cfg), daemon=True)]
+        for dev in range(1, cfg.num_workers)}
+    _spawn_with_pythonpath([ps[0] for ps in history.values()])
+
+    def spawner(dev: int, incarnation: int) -> None:
+        """Launch a new incarnation of `dev` (rejoin) or a first process
+        for a never-seen device (hot-join, new port)."""
+        child_addr = dict(addr_of)
+        if dev not in child_addr:
+            child_addr[dev] = (host, free_port(host))
+        p = ctx.Process(target=worker_main,
+                        args=(dev, child_addr, spec, cfg, incarnation),
+                        daemon=True)
+        history.setdefault(dev, []).append(p)
+        _spawn_with_pythonpath([p])
+
     chain, batches = spec.build()
     transport = SocketTransport(addr_of, local=(COORD, 0), fault=cfg.fault)
     coord = Coordinator(chain, lambda gb: batches[gb % len(batches)], cfg,
-                        transport=transport, remote_devs=set(procs))
+                        transport=transport, remote_devs=set(history),
+                        spawner=spawner)
     try:
         res = coord.run()
     finally:
-        for p in procs.values():
-            p.join(timeout=join_timeout)
-            if p.is_alive():
-                p.terminate()
-                p.join(timeout=5.0)
+        for ps in history.values():
+            for p in ps:
+                p.join(timeout=join_timeout)
+                if p.is_alive():
+                    p.terminate()
+                    p.join(timeout=5.0)
         transport.close()
-    res.worker_exitcodes = {dev: p.exitcode for dev, p in procs.items()}
+    res.worker_exitcodes = {dev: ps[-1].exitcode
+                            for dev, ps in history.items()}
+    res.exitcode_history = {dev: [p.exitcode for p in ps]
+                            for dev, ps in history.items()}
     return res

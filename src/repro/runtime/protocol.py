@@ -130,6 +130,47 @@ def plan_repartition_all(p_new: PartitionResult, p_cur: PartitionResult,
             for i in range(num_workers)]
 
 
+def plan_admission(p_new: PartitionResult, p_cur: PartitionResult,
+                   n_old: int) -> list[rd.RedistributionPlan]:
+    """Elastic admission (rejoin / hot-join): redistribution plans for a
+    worker list GROWN from ``n_old`` to ``len(p_new.ranges)`` stages, with
+    joiners appended at the end so every existing worker keeps its index.
+
+    Existing workers plan exactly like a §III-D re-partition (fetch from
+    the old holder of each newly assigned layer). A joiner holds nothing:
+    every layer of its new range is fetched from its old-partition holder
+    — whose index is unchanged in the grown list — with the §III-F
+    fallbacks (chain replica, then the central global store) covering a
+    holder that re-partitioned the layer away in the meantime."""
+    plans = [rd.plan_repartition(p_new.points, p_cur.points, i)
+             for i in range(n_old)]
+    for i in range(n_old, len(p_new.ranges)):
+        a, e = p_new.ranges[i]
+        need: dict[int, list[int]] = {}
+        for l in range(a, e + 1):
+            need.setdefault(rd.holder_of(p_cur.points, l), []).append(l)
+        plans.append(rd.RedistributionPlan(need=need, local=[]))
+    return plans
+
+
+def expand_bandwidth(bandwidth: np.ndarray, n_new: int) -> np.ndarray:
+    """Grow an N x N bandwidth matrix to ``n_new`` x ``n_new`` for links to
+    a hot-joined device the matrix never described: new entries take the
+    median of the existing off-diagonal links (the matrix is what the
+    central node measured; a never-seen device gets the typical link until
+    measured)."""
+    n = bandwidth.shape[0]
+    if n_new <= n:
+        return bandwidth
+    off = bandwidth[~np.eye(n, dtype=bool)]
+    finite = off[np.isfinite(off)]
+    fill = float(np.median(finite)) if finite.size else 1e7
+    out = np.full((n_new, n_new), fill)
+    out[:n, :n] = bandwidth
+    np.fill_diagonal(out, np.inf)
+    return out
+
+
 def respipe_takeover(part: PartitionResult, failed: int) -> PartitionResult:
     """ResPipe baseline: the failed stage's layers are absorbed by its
     successor (or predecessor for the last stage) — no re-split."""

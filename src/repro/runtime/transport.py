@@ -125,10 +125,16 @@ class Transport:
     def send(self, src: int, dst: int, kind: str, payload: Any = None) -> bool:
         """Deliver (or drop, per faults). Returns whether it was delivered;
         senders must NOT rely on this — a real network gives no such signal,
-        and the protocol's heartbeats/timeouts are what detect loss."""
+        and the protocol's heartbeats/timeouts are what detect loss.
+
+        ``hello`` is the one kind that crosses a kill-fence: it is the
+        admission message of a NEW incarnation of a fenced device
+        (elastic rejoin), and the coordinator decides by the incarnation
+        number in its payload whether to admit or ignore it — fencing it
+        at the transport would make rejoin impossible."""
         with self._lock:
             self.stats["sent"] += 1
-            if src in self._dead or dst in self._dead:
+            if (src in self._dead or dst in self._dead) and kind != "hello":
                 self.stats["to_dead"] += 1
                 return False
             if (self.fault.drop > 0.0 and kind not in self.fault.protect

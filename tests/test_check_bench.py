@@ -1,0 +1,92 @@
+"""The CI perf-regression gate (`tools/check_bench.py`) must fail on a
+synthetically regressed result and pass on a healthy one — tested
+directly so a broken gate can't silently wave regressions through.
+"""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "tools"))
+
+import check_bench  # noqa: E402
+
+BASELINE = {
+    "compiled_speedup": 50.0,
+    "wire_MBps_queue": 1000.0,
+    "wire_MBps_tcp": 400.0,
+    "recovery_s_compiled": 0.8,       # not gated
+}
+
+
+def test_gate_passes_on_equal_results():
+    assert check_bench.compare(BASELINE, dict(BASELINE)) == []
+
+
+def test_gate_allows_regressions_inside_threshold():
+    current = dict(BASELINE)
+    current["compiled_speedup"] = 40.0        # -20%: within the 30% band
+    current["wire_MBps_tcp"] = 300.0          # -25%
+    assert check_bench.compare(BASELINE, current) == []
+
+
+def test_gate_fails_on_synthetic_regression():
+    current = dict(BASELINE)
+    current["wire_MBps_tcp"] = 100.0          # -75%
+    failures = check_bench.compare(BASELINE, current)
+    assert len(failures) == 1
+    assert "wire_MBps_tcp" in failures[0] and "75%" in failures[0]
+
+
+def test_gate_fails_on_missing_metric():
+    current = dict(BASELINE)
+    del current["compiled_speedup"]
+    failures = check_bench.compare(BASELINE, current)
+    assert len(failures) == 1 and "missing" in failures[0]
+
+
+def test_threshold_is_configurable():
+    current = dict(BASELINE)
+    current["wire_MBps_queue"] = 900.0        # -10%
+    assert check_bench.compare(BASELINE, current, 0.30) == []
+    assert len(check_bench.compare(BASELINE, current, 0.05)) == 1
+
+
+def test_improvements_never_fail():
+    current = {k: v * 10 for k, v in BASELINE.items()}
+    assert check_bench.compare(BASELINE, current) == []
+
+
+def test_cli_exit_codes(tmp_path):
+    base_p = tmp_path / "baseline.json"
+    base_p.write_text(json.dumps(BASELINE))
+    good_p = tmp_path / "good.json"
+    good_p.write_text(json.dumps(BASELINE))
+    bad = dict(BASELINE)
+    bad["compiled_speedup"] = 1.0
+    bad_p = tmp_path / "bad.json"
+    bad_p.write_text(json.dumps(bad))
+
+    def run(current):
+        return subprocess.run(
+            [sys.executable, str(REPO / "tools" / "check_bench.py"),
+             "--baseline", str(base_p), "--current", str(current)],
+            capture_output=True, text=True)
+
+    ok = run(good_p)
+    assert ok.returncode == 0, ok.stdout + ok.stderr
+    assert "OK" in ok.stdout
+
+    regressed = run(bad_p)
+    assert regressed.returncode == 1
+    assert "compiled_speedup" in regressed.stdout
+    # the error must tell the operator how to refresh the baseline
+    assert "BENCH_live_throughput.json" in regressed.stdout
+
+    missing = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "check_bench.py"),
+         "--baseline", str(tmp_path / "nope.json"),
+         "--current", str(good_p)],
+        capture_output=True, text=True)
+    assert missing.returncode == 2

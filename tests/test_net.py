@@ -115,6 +115,84 @@ class TestSocketTransport:
         finally:
             a.close()
 
+    def test_hello_crosses_kill_fence_with_payload_intact(self):
+        """Elastic rejoin depends on the hello of a NEW incarnation being
+        deliverable while the device is still fenced — admission is the
+        coordinator's call (by the payload's inc), not the transport's."""
+        a, b = _pair()
+        try:
+            a.kill(1)
+            assert not a.send(0, 1, "probe", {})
+            b.send(1, COORD, "hb", {"t": 1.0})       # zombie traffic: dropped
+            b.send(1, COORD, "hello", {"dev": 1, "inc": 2,
+                                       "host": "127.0.0.1", "port": 9})
+            m = a.recv(COORD, timeout=5.0)
+            assert m is not None and m.kind == "hello"
+            assert m.payload["inc"] == 2
+        finally:
+            a.close()
+            b.close()
+
+    def test_add_route_reaches_late_joiner(self):
+        """A node absent from the startup address map becomes reachable
+        once add_route installs it (how a hot-joined device's hello
+        teaches everyone the way)."""
+        addr_of = cluster_addresses(2, HOST)
+        a = SocketTransport(addr_of, local=(COORD, 0))
+        late_port = free_port(HOST)
+        c = SocketTransport({**addr_of, 5: (HOST, late_port)}, local=(5,))
+        try:
+            assert a.send(0, 5, "probe", {})         # no route: dropped
+            time.sleep(0.2)
+            assert c.recv(5, timeout=0.2) is None
+            a.add_route(5, (HOST, late_port))
+            assert a.send(0, 5, "admit", {"dev": 5, "inc": 1})
+            m = c.recv(5, timeout=5.0)
+            assert m is not None and m.kind == "admit"
+        finally:
+            a.close()
+            c.close()
+
+    def test_sender_reconnects_to_relaunched_listener(self):
+        """Per-incarnation reconnect: after the peer process 'dies' (its
+        listener closes with the socket half-open), a frame to the SAME
+        address must reach a relaunched listener — the stale connection is
+        detected before writing, not after a silent void-send."""
+        port = free_port(HOST)
+        addr_of = {0: (HOST, free_port(HOST)), 1: (HOST, port)}
+        a = SocketTransport(addr_of, local=(0,))
+        first = SocketTransport(addr_of, local=(1,))
+        second = None
+        try:
+            assert a.send(0, 1, "act", (1, 0, np.zeros(4, np.float32)))
+            assert first.recv(1, timeout=5.0) is not None
+            first.close()                    # the old incarnation dies
+            time.sleep(0.3)
+            second = SocketTransport(addr_of, local=(1,))  # same port
+            a.send(0, 1, "fetch_res", {"req_id": 1, "layers": {}})
+            m = second.recv(1, timeout=10.0)
+            assert m is not None and m.kind == "fetch_res"
+        finally:
+            a.close()
+            first.close()
+            if second is not None:
+                second.close()
+
+    def test_coalesced_frames_all_arrive_in_order(self):
+        """Sender-side coalescing (many queued frames -> one sendall) must
+        be invisible to receivers: every frame delivered, order kept."""
+        a, b = _pair()
+        try:
+            n = 200
+            for i in range(n):
+                a.send(0, 1, "act", (7, i, None))
+            got = [b.recv(1, timeout=5.0) for _ in range(n)]
+            assert all(m is not None for m in got)
+            assert [m.payload[1] for m in got] == list(range(n))
+        finally:
+            a.close()
+            b.close()
+
     def test_parse_peers_expands_coord(self):
         got = parse_peers("coord=10.0.0.1:9000, 1=10.0.0.2:9001,"
                           "2=10.0.0.3:9002")

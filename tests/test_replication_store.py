@@ -1,0 +1,94 @@
+"""Direct unit coverage for ``LayerReplicaStore`` tiering: dedup byte
+accounting (``nbytes``/``nbytes(tier)``/``nbytes_report``) and the
+re-seeding of a joiner's chain tier after an elastic admission — semantics
+previously exercised only indirectly through live runs.
+"""
+import numpy as np
+
+from repro.checkpoint.replication_store import LayerReplicaStore
+
+CHAIN = LayerReplicaStore.CHAIN
+GLOBAL = LayerReplicaStore.GLOBAL
+
+
+def _layers(n, batch, size=8):
+    """{layer -> packed flat f32} snapshot, values tagged by batch."""
+    return {j: np.full(size, batch * 100 + j, np.float32) for j in range(n)}
+
+
+class TestTierByteAccounting:
+    def test_same_snapshot_in_both_tiers_deduped_once(self):
+        s = LayerReplicaStore()
+        s.put_many(5, _layers(3, 5), tier=CHAIN)
+        s.put_many(5, _layers(3, 5), tier=GLOBAL)
+        one_copy = 3 * 8 * 4
+        assert s.nbytes(CHAIN) == one_copy
+        assert s.nbytes(GLOBAL) == one_copy
+        # one logical replica held twice: deduped total counts it once
+        assert s.nbytes() == one_copy
+        rep = s.nbytes_report()
+        assert rep["per_tier"] == {CHAIN: one_copy, GLOBAL: one_copy}
+        assert rep["deduped"] == one_copy
+        assert rep["duplicated"] == one_copy
+
+    def test_different_batches_are_different_data(self):
+        s = LayerReplicaStore()
+        s.put_many(5, _layers(2, 5), tier=CHAIN)
+        s.put_many(10, _layers(2, 10), tier=GLOBAL)
+        one_copy = 2 * 8 * 4
+        assert s.nbytes() == 2 * one_copy        # no (layer, batch) overlap
+        assert s.nbytes_report()["duplicated"] == 0
+
+    def test_stale_put_within_tier_is_ignored(self):
+        s = LayerReplicaStore()
+        s.put(0, 10, np.ones(4, np.float32), tier=CHAIN)
+        s.put(0, 5, np.zeros(4, np.float32), tier=CHAIN)
+        b, p = s.get(0, tier=CHAIN)
+        assert b == 10 and p[0] == 1.0
+
+    def test_get_prefers_freshest_across_tiers(self):
+        s = LayerReplicaStore()
+        s.put(0, 5, np.full(4, 5.0, np.float32), tier=CHAIN)
+        s.put(0, 10, np.full(4, 10.0, np.float32), tier=GLOBAL)
+        assert s.get(0)[0] == 10
+        assert s.get(0, tier=CHAIN)[0] == 5
+        assert s.batches() == {0: 10}
+        assert s.batches(CHAIN) == {0: 5}
+
+    def test_empty_store(self):
+        s = LayerReplicaStore()
+        assert s.nbytes() == 0
+        assert s.nbytes(CHAIN) == 0
+        assert s.nbytes_report() == {"per_tier": {}, "deduped": 0,
+                                     "duplicated": 0}
+        assert not s.has(0)
+        assert s.get(0) is None
+
+
+class TestJoinerChainReseed:
+    def test_reseed_joiner_chain_tier(self):
+        """An admitted joiner starts with an EMPTY store (a relaunched
+        process lost everything). The post-admission replication cadence
+        re-seeds its chain tier from its new neighbor's snapshot — after
+        which the joiner can serve §III-F fetches for those layers."""
+        joiner = LayerReplicaStore()
+        assert not joiner.covers(3, tier=CHAIN)
+        # the neighbor's chain_put after admission (batch 16, layers 0-2)
+        joiner.put_many(16, _layers(3, 16), tier=CHAIN)
+        assert joiner.covers(3, tier=CHAIN)
+        assert joiner.has(1, tier=CHAIN) and not joiner.has(1, tier=GLOBAL)
+        b, p = joiner.get(1)
+        assert b == 16
+        np.testing.assert_array_equal(p, np.full(8, 1601.0, np.float32))
+
+    def test_reseed_overrides_pre_failure_replicas(self):
+        """A REJOINING device may be re-seeded with snapshots newer than
+        anything it held before dying; within the tier the freshest batch
+        wins, so serving a fetch never resurrects pre-failure weights."""
+        store = LayerReplicaStore()
+        store.put_many(8, _layers(2, 8), tier=CHAIN)      # pre-failure era
+        store.put_many(24, _layers(2, 24), tier=CHAIN)    # post-admission
+        for j in range(2):
+            b, p = store.get(j, tier=CHAIN)
+            assert b == 24
+            assert p[0] == 2400.0 + j

@@ -1,0 +1,124 @@
+#!/usr/bin/env python3
+"""Perf-regression gate (stdlib only; run by the CI smoke job).
+
+Compares a freshly measured ``bench_live_throughput.py`` result against
+the committed baseline ``BENCH_live_throughput.json`` and fails when any
+gated metric regressed by more than ``--max-regression`` (default 30%).
+
+Gated metrics (all higher-is-better):
+
+  * ``compiled_speedup``   — fused jitted StageExecutor vs eager path
+  * ``wire_MBps_queue``    — in-process queue + codec throughput
+  * ``wire_MBps_tcp``      — localhost TCP socket throughput
+
+Usage (what CI runs)::
+
+    python benchmarks/bench_live_throughput.py --quick --out bench_current.json
+    python tools/check_bench.py --baseline BENCH_live_throughput.json \
+        --current bench_current.json
+
+If the regression is REAL and intended (e.g. a correctness fix that costs
+throughput), refresh the baseline locally and commit it::
+
+    python benchmarks/bench_live_throughput.py --quick
+    git add BENCH_live_throughput.json
+
+Caveat: the gated numbers are machine-dependent (absolute MB/s, and a
+JIT-vs-eager ratio that varies with core count). The 30% default band
+absorbs normal runner jitter, but a baseline measured on very different
+hardware than CI's runners will trip the gate on the FIRST run — the fix
+is the same refresh flow above, run once from that environment.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# metric -> short meaning (all higher-is-better; lower-is-better metrics
+# like recovery_s_* are NOT gated — wall-clock recovery time on shared CI
+# runners is too noisy to gate without flaking)
+GATED_METRICS = {
+    "compiled_speedup": "compiled/uncompiled hot-path speedup",
+    "wire_MBps_queue": "queue transport wire throughput",
+    "wire_MBps_tcp": "TCP transport wire throughput",
+}
+
+
+def compare(baseline: dict, current: dict,
+            max_regression: float = 0.30) -> list[str]:
+    """Failure messages for every gated metric that regressed past the
+    threshold (empty list = gate passes). A metric missing from either
+    side is itself a failure — silently skipping would hollow the gate."""
+    failures = []
+    for key, meaning in GATED_METRICS.items():
+        if key not in baseline:
+            failures.append(f"{key}: missing from baseline (re-generate "
+                            f"BENCH_live_throughput.json)")
+            continue
+        if key not in current:
+            failures.append(f"{key}: missing from current results "
+                            f"(did the benchmark run to completion?)")
+            continue
+        base, cur = float(baseline[key]), float(current[key])
+        floor = (1.0 - max_regression) * base
+        if cur < floor:
+            failures.append(
+                f"{key} ({meaning}): {cur:.2f} vs baseline {base:.2f} "
+                f"— {100 * (1 - cur / base):.0f}% regression "
+                f"(> {100 * max_regression:.0f}% allowed)")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description="Fail on live-throughput perf regressions vs the "
+                    "committed baseline")
+    ap.add_argument("--baseline", default="BENCH_live_throughput.json",
+                    help="committed baseline JSON")
+    ap.add_argument("--current", required=True,
+                    help="freshly measured JSON "
+                         "(bench_live_throughput.py --out ...)")
+    ap.add_argument("--max-regression", type=float, default=0.30,
+                    help="allowed fractional drop per metric (default "
+                         "0.30 = 30%%)")
+    args = ap.parse_args()
+
+    try:
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"check_bench: cannot read baseline {args.baseline}: {e}")
+        return 2
+    try:
+        with open(args.current) as f:
+            current = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"check_bench: cannot read current {args.current}: {e}")
+        return 2
+
+    failures = compare(baseline, current, args.max_regression)
+    if failures:
+        print(f"check_bench: {len(failures)} perf regression(s) vs "
+              f"{args.baseline}:")
+        for msg in failures:
+            print("  " + msg)
+        print()
+        print("If this regression is intended, refresh the baseline and "
+              "commit it:")
+        print("    python benchmarks/bench_live_throughput.py --quick")
+        print("    git add BENCH_live_throughput.json")
+        print("If the baseline was measured on different hardware than "
+              "CI's runners, download the bench-live-throughput artifact "
+              "from this run and commit THAT as the baseline instead.")
+        return 1
+    ratios = ", ".join(
+        f"{k}={float(current[k]) / float(baseline[k]):.2f}x"
+        for k in GATED_METRICS)
+    print(f"check_bench: OK — current vs baseline: {ratios} "
+          f"(gate: >= {1 - args.max_regression:.2f}x)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

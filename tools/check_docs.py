@@ -39,7 +39,9 @@ CLI_HINTS = {
     "bench_dynamic_partition.py": "benchmarks/bench_dynamic_partition.py",
     "live_fault_tolerance.py": "examples/live_fault_tolerance.py",
     "live_tcp_fault_tolerance.py": "examples/live_tcp_fault_tolerance.py",
+    "live_elastic_rejoin.py": "examples/live_elastic_rejoin.py",
     "fault_tolerance_demo.py": "examples/fault_tolerance_demo.py",
+    "check_bench.py": "tools/check_bench.py",
 }
 
 
