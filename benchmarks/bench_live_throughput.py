@@ -1,12 +1,17 @@
 """Live hot-path throughput: compiled fused StageExecutor step vs the
 legacy eager ``jax.vjp`` + ``optim/sgd.sgd_update`` path, §III-F recovery
-wall time on the live runtime for both, and wire throughput of the two
+wall time on the live runtime for both, wire throughput of the two
 transports (in-memory queue with codec vs real TCP sockets over
-localhost, ``runtime/net.py``) on activation-sized messages.
+localhost, ``runtime/net.py``) on activation-sized messages, and the
+wire-compression tiers (``runtime/codec.py`` fp16 / int8): compressed TCP
+throughput, bytes per message, and data-plane bytes per TRAINING batch on
+a live run — f32 vs int8, with the >= 2.5x int8 reduction enforced as an
+acceptance floor.
 
 Reports steps/sec for one stage's fwd+bwd+update cycle (the unit the 1F1B
 schedule repeats) and the kill->recovered wall time, and writes
-``BENCH_live_throughput.json`` (uploaded as a CI artifact by the smoke job).
+``BENCH_live_throughput.json`` (uploaded as a CI artifact by the smoke
+job; field-by-field schema in ``docs/benchmarks.md``).
 
   python benchmarks/bench_live_throughput.py --quick
 """
@@ -79,20 +84,27 @@ def _recovery_time_s(compiled: bool, quick: bool) -> float:
 
 
 def _wire_throughput(transport_kind: str, msgs: int, payload_kb: int,
-                     window: int = 16):
-    """(msgs/s, MB/s) shipping activation-sized payloads node 0 -> node 1
-    with a bounded in-flight window, receiver draining concurrently. For
-    "queue" this is the in-process transport with the codec on (bytes are
-    encoded/decoded but never cross a process boundary); for "tcp" the
-    same frames cross two real localhost sockets (runtime/net.py);
-    "tcp_nocoalesce" disables the sender-side frame coalescing — the
-    before/after of that optimization is recorded in the results JSON."""
+                     window: int = 16, tier: str = "off"):
+    """(msgs/s, MB/s, bytes/msg) shipping activation-sized payloads node
+    0 -> node 1 with a bounded in-flight window, receiver draining
+    concurrently. For "queue" this is the in-process transport with the
+    codec on (bytes are encoded/decoded but never cross a process
+    boundary); for "tcp" the same frames cross two real localhost sockets
+    (runtime/net.py); "tcp_nocoalesce" disables the sender-side frame
+    coalescing — the before/after of that optimization is recorded in the
+    results JSON. ``tier`` applies the wire-compression policy to the
+    data plane (the payload is random f32, so int8 never falls back)."""
     import numpy as np
 
-    payload = (0, 0, np.zeros(payload_kb * 256, np.float32))  # 1KB = 256 f32
+    from repro.runtime.codec import WirePolicy
+
+    rng = np.random.default_rng(7)
+    policy = WirePolicy(data=tier)
+    payload = (0, 0, rng.standard_normal(payload_kb * 256)
+               .astype(np.float32))                       # 1KB = 256 f32
     if transport_kind == "queue":
         from repro.runtime.transport import Transport
-        t = Transport(codec=True)
+        t = Transport(codec=True, policy=policy)
         t.register(0)
         t.register(1)
         send_t = recv_t = t
@@ -102,7 +114,7 @@ def _wire_throughput(transport_kind: str, msgs: int, payload_kb: int,
         addr_of = cluster_addresses(2)
         coalesce = 0 if transport_kind == "tcp_nocoalesce" else 1 << 20
         send_t = SocketTransport(addr_of, local=(0,),
-                                 coalesce_bytes=coalesce)
+                                 coalesce_bytes=coalesce, policy=policy)
         recv_t = SocketTransport(addr_of, local=(1,))
         closers = [send_t, recv_t]
     try:
@@ -128,7 +140,31 @@ def _wire_throughput(transport_kind: str, msgs: int, payload_kb: int,
         for c in closers:
             c.close()
     wire_bytes = recv_t.stats["bytes"]
-    return msgs / dt, wire_bytes / dt / 1e6
+    return msgs / dt, wire_bytes / dt / 1e6, wire_bytes / msgs
+
+
+def _live_bytes_per_batch(tier: str, quick: bool) -> float:
+    """Total transport wire bytes per TRAINING batch on a real live run
+    (3 workers, codec on, replication cadence active) under the given
+    data+replica compression tier — the number the int8 >= 2.5x
+    bytes-per-batch acceptance is measured on."""
+    import jax
+
+    from repro.runtime.live import LiveConfig, run_live_training
+    from repro.runtime.protocol import ProtocolConfig
+    from repro.runtime.workload import classification_batches, mlp_chain
+
+    chain = mlp_chain(jax.random.PRNGKey(1), num_layers=8)
+    data = classification_batches("mlp", 8, batch=16, seed=1)
+    nb = 12 if quick else 24
+    res = run_live_training(chain, data, LiveConfig(
+        num_workers=3, num_batches=nb,
+        protocol=ProtocolConfig(chain_every=4, global_every=8,
+                                repartition_first_at=10_000,
+                                repartition_every=10_000,
+                                detect_timeout=2.0),
+        lr=0.1, wire_codec=True, wire_compress=tier))
+    return res.transport_stats["bytes"] / nb
 
 
 def run(quick: bool = False, out_path: str = JSON_PATH):
@@ -150,6 +186,13 @@ def run(quick: bool = False, out_path: str = JSON_PATH):
     payload_kb = 32
     wire = {k: _wire_throughput(k, wire_msgs, payload_kb)
             for k in ("queue", "tcp", "tcp_nocoalesce")}
+    # compressed data plane over the SAME TCP harness: fewer wire bytes
+    # per message (bytes/msg is the compression win; MB/s counts the
+    # smaller frames, so msgs/s is the throughput signal here)
+    comp = {t: _wire_throughput("tcp", wire_msgs, payload_kb, tier=t)
+            for t in ("fp16", "int8")}
+    live_bpb = {t: _live_bytes_per_batch(t, quick)
+                for t in ("off", "int8")}
     out = {
         "quick": quick,
         "backend": jax.default_backend(),
@@ -170,6 +213,18 @@ def run(quick: bool = False, out_path: str = JSON_PATH):
         # measured point so the win stays visible in the baseline
         "wire_msgs_per_s_tcp_nocoalesce": wire["tcp_nocoalesce"][0],
         "wire_MBps_tcp_nocoalesce": wire["tcp_nocoalesce"][1],
+        # ---- wire compression (runtime/codec.py tiers) ------------------
+        "wire_bytes_per_msg_tcp": wire["tcp"][2],
+        "wire_msgs_per_s_tcp_fp16": comp["fp16"][0],
+        "wire_MBps_tcp_fp16": comp["fp16"][1],
+        "wire_bytes_per_msg_tcp_fp16": comp["fp16"][2],
+        "wire_msgs_per_s_tcp_int8": comp["int8"][0],
+        "wire_MBps_tcp_int8": comp["int8"][1],
+        "wire_bytes_per_msg_tcp_int8": comp["int8"][2],
+        "wire_compress_ratio_int8": wire["tcp"][2] / comp["int8"][2],
+        "live_bytes_per_batch_f32": live_bpb["off"],
+        "live_bytes_per_batch_int8": live_bpb["int8"],
+        "live_compress_ratio_int8": live_bpb["off"] / live_bpb["int8"],
     }
     with open(out_path, "w") as f:
         json.dump(out, f, indent=2)
@@ -180,6 +235,11 @@ def run(quick: bool = False, out_path: str = JSON_PATH):
         raise RuntimeError(
             f"compiled hot path only {out['compiled_speedup']:.2f}x the "
             f"uncompiled path — below the 2x acceptance floor")
+    if out["wire_compress_ratio_int8"] < 2.5:
+        raise RuntimeError(
+            f"int8 tier only cut data-plane payload bytes "
+            f"{out['wire_compress_ratio_int8']:.2f}x vs f32 — below the "
+            f"2.5x acceptance floor")
     return [
         ("live/steps_per_s_compiled", out["steps_per_s_compiled"], ""),
         ("live/steps_per_s_uncompiled", out["steps_per_s_uncompiled"], ""),
@@ -194,6 +254,16 @@ def run(quick: bool = False, out_path: str = JSON_PATH):
          f"{payload_kb}KB msgs, localhost TCP (runtime/net.py)"),
         ("live/wire_MBps_tcp_nocoalesce", out["wire_MBps_tcp_nocoalesce"],
          "same, sender coalescing off (the pre-optimization path)"),
+        ("live/wire_msgs_per_s_tcp_int8", out["wire_msgs_per_s_tcp_int8"],
+         "same harness, int8-quantized data plane"),
+        ("live/wire_compress_ratio_int8", out["wire_compress_ratio_int8"],
+         "f32/int8 bytes per message; acceptance: >= 2.5x"),
+        ("live/live_bytes_per_batch_f32", out["live_bytes_per_batch_f32"],
+         "wire bytes per training batch, exact f32 (live 3-worker run)"),
+        ("live/live_bytes_per_batch_int8",
+         out["live_bytes_per_batch_int8"],
+         f"same run, int8 tier ({out['live_compress_ratio_int8']:.2f}x "
+         f"smaller)"),
     ]
 
 

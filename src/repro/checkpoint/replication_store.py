@@ -112,6 +112,28 @@ class LayerReplicaStore:
         for j, p in layers.items():
             self.put(j, batch, p, tier)
 
+    def refresh(self, batch: int, same: dict,
+                tier: str = GLOBAL) -> list[int]:
+        """Delta-plus-skip COMPARE-AND-STAMP (§III-E wire compression):
+        ``same`` maps layer -> the batch the sender last shipped it into
+        this tier. The sender verified those bytes are still its current
+        snapshot, so bump the stored batch id to ``batch`` without any
+        data on the wire — but ONLY where this store's stamp equals the
+        sender's claim. Transports are best-effort: if the put the sender
+        remembers never arrived (or this tier holds a fresher copy from
+        someone else), the stamps mismatch and the entry is left alone —
+        conservatively old rather than freshly mis-labeled. Layers the
+        tier does not hold are ignored (never fabricate a replica).
+        Returns the layer ids actually re-stamped."""
+        t = self._tiers.setdefault(tier, {})
+        done = []
+        for j, prev in same.items():
+            cur = t.get(j)
+            if cur is not None and cur[0] == prev and batch >= cur[0]:
+                t[j] = (batch, cur[1])
+                done.append(j)
+        return done
+
     def nbytes(self, tier: Optional[str] = None) -> int:
         """Stored replica bytes. With ``tier``: that tier's exact footprint.
         Without: the deduped logical total — each distinct (layer, batch)

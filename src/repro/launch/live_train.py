@@ -85,6 +85,19 @@ def build_parser() -> argparse.ArgumentParser:
                     help="queue transport only: round-trip every payload "
                          "through the bytes wire format (runtime/codec.py); "
                          "TCP always does")
+    ap.add_argument("--wire-compress", default="off",
+                    choices=["off", "fp16", "int8"],
+                    help="data-plane wire tier: quantize act/grad tensors "
+                         "(fp16 cast, or int8 per-tensor affine ~3.9x "
+                         "smaller); decode is self-describing and "
+                         "ineligible tensors fall back to exact f32. "
+                         "Implies --wire-codec on the queue transport")
+    ap.add_argument("--wire-compress-replica", default=None,
+                    choices=["off", "fp16", "int8"],
+                    help="tier for the periodic §III-E replica snapshots "
+                         "(chain_put/global_put); default: follow "
+                         "--wire-compress. §III-F redistribution payloads "
+                         "are always exact f32 regardless")
     ap.add_argument("--transport", default="queue", choices=["queue", "tcp"],
                     help="queue = threads in one process; tcp = one OS "
                          "process per worker over runtime/net.py sockets")
@@ -126,6 +139,8 @@ def _build_cfg(args, specs, kill):
         capacity_source=args.capacity_source,
         aggregate_every=args.aggregate_every,
         compiled=not args.uncompiled, wire_codec=args.wire_codec,
+        wire_compress=args.wire_compress,
+        wire_compress_replica=args.wire_compress_replica,
         rejoin=_parse_at(args.rejoin), join_after=args.join_after,
         join_wait=args.join_wait)
 
@@ -142,7 +157,8 @@ def _report(res, args):
     print(f"live FTPipeHD run: {args.workers} workers, {args.batches} "
           f"batches, chain={args.chain}, transport={args.transport}, "
           f"hot path={'eager' if args.uncompiled else 'compiled'}"
-          f"{', wire codec on' if args.wire_codec else ''}")
+          f"{', wire codec on' if args.wire_codec else ''}"
+          f"{f', wire compress {args.wire_compress}' if args.wire_compress != 'off' else ''}")
     print(f"  loss: {res.losses[0]:.3f} -> {res.losses[-1]:.3f} "
           f"(median last 5: {np.median(res.losses[-5:]):.3f})")
     for t, e in res.events:
@@ -157,8 +173,13 @@ def _report(res, args):
         print(f"  admitted devs {adm['devs']} (incarnations "
               f"{adm['incs']}) @batch {adm['batch']}")
     s = res.transport_stats
+    by_class = ""
+    if s.get("data_bytes") or s.get("replica_bytes"):
+        by_class = (f" (data plane {s['data_bytes'] / 1e6:.2f} MB, "
+                    f"replicas {s['replica_bytes'] / 1e6:.2f} MB)")
     print(f"  transport: {s['delivered']} delivered / {s['dropped']} "
-          f"dropped / {s['to_dead']} to-dead, {s['bytes'] / 1e6:.2f} MB")
+          f"dropped / {s['to_dead']} to-dead, {s['bytes'] / 1e6:.2f} MB"
+          f"{by_class}")
     if res.worker_exitcodes:
         print(f"  worker exit codes: {res.worker_exitcodes} "
               f"(-9 = SIGKILLed by fault injection)")

@@ -21,25 +21,138 @@ jnp op moves them back on-device); NumPy scalars collapse to Python
 int/float/bool. ``payload_bytes`` in ``runtime/transport.py`` counts array
 bytes only; ``len(encode(...))`` is the exact wire size including framing.
 
+Codec v2 adds two COMPRESSED ndarray encodings, selected per message by a
+``tier`` (AccEPT-style quantized activation communication):
+
+  * ``fp16``  — f32 tensors cast to IEEE half precision (2 bytes/elem),
+  * ``int8``  — per-tensor affine quantization (1 byte/elem + an 8-byte
+    ``(min, scale)`` header): ``x ≈ min + scale * q`` with
+    ``scale = (max - min) / 255``.
+
+Both tags are SELF-DESCRIBING: ``decode`` dequantizes back to f32 with no
+out-of-band state, so any endpoint can decode any tier and the compiled
+``runtime/stage_executor.py`` step always sees f32. The encoder falls back
+to the exact f32 tag per tensor whenever compression would lose more than
+quantization noise: non-f32 dtypes, zero-length arrays, tensors with
+non-finite values (NaN/inf), fp16 overflow (|x| > 65504), and degenerate
+ranges (max == min). Which tier a sender uses per message KIND is a
+``WirePolicy`` (data plane / §III-E replica traffic / control, the last
+always exact); the policy is config-carried and confirmed by the
+coordinator in the ``install``/``admit`` handshake (``docs/protocol.md``).
+
 ``runtime/net.py`` ships exactly these bytes across process boundaries
 (one message per length-prefixed TCP frame); the full byte-level spec,
 including the frame header, lives in ``docs/protocol.md``.
 """
 from __future__ import annotations
 
+import dataclasses
 import struct
-from typing import Any
+from typing import Any, Optional
 
 import numpy as np
 
 MAGIC = b"FTPH"
-VERSION = 1
+VERSION = 2                  # v2 = v1 + compressed ndarray tags (11/12)
+DECODABLE_VERSIONS = (1, 2)  # v1 frames contain no compressed tags
 
 _NONE, _TRUE, _FALSE, _INT, _FLOAT = 0, 1, 2, 3, 4
 _STR, _BYTES, _LIST, _TUPLE, _DICT, _ARRAY = 5, 6, 7, 8, 9, 10
+_ARRAY_F16, _ARRAY_Q8 = 11, 12
+
+TIERS = ("off", "fp16", "int8")
+
+# message-kind classes a WirePolicy assigns tiers to (docs/protocol.md §3)
+DATA_KINDS = frozenset({"act", "grad"})          # activations + cotangents
+REPLICA_KINDS = frozenset({"chain_put", "global_put"})   # §III-E snapshots
 
 
-def _enc(x: Any, out: list) -> None:
+@dataclasses.dataclass(frozen=True)
+class WirePolicy:
+    """Compression tier per message class. ``data`` covers the 1F1B data
+    plane (``act``/``grad``); ``replica`` the §III-E replication snapshots
+    (``chain_put``/``global_put``). Everything else — control commands,
+    and crucially the §III-F weight-redistribution payloads
+    (``install``/``fetch_res``) — is ALWAYS exact f32: recovery must
+    restore the weights that were trained, not a re-quantized copy.
+
+    Decode is self-describing, so the policy only governs what a sender
+    emits; mixed-policy endpoints interoperate. The coordinator's policy
+    is authoritative: it ships in the ``install``/``admit`` handshake and
+    remote workers adopt it (see ``runtime/live.py``)."""
+    data: str = "off"
+    replica: str = "off"
+
+    def __post_init__(self):
+        for t in (self.data, self.replica):
+            if t not in TIERS:
+                raise ValueError(f"unknown wire tier {t!r} (one of {TIERS})")
+
+    def tier_for(self, kind: str) -> str:
+        if kind in DATA_KINDS:
+            return self.data
+        if kind in REPLICA_KINDS:
+            return self.replica
+        return "off"
+
+    def any_compression(self) -> bool:
+        return self.data != "off" or self.replica != "off"
+
+    def to_payload(self) -> dict:
+        """Wire form for the install/admit handshake."""
+        return {"data": self.data, "replica": self.replica}
+
+    @classmethod
+    def from_payload(cls, d: dict) -> "WirePolicy":
+        return cls(data=d.get("data", "off"), replica=d.get("replica", "off"))
+
+
+def _enc_array(x: Any, out: list, tier: str, used: list) -> None:
+    """One ndarray value: compressed per ``tier`` when safe, else the
+    exact f32/any-dtype tag (the per-tensor fallback rule — see module
+    docstring and docs/protocol.md §1b). ``used[0]`` is set when a
+    compressed tag was actually emitted (drives the frame version)."""
+    arr = np.ascontiguousarray(np.asarray(x))
+    if tier != "off" and arr.dtype == np.float32 and arr.size:
+        dims = struct.pack(f"<{arr.ndim}I", *arr.shape)
+        if tier == "fp16":
+            with np.errstate(over="ignore"):    # overflow = fallback, below
+                f16 = arr.astype(np.float16)
+            # finite f16 result implies finite f32 input AND no overflow
+            if np.isfinite(f16).all():
+                used[0] = True
+                out.append(bytes([_ARRAY_F16, arr.ndim]) + dims
+                           + f16.tobytes())
+                return
+        elif tier == "int8":
+            lo, hi = float(arr.min()), float(arr.max())
+            # quantize against the f32-rounded (lo, scale) that will
+            # actually be stored, so the round-trip error bound
+            # (scale / 2) holds exactly. The degenerate-range guard is on
+            # the STORED scale: a subnormal range can pass hi > lo in
+            # f64 yet underflow scale32 to 0 (divide-by-NaN, and every
+            # element would decode to lo) — that is a fallback too.
+            lo32 = np.float32(lo)
+            scale32 = np.float32((hi - lo) / 255.0)
+            if np.isfinite(lo) and np.isfinite(hi) and np.isfinite(scale32) \
+                    and float(scale32) > 0.0:
+                q = np.clip(np.rint((arr - lo32) / scale32),
+                            0, 255).astype(np.uint8)
+                used[0] = True
+                out.append(bytes([_ARRAY_Q8, arr.ndim]) + dims
+                           + struct.pack("<ff", lo32, scale32)
+                           + q.tobytes())
+                return
+    name = str(arr.dtype).encode("ascii")
+    out.append(bytes([_ARRAY, len(name)]) + name + bytes([arr.ndim])
+               + struct.pack(f"<{arr.ndim}I", *arr.shape)
+               + arr.tobytes())
+
+
+def _enc(x: Any, out: list, tier: str = "off",
+         used: Optional[list] = None) -> None:
+    if used is None:
+        used = [False]
     if x is None:
         out.append(bytes([_NONE]))
     elif isinstance(x, (bool, np.bool_)):
@@ -57,18 +170,14 @@ def _enc(x: Any, out: list) -> None:
         out.append(bytes([_TUPLE if isinstance(x, tuple) else _LIST])
                    + struct.pack("<I", len(x)))
         for v in x:
-            _enc(v, out)
+            _enc(v, out, tier, used)
     elif isinstance(x, dict):
         out.append(bytes([_DICT]) + struct.pack("<I", len(x)))
         for k, v in x.items():
-            _enc(k, out)
-            _enc(v, out)
+            _enc(k, out, tier, used)
+            _enc(v, out, tier, used)
     elif hasattr(x, "shape") and hasattr(x, "dtype"):   # ndarray / jax.Array
-        arr = np.asarray(x)
-        name = str(arr.dtype).encode("ascii")
-        out.append(bytes([_ARRAY, len(name)]) + name + bytes([arr.ndim])
-                   + struct.pack(f"<{arr.ndim}I", *arr.shape)
-                   + np.ascontiguousarray(arr).tobytes())
+        _enc_array(x, out, tier, used)
     else:
         raise TypeError(f"codec cannot encode {type(x).__name__}: {x!r}")
 
@@ -122,14 +231,42 @@ def _dec(buf: bytes, off: int) -> tuple[Any, int]:
         arr = np.frombuffer(buf, dtype, count=count,
                             offset=off).reshape(shape)
         return arr, off + nbytes
+    if tag in (_ARRAY_F16, _ARRAY_Q8):
+        # self-describing compressed f32 tensors: dequantize HERE, so the
+        # consumer (and the compiled StageExecutor step) always sees f32
+        ndim = buf[off]
+        off += 1
+        shape = struct.unpack_from(f"<{ndim}I", buf, off)
+        off += 4 * ndim
+        count = int(np.prod(shape, dtype=np.int64)) if ndim else 1
+        if tag == _ARRAY_F16:
+            arr = np.frombuffer(buf, np.float16, count=count,
+                                offset=off).reshape(shape)
+            return arr.astype(np.float32), off + 2 * count
+        lo, scale = struct.unpack_from("<ff", buf, off)
+        off += 8
+        q = np.frombuffer(buf, np.uint8, count=count,
+                          offset=off).reshape(shape)
+        return (lo + scale * q).astype(np.float32), off + count
     raise ValueError(f"codec: unknown tag {tag} at offset {off - 1}")
 
 
-def encode(kind: str, payload: Any) -> bytes:
-    """One framed wire message."""
+def encode(kind: str, payload: Any, tier: str = "off") -> bytes:
+    """One framed wire message. ``tier`` selects the ndarray compression
+    ("off" | "fp16" | "int8") applied to every eligible f32 tensor in the
+    payload; ineligible tensors fall back to the exact f32 tag per tensor
+    (see ``_enc_array``). Decoding needs no tier — the tags are
+    self-describing. The version byte is stamped 2 exactly when a
+    compressed tag was emitted; a frame without any is byte-identical to
+    codec v1, so a v1-only decoder keeps understanding every
+    uncompressed message from a v2 sender."""
+    if tier not in TIERS:
+        raise ValueError(f"unknown wire tier {tier!r} (one of {TIERS})")
     k = kind.encode("utf-8")
-    out = [MAGIC, bytes([VERSION]), struct.pack("<H", len(k)), k]
-    _enc(payload, out)
+    out = [MAGIC, b"\x00", struct.pack("<H", len(k)), k]
+    used = [False]
+    _enc(payload, out, tier, used)
+    out[1] = bytes([VERSION if used[0] else 1])
     return b"".join(out)
 
 
@@ -137,7 +274,7 @@ def decode(data: bytes) -> tuple[str, Any]:
     """Inverse of ``encode``. Raises ValueError on framing errors."""
     if data[:4] != MAGIC:
         raise ValueError("codec: bad magic")
-    if data[4] != VERSION:
+    if data[4] not in DECODABLE_VERSIONS:
         raise ValueError(f"codec: unsupported version {data[4]}")
     (klen,) = struct.unpack_from("<H", data, 5)
     kind = data[7:7 + klen].decode("utf-8")

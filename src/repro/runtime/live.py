@@ -49,6 +49,7 @@ import numpy as np
 
 from repro.checkpoint.replication_store import LayerReplicaStore
 from repro.core import fault as fault_sm
+from repro.runtime import codec as wire_codec_mod
 from repro.core import schedule as sched
 from repro.core.capacity import CapacityEstimator
 from repro.core.partition import PartitionResult, uniform_partition
@@ -146,6 +147,16 @@ class LiveConfig:
     compiled: bool = True        # jitted fused StageExecutor hot path; False
     #                              keeps the legacy eager vjp + sgd_update
     wire_codec: bool = False     # round-trip every payload through codec.py
+    # ---- wire compression (codec.WirePolicy tiers) ----------------------
+    wire_compress: str = "off"   # data-plane tier for act/grad payloads:
+    #                              "off" | "fp16" | "int8" (per-tensor
+    #                              affine). Any tier != "off" implies the
+    #                              wire codec. Decode is self-describing;
+    #                              the §III-F redistribution payloads stay
+    #                              exact f32 regardless of tier.
+    wire_compress_replica: Optional[str] = None   # §III-E replica tier
+    #                              (chain_put/global_put); None = follow
+    #                              wire_compress
     interpret: Optional[bool] = None   # Pallas interpret (None = autodetect)
     # ---- elastic membership (rejoin / hot-join) -------------------------
     rejoin: Optional[tuple[int, int]] = None   # (device, batch): relaunch
@@ -157,6 +168,14 @@ class LiveConfig:
     join_wait: float = 20.0      # max seconds the coordinator waits at a
     #   control point for a scheduled joiner's hello before giving up on
     #   admitting it there (bounded — a no-show can never wedge the run)
+
+    def wire_policy(self) -> wire_codec_mod.WirePolicy:
+        """The compression tiers this config asks for, as the per-kind
+        policy both transports consult at encode time."""
+        replica = (self.wire_compress if self.wire_compress_replica is None
+                   else self.wire_compress_replica)
+        return wire_codec_mod.WirePolicy(data=self.wire_compress,
+                                         replica=replica)
 
 
 @dataclasses.dataclass
@@ -234,6 +253,10 @@ class Worker(threading.Thread):
         #                              flight (a holder died): do NOT
         #                              install, keep the pre-refit state
         self._execs: dict[tuple, StageExecutor] = {}
+        # §III-E delta-plus-skip: per-peer shadow of the packed layer
+        # slices last shipped there, keyed by (tier, peer node) — unchanged
+        # layers are named instead of resent (see _delta_layers)
+        self._repl_shadow: dict[tuple, dict[int, np.ndarray]] = {}
         self._acts: dict[int, Any] = {}
         self._grads: dict[int, Any] = {}
         self._fwd_ctx: dict[int, tuple] = {}   # batch -> (version buf, x)
@@ -268,6 +291,9 @@ class Worker(threading.Thread):
             self.stash = VerticalSyncStash(buf, version)
         else:
             self.stash.reset(buf, version)
+        # the slice (and possibly the membership around it) changed: every
+        # delta-skip shadow is stale — the next replication resends in full
+        self._repl_shadow.clear()
 
     def _executor(self, last: bool) -> StageExecutor:
         """Per (slice, role) compiled executor; rebuilt only on refit."""
@@ -354,8 +380,9 @@ class Worker(threading.Thread):
             elif k == "cap_probe":
                 self._do_cap_probe(msg.payload)
             elif k == "admit":
-                pass      # admission confirmed; the repart that follows
-                #           carries everything this worker must act on
+                # admission confirmed; adopt the coordinator's wire policy
+                # (the repart that follows carries the slice assignment)
+                self._apply_wire(msg.payload)
             elif k == "abort":
                 self.abort_event.set()
             elif k == "refit_abort":
@@ -557,24 +584,70 @@ class Worker(threading.Thread):
                             {"dev": self.dev, "t": float(np.median(ts)),
                              "range": (a, e)})
 
+    def _delta_layers(self, peer_key: tuple, snap: dict, batch: int,
+                      full: bool):
+        """§III-E delta-plus-skip: diff each layer's packed slice against
+        the shadow of what was last shipped to this peer. Returns
+        ``(changed, same, commit)`` — ship ``changed``; ``same`` maps each
+        unchanged layer to the batch stamp this worker last shipped it
+        under, and the receiver re-stamps a stored copy ONLY if its own
+        stamp matches (compare-and-stamp): transports are best-effort, so
+        an earlier put this shadow believes delivered may never have
+        arrived — an unconditional re-stamp would dress the receiver's
+        older bytes in a fresh batch id, while a mismatch merely leaves
+        them conservatively old. ``commit()`` is called once the send was
+        accepted. ``full`` discards the shadow first: the coordinator
+        forces it whenever the peer may have lost its store (batch 0, and
+        re-seeding after an elastic admission)."""
+        if full:
+            self._repl_shadow.pop(peer_key, None)
+        shadow = self._repl_shadow.setdefault(peer_key, {})
+        changed, same, pending = {}, {}, {}
+        for j, arr in snap.items():
+            a = np.asarray(arr)
+            prev = shadow.get(j)
+            if prev is not None and prev[1].shape == a.shape \
+                    and np.array_equal(prev[1], a):
+                same[j] = prev[0]
+                pending[j] = (batch, prev[1])
+            else:
+                changed[j] = arr
+                pending[j] = (batch, np.array(a, copy=True))
+
+        def commit():
+            shadow.update(pending)
+
+        return changed, same, commit
+
     def _do_replicate(self, spec: dict):
         if self.stash is None:
             return            # admitted but not yet installed: nothing to
             #                   snapshot; the coordinator's short ack window
             #                   tolerates the missing ack
         snap = self._snapshot()
+        full = bool(spec.get("full"))
         if spec["chain"]:
-            self.transport.send(self.dev, spec["chain_to"], "chain_put",
-                                {"batch": spec["batch"], "layers": snap})
+            changed, same, commit = self._delta_layers(
+                ("chain", spec["chain_to"]), snap, spec["batch"], full)
+            if self.transport.send(self.dev, spec["chain_to"], "chain_put",
+                                   {"batch": spec["batch"],
+                                    "layers": changed, "same": same}):
+                commit()
         if spec["global"]:
-            self.transport.send(self.dev, COORD, "global_put",
-                                {"batch": spec["batch"], "layers": snap})
+            changed, same, commit = self._delta_layers(
+                ("global", COORD), snap, spec["batch"], full)
+            if self.transport.send(self.dev, COORD, "global_put",
+                                   {"batch": spec["batch"],
+                                    "layers": changed, "same": same}):
+                commit()
         self.transport.send(self.dev, COORD, "replicated",
                             {"stage": spec["stage"]})
 
     def _store_chain(self, payload: dict):
         self.replicas.put_many(payload["batch"], payload["layers"],
                                tier=LayerReplicaStore.CHAIN)
+        self.replicas.refresh(payload["batch"], payload.get("same", {}),
+                              tier=LayerReplicaStore.CHAIN)
 
     def _serve_fetch(self, msg):
         layers_out = {}
@@ -617,10 +690,21 @@ class Worker(threading.Thread):
             if msg is not None:
                 self._dispatch(msg)
 
+    def _apply_wire(self, spec) -> None:
+        """Tier-negotiation commit: the coordinator's ``install``/``admit``
+        carries its ``WirePolicy``, and this worker's transport adopts it —
+        so a worker launched with mismatched ``--wire-compress`` flags
+        converges on the coordinator's tiers. Decode needs no negotiation
+        (tags are self-describing); only the ENCODE side is steered."""
+        w = spec.get("wire") if isinstance(spec, dict) else None
+        if w and hasattr(self.transport, "set_policy"):
+            self.transport.set_policy(wire_codec_mod.WirePolicy.from_payload(w))
+
     def _do_install(self, spec: dict):
         """Startup install for a remote worker: the coordinator ships the
         initial slice over the wire (range + per-layer packed weights);
         ACK with ``ready`` so the control plane can start segment 0."""
+        self._apply_wire(spec)
         a, e = spec["range"]
         self.install((a, e), {int(j): p for j, p in spec["layers"].items()},
                      version=spec.get("version", 0))
@@ -733,8 +817,15 @@ class Coordinator:
         assert len(self.specs) == N
         self.bandwidth = (cfg.bandwidth if cfg.bandwidth is not None
                           else uniform_bandwidth(N))
+        self.wire = cfg.wire_policy()
         self.transport = transport or Transport(cfg.fault,
-                                                codec=cfg.wire_codec)
+                                                codec=cfg.wire_codec,
+                                                policy=self.wire)
+        if transport is not None and hasattr(transport, "set_policy"):
+            # the coordinator's policy is authoritative for the cluster:
+            # applied to its own endpoint here, shipped to remote workers
+            # in the install/admit handshake
+            transport.set_policy(self.wire)
         self.remote_devs = set(remote_devs or ())
         assert 0 not in self.remote_devs, \
             "worker 0 shares the coordinator process (the central node)"
@@ -850,6 +941,10 @@ class Coordinator:
         elif msg.kind == "global_put":
             self.global_store.put_many(msg.payload["batch"],
                                        msg.payload["layers"])
+            # delta-skip: layers the sender verified unchanged since its
+            # last ship here are re-stamped at the new batch, not resent
+            self.global_store.refresh(msg.payload["batch"],
+                                      msg.payload.get("same", {}))
         elif msg.kind == "hb":
             self._last_hb[msg.src] = time.monotonic()
         elif msg.kind == "seg_done":
@@ -1062,7 +1157,8 @@ class Coordinator:
             self.transport.revive(dev)
             self.transport.send(COORD, dev, "admit",
                                 {"dev": dev, "inc": info["inc"],
-                                 "batch": b0})
+                                 "batch": b0,
+                                 "wire": self.wire.to_payload()})
             est_new = est_new.add_worker(
                 self._joiner_capacity(dev, b0, profile))
         new_ids = list(worker_ids) + devs
@@ -1119,12 +1215,18 @@ class Coordinator:
         self._log(f"remote workers connected: {sorted(heard)}")
 
     def _replicate(self, batch: int, do_chain: bool, do_global: bool,
-                   part: PartitionResult, worker_ids: list):
+                   part: PartitionResult, worker_ids: list,
+                   full: bool = False):
+        """``full`` forces a whole-slice resend (delta-skip shadows
+        discarded): set at batch 0 and when re-seeding after an elastic
+        admission — a peer with a fresh (empty) store must never be
+        'skipped' into a coverage hole."""
         n = len(worker_ids)
         self._send_all(worker_ids, "replicate",
                        lambda i, dev: {"batch": batch, "chain": do_chain,
                                        "global": do_global, "stage": i,
-                                       "chain_to": worker_ids[(i + 1) % n]})
+                                       "chain_to": worker_ids[(i + 1) % n],
+                                       "full": full})
         # short ack window: a worker that died right at the segment boundary
         # (its seg_done already sent) must not stall the control plane for
         # segment_timeout — the NEXT segment's heartbeat monitor will catch
@@ -1310,7 +1412,8 @@ class Coordinator:
                 else:
                     self.transport.send(COORD, dev, "install",
                                         {"range": (a, e), "layers": flats,
-                                         "version": 0, "stage": i})
+                                         "version": 0, "stage": i,
+                                         "wire": self.wire.to_payload()})
             for w in self.workers.values():
                 w.start()
             if self.remote_devs:
@@ -1355,7 +1458,7 @@ class Coordinator:
         """The coordinator's batch loop (factored out of run() so thread
         teardown can wrap it)."""
         cfg, proto = self.cfg, self.proto
-        self._replicate(0, True, True, part, worker_ids)
+        self._replicate(0, True, True, part, worker_ids, full=True)
 
         b0 = 0
         B = cfg.num_batches
@@ -1471,8 +1574,11 @@ class Coordinator:
                     # re-seed replica tiers over the grown layout (a
                     # joiner's chain tier starts empty) and skip the
                     # regular cadence this boundary — fresh replicas were
-                    # just made and the partition was just re-solved
-                    self._replicate(b0, True, True, part, worker_ids)
+                    # just made and the partition was just re-solved.
+                    # full=True: a joiner must never be delta-skipped
+                    # against a store its previous incarnation lost
+                    self._replicate(b0, True, True, part, worker_ids,
+                                    full=True)
                     continue
 
             # ---- replication cadence (§III-E) ---------------------------

@@ -248,17 +248,24 @@ class SocketTransport:
         up to this many queued bytes into one ``sendall`` (0 disables
         coalescing; used by the throughput benchmark to record the
         before/after of the optimization).
+    policy : optional ``codec.WirePolicy`` selecting the compression tier
+        per message class (data plane / §III-E replica traffic). Applies
+        to the ENCODE side only — decoding is self-describing, so peers
+        with different policies interoperate; the coordinator's policy is
+        shipped in the install/admit handshake (``set_policy``).
     """
 
     def __init__(self, addr_of: Dict[int, Addr], local: Sequence[int],
                  fault: Optional[FaultSpec] = None, *,
                  retry_window: float = 10.0,
                  backoff: Tuple[float, float] = (0.05, 1.0),
-                 coalesce_bytes: int = 1 << 20):
+                 coalesce_bytes: int = 1 << 20,
+                 policy: Optional[wire.WirePolicy] = None):
         import random
         self.addr_of = dict(addr_of)
         self.local = tuple(local)
         self.fault = fault or FaultSpec()
+        self.policy = policy or wire.WirePolicy()
         self._rng = random.Random(self.fault.seed)
         self.retry_window = retry_window
         self.coalesce_bytes = coalesce_bytes
@@ -271,7 +278,8 @@ class SocketTransport:
         self._peers: Dict[Addr, _Peer] = {}
         self._readers: list = []
         self.stats = {"sent": 0, "delivered": 0, "dropped": 0, "to_dead": 0,
-                      "bytes": 0, "tx_bytes": 0, "net_dropped": 0}
+                      "bytes": 0, "tx_bytes": 0, "net_dropped": 0,
+                      "data_bytes": 0, "replica_bytes": 0}
         host, port = self.addr_of[self.local[0]]
         self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
@@ -289,6 +297,12 @@ class SocketTransport:
         inbox lives in its own process)."""
         if node in self.local:
             self._inboxes.setdefault(node, queue.Queue())
+
+    def set_policy(self, policy: wire.WirePolicy) -> None:
+        """Adopt a wire-compression policy at runtime — how a worker
+        process converges on the coordinator's policy when the
+        ``install``/``admit`` handshake carries one."""
+        self.policy = policy
 
     def add_route(self, node: int, addr: Addr) -> None:
         """Learn (or update) a remote node's address at runtime — how a
@@ -343,7 +357,7 @@ class SocketTransport:
                     and self._rng.random() < self.fault.drop):
                 self.stats["dropped"] += 1
                 return False
-        data = wire.encode(kind, payload)
+        data = wire.encode(kind, payload, tier=self.policy.tier_for(kind))
 
         def _ship():
             if dst in self._inboxes:
@@ -401,6 +415,10 @@ class SocketTransport:
         with self._lock:
             self.stats["delivered"] += 1
             self.stats["bytes"] += len(data)
+            if kind in wire.DATA_KINDS:
+                self.stats["data_bytes"] += len(data)
+            elif kind in wire.REPLICA_KINDS:
+                self.stats["replica_bytes"] += len(data)
 
     def _accept_loop(self):
         while not self.closed:
@@ -506,7 +524,10 @@ def worker_main(dev: int, addr_of: Dict[int, Addr], spec, cfg,
              or [DeviceSpec(f"dev-{i}") for i in range(cfg.num_workers)])
     my_spec = (specs[dev] if dev < len(specs)
                else DeviceSpec(f"dev-{dev}"))          # hot-joined device
-    transport = SocketTransport(addr_of, local=(dev,), fault=cfg.fault)
+    # wire-compression tiers from the shared config; the coordinator's
+    # install/admit handshake overrides them if the configs disagree
+    transport = SocketTransport(addr_of, local=(dev,), fault=cfg.fault,
+                                policy=cfg.wire_policy())
     host, port = addr_of[dev]
     # announce=True: the Worker loop sends the hello AND re-sends it until
     # the coordinator is heard from — one lost hello (drop fault, expired
@@ -600,7 +621,8 @@ def run_tcp_training(spec, cfg, *, host: str = "127.0.0.1",
         _spawn_with_pythonpath([p])
 
     chain, batches = spec.build()
-    transport = SocketTransport(addr_of, local=(COORD, 0), fault=cfg.fault)
+    transport = SocketTransport(addr_of, local=(COORD, 0), fault=cfg.fault,
+                                policy=cfg.wire_policy())
     coord = Coordinator(chain, lambda gb: batches[gb % len(batches)], cfg,
                         transport=transport, remote_devs=set(history),
                         spawner=spawner)

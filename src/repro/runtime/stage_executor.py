@@ -223,13 +223,22 @@ class StageExecutor:
     def forward(self, buf, x, batch=None):
         """Run the slice forward under packed weights ``buf``: activation
         for a mid stage, scalar loss at the last (``batch`` supplies the
-        labels there)."""
-        return self._forward(buf, x, batch)
+        labels there). ``x`` is coerced to f32 here — this is the
+        dequantization boundary of the wire-compression tiers
+        (``runtime/codec.py``): whatever precision an activation crossed
+        the transport in, the compiled step always sees f32, so one
+        compiled executor serves every tier with no retrace."""
+        return self._forward(buf, jnp.asarray(x, jnp.float32), batch)
 
     def step(self, fwd_buf, new_buf, mom_buf, x, ct=None, batch=None):
         """One fused backward+update: recompute the forward under
         ``fwd_buf`` (the batch's vertical-sync version), backpropagate
         cotangent ``ct`` (implicit 1.0 at the last stage), and apply the
         SGD update to ``new_buf`` (the newest version). Returns
-        ``(dx, new_buf', mom_buf')``; ``mom_buf`` may be donated."""
+        ``(dx, new_buf', mom_buf')``; ``mom_buf`` may be donated. ``x``
+        and ``ct`` are coerced to f32 (same wire-compression boundary as
+        ``forward``)."""
+        x = jnp.asarray(x, jnp.float32)
+        if ct is not None:
+            ct = jnp.asarray(ct, jnp.float32)
         return self._step(fwd_buf, new_buf, mom_buf, x, ct, batch)

@@ -19,7 +19,11 @@ With ``codec=True`` every payload round-trips through the wire format of
 the in-process queue behaves like a socket: receivers get a fresh
 deserialized copy (no shared references), anything unserializable fails
 loudly at the sender, and ``stats["bytes"]`` counts exact wire bytes
-instead of the array-leaf estimate.
+instead of the array-leaf estimate. A ``codec.WirePolicy`` additionally
+selects the compression tier per message class (fp16 / int8 quantized
+tensors for the data plane and §III-E replica traffic); any compression
+implies the codec, and ``stats["data_bytes"]`` / ``stats["replica_bytes"]``
+break the wire volume down by class so compression wins are measurable.
 """
 from __future__ import annotations
 
@@ -82,15 +86,26 @@ class Transport:
     ``stats``) over TCP — code written against either runs on both."""
 
     def __init__(self, fault: Optional[FaultSpec] = None,
-                 codec: bool = False):
+                 codec: bool = False,
+                 policy: Optional[wire.WirePolicy] = None):
         self.fault = fault or FaultSpec()
-        self.codec = codec
+        self.policy = policy or wire.WirePolicy()
+        # compression is a property of the byte encoding, so any
+        # compressing policy forces the codec on
+        self.codec = codec or self.policy.any_compression()
         self._rng = random.Random(self.fault.seed)
         self._inboxes: dict[int, queue.Queue] = {}
         self._dead: set[int] = set()
         self._lock = threading.Lock()
         self.stats = {"sent": 0, "delivered": 0, "dropped": 0,
-                      "to_dead": 0, "bytes": 0}
+                      "to_dead": 0, "bytes": 0, "data_bytes": 0,
+                      "replica_bytes": 0}
+
+    def set_policy(self, policy: wire.WirePolicy) -> None:
+        """Adopt a wire-compression policy at runtime (the coordinator's
+        install/admit handshake makes its policy authoritative)."""
+        self.policy = policy
+        self.codec = self.codec or policy.any_compression()
 
     # ------------------------------ wiring ------------------------------
 
@@ -145,11 +160,14 @@ class Transport:
         if inbox is None:
             return False
         if self.codec:
-            data = wire.encode(kind, payload)
+            data = wire.encode(kind, payload,
+                               tier=self.policy.tier_for(kind))
             nbytes = len(data)
             kind, payload = wire.decode(data)
         else:
             nbytes = payload_bytes(payload)
+        is_data = kind in wire.DATA_KINDS
+        is_replica = kind in wire.REPLICA_KINDS
         msg = Message(src=src, dst=dst, kind=kind, payload=payload,
                       sent_at=time.monotonic())
 
@@ -157,6 +175,10 @@ class Transport:
             with self._lock:
                 self.stats["delivered"] += 1
                 self.stats["bytes"] += nbytes
+                if is_data:
+                    self.stats["data_bytes"] += nbytes
+                elif is_replica:
+                    self.stats["replica_bytes"] += nbytes
 
         if self.fault.delay > 0.0:
             def _deliver():

@@ -16,6 +16,9 @@ BASELINE = {
     "compiled_speedup": 50.0,
     "wire_MBps_queue": 1000.0,
     "wire_MBps_tcp": 400.0,
+    "wire_compress_ratio_int8": 3.9,
+    "live_compress_ratio_int8": 3.0,
+    "live_bytes_per_batch_int8": 3000.0,   # gated LOWER-is-better
     "recovery_s_compiled": 0.8,       # not gated
 }
 
@@ -55,7 +58,27 @@ def test_threshold_is_configurable():
 
 def test_improvements_never_fail():
     current = {k: v * 10 for k, v in BASELINE.items()}
+    current["live_bytes_per_batch_int8"] = 100.0   # lower IS the improvement
     assert check_bench.compare(BASELINE, current) == []
+
+
+def test_bytes_per_batch_gate_is_lower_is_better():
+    grown = dict(BASELINE)
+    grown["live_bytes_per_batch_int8"] = 3300.0     # +10%: inside the band
+    assert check_bench.compare(BASELINE, grown) == []
+    grown["live_bytes_per_batch_int8"] = 6000.0     # +100%: regression
+    failures = check_bench.compare(BASELINE, grown)
+    assert len(failures) == 1
+    assert "live_bytes_per_batch_int8" in failures[0] \
+        and "growth" in failures[0]
+
+
+def test_compression_ratio_gate_fires():
+    current = dict(BASELINE)
+    current["wire_compress_ratio_int8"] = 1.1       # compression broke
+    failures = check_bench.compare(BASELINE, current)
+    assert len(failures) == 1
+    assert "wire_compress_ratio_int8" in failures[0]
 
 
 def test_cli_exit_codes(tmp_path):

@@ -103,6 +103,142 @@ def test_framing_errors_raise():
         codec.decode(data + b"\x00")
     with pytest.raises(TypeError):
         codec.encode("x", object())
+    with pytest.raises(ValueError):
+        codec.encode("x", {"a": 1}, tier="gzip")
+
+
+# ===================== compressed tiers (codec v2) ========================
+
+def _rand(shape, seed=0):
+    return np.random.default_rng(seed).standard_normal(shape) \
+        .astype(np.float32)
+
+
+def test_version_stamped_by_actual_compression():
+    """A frame is v2 exactly when it CONTAINS compressed tags; frames
+    without any are byte-identical to codec v1, so a v1-only decoder
+    keeps understanding every uncompressed message from a v2 sender —
+    including tier-on frames where every tensor fell back."""
+    x = _rand((4, 3))
+    assert codec.encode("act", (1, 2, x))[4] == 1           # tier off
+    assert codec.encode("act", (1, 2, x), tier="int8")[4] == 2
+    nan = np.full((4,), np.nan, np.float32)
+    assert codec.encode("act", nan, tier="int8")[4] == 1    # all fell back
+    assert codec.encode("hb", {"t": 1.0}, tier="int8")[4] == 1
+
+
+def test_decoder_accepts_v1_frames():
+    """Tags are additive in v2: a hand-stamped v1 frame must keep
+    decoding — mixed-version clusters interoperate."""
+    data = bytearray(codec.encode("act", (1, 2, _rand((4, 3)))))
+    data[4] = 1
+    kind, payload = codec.decode(bytes(data))
+    assert kind == "act"
+    np.testing.assert_array_equal(payload[2], _rand((4, 3)))
+
+
+@pytest.mark.parametrize("tier", ["fp16", "int8"])
+def test_compressed_round_trip_shapes_and_dtype(tier):
+    for shape in [(16, 8), (7,), (2, 3, 4)]:
+        x = _rand(shape, seed=3)
+        data = codec.encode("act", (0, 1, x), tier=tier)
+        assert len(data) < len(codec.encode("act", (0, 1, x)))
+        _, p = codec.decode(data)
+        assert p[2].dtype == np.float32 and p[2].shape == shape
+
+
+def test_fp16_round_trip_error_is_half_precision():
+    x = _rand((64,), seed=4)
+    _, y = codec.decode(codec.encode("x", x, tier="fp16"))
+    np.testing.assert_array_equal(y, x.astype(np.float16)
+                                  .astype(np.float32))
+
+
+def test_int8_round_trip_error_bound():
+    """Per-tensor affine quantization: |x - dq(q(x))| <= scale / 2 with
+    scale = (max - min) / 255 (plus f32 rounding slack)."""
+    x = _rand((32, 16), seed=5) * 7.0
+    _, y = codec.decode(codec.encode("x", x, tier="int8"))
+    scale = (float(x.max()) - float(x.min())) / 255.0
+    assert np.abs(y - x).max() <= scale * 0.5 * (1 + 1e-5) + 1e-7
+
+
+def test_zero_length_slice_falls_back_exact():
+    x = np.zeros((0,), np.float32)
+    for tier in ("fp16", "int8"):
+        _, y = codec.decode(codec.encode("x", x, tier=tier))
+        assert y.dtype == np.float32 and y.shape == (0,)
+
+
+def test_nonfinite_tensors_force_f32_fallback():
+    x = _rand((8,), seed=6)
+    for bad in (np.nan, np.inf, -np.inf):
+        z = x.copy()
+        z[3] = bad
+        for tier in ("fp16", "int8"):
+            data = codec.encode("x", z, tier=tier)
+            assert len(data) == len(codec.encode("x", z))   # exact tag
+            _, y = codec.decode(data)
+            np.testing.assert_array_equal(y, z)
+
+
+def test_degenerate_range_and_overflow_fall_back():
+    const = np.full((10,), 2.5, np.float32)          # max == min
+    data = codec.encode("x", const, tier="int8")
+    assert len(data) == len(codec.encode("x", const))
+    np.testing.assert_array_equal(codec.decode(data)[1], const)
+    big = np.array([1e38, -1e38], np.float32)        # fp16 overflow
+    data = codec.encode("x", big, tier="fp16")
+    np.testing.assert_array_equal(codec.decode(data)[1], big)
+
+
+def test_subnormal_range_falls_back_exact():
+    """A subnormal range passes max > min in f64 but underflows the
+    STORED f32 scale to 0 — must fall back, not ship scale=0 garbage."""
+    x = np.array([0.0, 5e-44, 1e-43], np.float32)    # (max-min)/255 -> 0.0f
+    with np.errstate(all="raise"):                   # no div-by-zero either
+        data = codec.encode("x", x, tier="int8")
+    assert data[4] == 1                              # no compressed tag
+    np.testing.assert_array_equal(codec.decode(data)[1], x)
+
+
+def test_non_f32_tensors_never_compressed():
+    for arr in (np.arange(6, dtype=np.int32),
+                np.arange(6, dtype=np.float64)):
+        data = codec.encode("x", arr, tier="int8")
+        _, y = codec.decode(data)
+        assert y.dtype == arr.dtype
+        np.testing.assert_array_equal(y, arr)
+
+
+def test_compressed_wire_size_exact():
+    """The compressed encodings have a computable exact wire size —
+    what `Transport.stats["bytes"]` records under a compressing policy."""
+    shape = (16, 8)
+    n = 16 * 8
+    x = _rand(shape, seed=7)
+    header = len(codec.MAGIC) + 1 + 2 + len(b"x")       # magic|ver|kindlen|kind
+    assert len(codec.encode("x", x, tier="int8")) \
+        == header + 1 + 1 + 4 * len(shape) + 8 + n      # tag|ndim|dims|lo,scale|q
+    assert len(codec.encode("x", x, tier="fp16")) \
+        == header + 1 + 1 + 4 * len(shape) + 2 * n      # tag|ndim|dims|f16
+    assert len(codec.encode("x", x)) \
+        == header + 1 + 1 + len(b"float32") + 1 + 4 * len(shape) + 4 * n
+
+
+def test_wire_policy_classes():
+    pol = codec.WirePolicy(data="int8", replica="fp16")
+    assert pol.tier_for("act") == "int8" and pol.tier_for("grad") == "int8"
+    assert pol.tier_for("chain_put") == "fp16" \
+        and pol.tier_for("global_put") == "fp16"
+    # §III-F redistribution and control traffic stay exact, always
+    for kind in ("fetch_res", "install", "segment", "hello", "hb"):
+        assert pol.tier_for(kind) == "off"
+    assert pol.any_compression()
+    assert not codec.WirePolicy().any_compression()
+    assert codec.WirePolicy.from_payload(pol.to_payload()) == pol
+    with pytest.raises(ValueError):
+        codec.WirePolicy(data="int4")
 
 
 def test_payload_bytes_exact_on_packed_buffers():

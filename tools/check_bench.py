@@ -5,11 +5,19 @@ Compares a freshly measured ``bench_live_throughput.py`` result against
 the committed baseline ``BENCH_live_throughput.json`` and fails when any
 gated metric regressed by more than ``--max-regression`` (default 30%).
 
-Gated metrics (all higher-is-better):
+Gated metrics (higher-is-better):
 
   * ``compiled_speedup``   — fused jitted StageExecutor vs eager path
   * ``wire_MBps_queue``    — in-process queue + codec throughput
   * ``wire_MBps_tcp``      — localhost TCP socket throughput
+  * ``wire_compress_ratio_int8`` — f32/int8 data-plane bytes per message
+  * ``live_compress_ratio_int8`` — f32/int8 wire bytes per training batch
+
+Gated metrics (lower-is-better — the bytes-per-batch gate):
+
+  * ``live_bytes_per_batch_int8`` — absolute int8 wire bytes per training
+    batch on the live run; growing it past the band means the compressed
+    wire regressed even if the f32/int8 ratio held (e.g. both sides grew)
 
 Usage (what CI runs)::
 
@@ -35,13 +43,21 @@ import argparse
 import json
 import sys
 
-# metric -> short meaning (all higher-is-better; lower-is-better metrics
-# like recovery_s_* are NOT gated — wall-clock recovery time on shared CI
-# runners is too noisy to gate without flaking)
+# metric -> short meaning (higher-is-better; noisy wall-clock metrics
+# like recovery_s_* are NOT gated — recovery time on shared CI runners is
+# too noisy to gate without flaking)
 GATED_METRICS = {
     "compiled_speedup": "compiled/uncompiled hot-path speedup",
     "wire_MBps_queue": "queue transport wire throughput",
     "wire_MBps_tcp": "TCP transport wire throughput",
+    "wire_compress_ratio_int8": "f32/int8 data-plane compression (TCP)",
+    "live_compress_ratio_int8": "f32/int8 wire bytes per training batch",
+}
+
+# metric -> short meaning (LOWER-is-better: absolute byte budgets — the
+# bytes-per-batch gate next to the MB/s ones)
+GATED_METRICS_LOWER = {
+    "live_bytes_per_batch_int8": "int8 wire bytes per training batch",
 }
 
 
@@ -51,7 +67,8 @@ def compare(baseline: dict, current: dict,
     threshold (empty list = gate passes). A metric missing from either
     side is itself a failure — silently skipping would hollow the gate."""
     failures = []
-    for key, meaning in GATED_METRICS.items():
+    for key, meaning in list(GATED_METRICS.items()) \
+            + list(GATED_METRICS_LOWER.items()):
         if key not in baseline:
             failures.append(f"{key}: missing from baseline (re-generate "
                             f"BENCH_live_throughput.json)")
@@ -61,6 +78,14 @@ def compare(baseline: dict, current: dict,
                             f"(did the benchmark run to completion?)")
             continue
         base, cur = float(baseline[key]), float(current[key])
+        if key in GATED_METRICS_LOWER:
+            ceiling = (1.0 + max_regression) * base
+            if cur > ceiling:
+                failures.append(
+                    f"{key} ({meaning}): {cur:.0f} vs baseline {base:.0f} "
+                    f"— {100 * (cur / base - 1):.0f}% growth "
+                    f"(> {100 * max_regression:.0f}% allowed)")
+            continue
         floor = (1.0 - max_regression) * base
         if cur < floor:
             failures.append(
@@ -112,11 +137,14 @@ def main() -> int:
               "CI's runners, download the bench-live-throughput artifact "
               "from this run and commit THAT as the baseline instead.")
         return 1
-    ratios = ", ".join(
-        f"{k}={float(current[k]) / float(baseline[k]):.2f}x"
-        for k in GATED_METRICS)
-    print(f"check_bench: OK — current vs baseline: {ratios} "
-          f"(gate: >= {1 - args.max_regression:.2f}x)")
+    hi = ", ".join(f"{k}={float(current[k]) / float(baseline[k]):.2f}x"
+                   for k in GATED_METRICS)
+    lo = ", ".join(f"{k}={float(current[k]) / float(baseline[k]):.2f}x"
+                   for k in GATED_METRICS_LOWER)
+    print(f"check_bench: OK — current vs baseline: {hi} "
+          f"(gate: >= {1 - args.max_regression:.2f}x); "
+          f"bytes-per-batch: {lo} "
+          f"(lower is better; gate: <= {1 + args.max_regression:.2f}x)")
     return 0
 
 

@@ -1,14 +1,19 @@
 #!/usr/bin/env python3
 """Docs consistency checker (stdlib only; run by the CI docs job).
 
-Two invariants over README.md and docs/**/*.md:
+Three invariants over README.md and docs/**/*.md:
 
 1. every intra-repo markdown link ``[text](path)`` resolves to a real
    file or directory (fragments are stripped; http/mailto skipped);
 2. every ``--flag`` mentioned in the prose exists in some argparse CLI of
    this repo — and when the surrounding line names a specific CLI
    (``live_train``, a ``benchmarks/*.py`` or ``examples/*.py`` path),
-   the flag must exist in THAT file's parser.
+   the flag must exist in THAT file's parser;
+3. every backticked CODE PATH (a `` `dir/file.ext` `` token with a slash,
+   e.g. ``runtime/codec.py`` or ``../src/repro/runtime/codec.py``)
+   resolves to a real file — relative to the doc, the repo root, or the
+   ``src/repro`` package — so refactors can't silently orphan the spec's
+   prose references the way they can't orphan its links.
 
 Flags are discovered by scanning ``add_argument("--...")`` calls, so the
 check needs no imports of repo code (and no JAX).
@@ -26,9 +31,19 @@ REPO = Path(__file__).resolve().parent.parent
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 FLAG_RE = re.compile(r"(?<![-\w])(--[a-z][a-z0-9-]*)\b")
 ADD_ARG_RE = re.compile(r"add_argument\(\s*[\"'](--[A-Za-z0-9-]+)[\"']")
+# backticked path-like tokens: at least one '/', a known code/doc
+# extension, no spaces — `runtime/codec.py`, `../src/.../net.py`, ...
+CODE_REF_RE = re.compile(
+    r"`([A-Za-z0-9_.\-]+(?:/[A-Za-z0-9_.\-]+)+"
+    r"\.(?:py|json|md|yml|yaml|toml))`")
 
 # flags that belong to tools outside this repo, not to our CLIs
 EXTERNAL_FLAGS = {"--help"}
+
+# code-ref roots tried after the doc's own dir: the repo root and the
+# package dir (docs prose uses package-relative names like
+# `runtime/live.py` for src/repro/runtime/live.py)
+CODE_REF_ROOTS = (".", "src", "src/repro")
 
 # substring of a doc line -> the CLI source file it refers to
 CLI_HINTS = {
@@ -40,6 +55,7 @@ CLI_HINTS = {
     "live_fault_tolerance.py": "examples/live_fault_tolerance.py",
     "live_tcp_fault_tolerance.py": "examples/live_tcp_fault_tolerance.py",
     "live_elastic_rejoin.py": "examples/live_elastic_rejoin.py",
+    "live_compressed_wire.py": "examples/live_compressed_wire.py",
     "fault_tolerance_demo.py": "examples/fault_tolerance_demo.py",
     "check_bench.py": "tools/check_bench.py",
 }
@@ -80,6 +96,20 @@ def check_links(md: Path) -> list[str]:
     return errors
 
 
+def check_code_refs(md: Path) -> list[str]:
+    """Invariant 3: backticked code paths resolve to real files."""
+    errors = []
+    for lineno, line in enumerate(
+            md.read_text(encoding="utf-8").splitlines(), 1):
+        for ref in CODE_REF_RE.findall(line):
+            bases = [md.parent] + [REPO / r for r in CODE_REF_ROOTS]
+            if not any((b / ref).resolve().exists() for b in bases):
+                errors.append(f"{md.relative_to(REPO)}:{lineno}: code "
+                              f"reference `{ref}` resolves to no file "
+                              f"(tried doc dir, repo root, src, src/repro)")
+    return errors
+
+
 def check_flags(md: Path, union: set[str]) -> list[str]:
     errors = []
     for lineno, line in enumerate(
@@ -112,6 +142,7 @@ def main() -> int:
     files = md_files()
     for md in files:
         errors += check_links(md)
+        errors += check_code_refs(md)
         errors += check_flags(md, union)
     if errors:
         print(f"check_docs: {len(errors)} problem(s):")
