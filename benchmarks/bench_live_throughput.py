@@ -84,7 +84,8 @@ def _recovery_time_s(compiled: bool, quick: bool) -> float:
 
 
 def _wire_throughput(transport_kind: str, msgs: int, payload_kb: int,
-                     window: int = 16, tier: str = "off"):
+                     window: int = 16, tier: str = "off",
+                     reliable: bool = False):
     """(msgs/s, MB/s, bytes/msg) shipping activation-sized payloads node
     0 -> node 1 with a bounded in-flight window, receiver draining
     concurrently. For "queue" this is the in-process transport with the
@@ -93,7 +94,9 @@ def _wire_throughput(transport_kind: str, msgs: int, payload_kb: int,
     (runtime/net.py); "tcp_nocoalesce" disables the sender-side frame
     coalescing — the before/after of that optimization is recorded in the
     results JSON. ``tier`` applies the wire-compression policy to the
-    data plane (the payload is random f32, so int8 never falls back)."""
+    data plane (the payload is random f32, so int8 never falls back);
+    ``reliable`` turns on the seq/ack retransmit window on BOTH ends
+    (docs/protocol.md §7) so the ack/window overhead is measurable."""
     import numpy as np
 
     from repro.runtime.codec import WirePolicy
@@ -114,8 +117,9 @@ def _wire_throughput(transport_kind: str, msgs: int, payload_kb: int,
         addr_of = cluster_addresses(2)
         coalesce = 0 if transport_kind == "tcp_nocoalesce" else 1 << 20
         send_t = SocketTransport(addr_of, local=(0,),
-                                 coalesce_bytes=coalesce, policy=policy)
-        recv_t = SocketTransport(addr_of, local=(1,))
+                                 coalesce_bytes=coalesce, policy=policy,
+                                 reliable=reliable)
+        recv_t = SocketTransport(addr_of, local=(1,), reliable=reliable)
         closers = [send_t, recv_t]
     try:
         def _recv_one(got):
@@ -191,6 +195,10 @@ def run(quick: bool = False, out_path: str = JSON_PATH):
     # smaller frames, so msgs/s is the throughput signal here)
     comp = {t: _wire_throughput("tcp", wire_msgs, payload_kb, tier=t)
             for t in ("fp16", "int8")}
+    # the reliable data plane (seq/ack retransmit window, §7) over the
+    # same TCP harness: its cost on a LOSSLESS link is the wrap + ack
+    # traffic, gated below so the window never quietly taxes throughput
+    rel = _wire_throughput("tcp", wire_msgs, payload_kb, reliable=True)
     live_bpb = {t: _live_bytes_per_batch(t, quick)
                 for t in ("off", "int8")}
     out = {
@@ -213,6 +221,10 @@ def run(quick: bool = False, out_path: str = JSON_PATH):
         # measured point so the win stays visible in the baseline
         "wire_msgs_per_s_tcp_nocoalesce": wire["tcp_nocoalesce"][0],
         "wire_MBps_tcp_nocoalesce": wire["tcp_nocoalesce"][1],
+        # ---- reliable data plane (seq/ack window, docs/protocol.md §7) --
+        "wire_msgs_per_s_tcp_reliable": rel[0],
+        "wire_MBps_tcp_reliable": rel[1],
+        "wire_reliable_overhead": 1.0 - rel[1] / wire["tcp"][1],
         # ---- wire compression (runtime/codec.py tiers) ------------------
         "wire_bytes_per_msg_tcp": wire["tcp"][2],
         "wire_msgs_per_s_tcp_fp16": comp["fp16"][0],
@@ -235,6 +247,12 @@ def run(quick: bool = False, out_path: str = JSON_PATH):
         raise RuntimeError(
             f"compiled hot path only {out['compiled_speedup']:.2f}x the "
             f"uncompiled path — below the 2x acceptance floor")
+    if out["wire_MBps_tcp_reliable"] < 0.7 * out["wire_MBps_tcp"]:
+        raise RuntimeError(
+            f"reliable data plane cost "
+            f"{100 * out['wire_reliable_overhead']:.0f}% of TCP wire "
+            f"throughput on a lossless link — above the 30% acceptance "
+            f"ceiling")
     if out["wire_compress_ratio_int8"] < 2.5:
         raise RuntimeError(
             f"int8 tier only cut data-plane payload bytes "
@@ -254,6 +272,8 @@ def run(quick: bool = False, out_path: str = JSON_PATH):
          f"{payload_kb}KB msgs, localhost TCP (runtime/net.py)"),
         ("live/wire_MBps_tcp_nocoalesce", out["wire_MBps_tcp_nocoalesce"],
          "same, sender coalescing off (the pre-optimization path)"),
+        ("live/wire_MBps_tcp_reliable", out["wire_MBps_tcp_reliable"],
+         "same, seq/ack retransmit window on; acceptance: >= 0.7x plain"),
         ("live/wire_msgs_per_s_tcp_int8", out["wire_msgs_per_s_tcp_int8"],
          "same harness, int8-quantized data plane"),
         ("live/wire_compress_ratio_int8", out["wire_compress_ratio_int8"],

@@ -26,8 +26,8 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import numpy as np
 
+from repro.run import RunConfig, start_run
 from repro.runtime.live import LiveConfig
-from repro.runtime.net import run_tcp_training
 from repro.runtime.protocol import ProtocolConfig
 from repro.runtime.workload import WorkloadSpec
 
@@ -37,17 +37,19 @@ MIN_RATIO = 2.5           # data-plane bytes, f32 / int8
 
 
 def run(tier: str):
-    spec = WorkloadSpec(kind="mlp", seed=0, num_layers=8)
-    cfg = LiveConfig(
-        num_workers=3, num_batches=NUM_BATCHES,
-        # re-partition off: the two runs must make identical protocol
-        # decisions so the ONLY difference on the wire is the tier
-        protocol=ProtocolConfig(chain_every=8, global_every=16,
-                                repartition_first_at=10_000,
-                                repartition_every=10_000,
-                                detect_timeout=0.5),
-        lr=0.1, wire_compress=tier)
-    return run_tcp_training(spec, cfg)
+    cfg = RunConfig(
+        workload=WorkloadSpec(kind="mlp", seed=0, num_layers=8),
+        live=LiveConfig(
+            num_workers=3, num_batches=NUM_BATCHES,
+            # re-partition off: the two runs must make identical protocol
+            # decisions so the ONLY difference on the wire is the tier
+            protocol=ProtocolConfig(chain_every=8, global_every=16,
+                                    repartition_first_at=10_000,
+                                    repartition_every=10_000,
+                                    detect_timeout=0.5),
+            lr=0.1, wire_compress=tier),
+        transport="tcp")
+    return start_run(cfg).wait()
 
 
 def main():

@@ -32,8 +32,8 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import numpy as np
 
+from repro.run import RunConfig, start_run
 from repro.runtime.live import LiveConfig
-from repro.runtime.net import run_tcp_training
 from repro.runtime.protocol import ProtocolConfig
 from repro.runtime.workload import WorkloadSpec
 
@@ -41,16 +41,18 @@ KILL_DEV, KILL_BATCH, REJOIN_BATCH, NUM_BATCHES = 1, 10, 14, 40
 
 
 def main():
-    spec = WorkloadSpec(kind="mlp", seed=0, num_layers=8)
-    cfg = LiveConfig(
-        num_workers=3, num_batches=NUM_BATCHES,
-        protocol=ProtocolConfig(chain_every=8, global_every=16,
-                                repartition_first_at=10_000,
-                                repartition_every=10_000,
-                                detect_timeout=0.5),
-        lr=0.1, kill=(KILL_DEV, KILL_BATCH),
-        rejoin=(KILL_DEV, REJOIN_BATCH), join_wait=90)
-    res = run_tcp_training(spec, cfg)
+    cfg = RunConfig(
+        workload=WorkloadSpec(kind="mlp", seed=0, num_layers=8),
+        live=LiveConfig(
+            num_workers=3, num_batches=NUM_BATCHES,
+            protocol=ProtocolConfig(chain_every=8, global_every=16,
+                                    repartition_first_at=10_000,
+                                    repartition_every=10_000,
+                                    detect_timeout=0.5),
+            lr=0.1, kill=(KILL_DEV, KILL_BATCH),
+            rejoin=(KILL_DEV, REJOIN_BATCH), join_wait=90),
+        transport="tcp")
+    res = start_run(cfg).wait()
 
     print(f"elastic TCP cluster run: SIGKILL worker {KILL_DEV} "
           f"@batch {KILL_BATCH}, relaunch @batch {REJOIN_BATCH} "

@@ -19,12 +19,12 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
-import jax
 import numpy as np
 
-from repro.runtime.live import LiveConfig, run_live_training
+from repro.run import RunConfig, start_run
+from repro.runtime.live import LiveConfig
 from repro.runtime.protocol import ProtocolConfig
-from repro.runtime.workload import classification_batches, mlp_chain
+from repro.runtime.workload import WorkloadSpec
 
 KILL_DEV, KILL_BATCH, NUM_BATCHES = 1, 18, 40
 
@@ -38,15 +38,16 @@ def spark(xs, lo, hi, width=60):
 
 
 def main():
-    chain = mlp_chain(jax.random.PRNGKey(0), num_layers=8)
-    batches = classification_batches("mlp", 8, batch=16, seed=0)
-    cfg = LiveConfig(
-        num_workers=3, num_batches=NUM_BATCHES,
-        protocol=ProtocolConfig(chain_every=10, global_every=20,
-                                repartition_first_at=5,
-                                repartition_every=15, detect_timeout=0.4),
-        lr=0.1, kill=(KILL_DEV, KILL_BATCH))
-    res = run_live_training(chain, batches, cfg)
+    cfg = RunConfig(
+        workload=WorkloadSpec(kind="mlp", seed=0, num_layers=8),
+        live=LiveConfig(
+            num_workers=3, num_batches=NUM_BATCHES,
+            protocol=ProtocolConfig(chain_every=10, global_every=20,
+                                    repartition_first_at=5,
+                                    repartition_every=15,
+                                    detect_timeout=0.4),
+            lr=0.1, kill=(KILL_DEV, KILL_BATCH)))
+    res = start_run(cfg).wait()
 
     print(f"live run: kill worker {KILL_DEV} @batch {KILL_BATCH} "
           f"({NUM_BATCHES} batches total)")

@@ -24,8 +24,8 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import numpy as np
 
+from repro.run import RunConfig, start_run
 from repro.runtime.live import LiveConfig
-from repro.runtime.net import run_tcp_training
 from repro.runtime.protocol import ProtocolConfig
 from repro.runtime.workload import WorkloadSpec
 
@@ -33,14 +33,17 @@ KILL_DEV, KILL_BATCH, NUM_BATCHES = 1, 14, 32
 
 
 def main():
-    spec = WorkloadSpec(kind="mlp", seed=0, num_layers=8)
-    cfg = LiveConfig(
-        num_workers=3, num_batches=NUM_BATCHES,
-        protocol=ProtocolConfig(chain_every=10, global_every=20,
-                                repartition_first_at=5,
-                                repartition_every=15, detect_timeout=0.5),
-        lr=0.1, kill=(KILL_DEV, KILL_BATCH))
-    res = run_tcp_training(spec, cfg)
+    cfg = RunConfig(
+        workload=WorkloadSpec(kind="mlp", seed=0, num_layers=8),
+        live=LiveConfig(
+            num_workers=3, num_batches=NUM_BATCHES,
+            protocol=ProtocolConfig(chain_every=10, global_every=20,
+                                    repartition_first_at=5,
+                                    repartition_every=15,
+                                    detect_timeout=0.5),
+            lr=0.1, kill=(KILL_DEV, KILL_BATCH)),
+        transport="tcp")
+    res = start_run(cfg).wait()
 
     print(f"TCP cluster run: coordinator + 2 worker processes, SIGKILL "
           f"worker {KILL_DEV} @batch {KILL_BATCH} "

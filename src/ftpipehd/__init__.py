@@ -1,0 +1,14 @@
+"""``ftpipehd`` — the paper-named alias for the ``repro`` package.
+
+The reproduction grew under ``repro.*``; this thin package gives the
+public surface its paper name without moving code. ``ftpipehd.run`` is
+the supported entry point (RunConfig / Run / start_run)."""
+import sys
+
+from repro import run
+
+# make ``from ftpipehd.run import Run`` work: the alias must be a real
+# importable submodule, not just an attribute of this package
+sys.modules[__name__ + ".run"] = run
+
+__all__ = ["run"]

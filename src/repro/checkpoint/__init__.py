@@ -1,2 +1,8 @@
 from repro.checkpoint.store import CheckpointStore, save_pytree, restore_pytree
-from repro.checkpoint.replication_store import ReplicatedCheckpointer
+from repro.checkpoint.manifest import RunManifest, atomic_write_json
+from repro.checkpoint.replication_store import (
+    DiskLayerTier,
+    DurableLayerReplicaStore,
+    LayerReplicaStore,
+    ReplicatedCheckpointer,
+)

@@ -8,10 +8,14 @@ replica, exactly mirroring ``core.replication.ReplicaStore.recover``.
 """
 from __future__ import annotations
 
+import json
+import os
 from typing import Any, Callable, Optional
 
 import jax
+import numpy as np
 
+from repro.checkpoint.manifest import _fsync_dir, atomic_write_json
 from repro.core.replication import chain_target, should_chain, should_global
 
 
@@ -148,13 +152,18 @@ class LayerReplicaStore:
         return sum(seen.values())
 
     def nbytes_report(self) -> dict:
-        """{"per_tier": {tier -> bytes}, "deduped": int, "duplicated": int}
-        where ``duplicated`` is the bytes a naive sum over tiers would
-        over-report (snapshots present in more than one tier)."""
+        """{"per_tier": {tier -> bytes}, "deduped": int, "duplicated": int,
+        "in_memory": int, "on_disk": int} where ``duplicated`` is the bytes
+        a naive sum over tiers would over-report (snapshots present in more
+        than one tier). ``in_memory``/``on_disk`` split the footprint by
+        medium: the base store is memory-only (``on_disk`` = 0);
+        ``DurableLayerReplicaStore`` overrides ``on_disk`` with its disk
+        tier's indexed file bytes."""
         per_tier = {t: self.nbytes(t) for t in self._tiers}
         deduped = self.nbytes()
         return {"per_tier": per_tier, "deduped": deduped,
-                "duplicated": sum(per_tier.values()) - deduped}
+                "duplicated": sum(per_tier.values()) - deduped,
+                "in_memory": deduped, "on_disk": 0}
 
     def has(self, layer: int, tier: Optional[str] = None) -> bool:
         """Whether any tier (or the given one) holds the layer."""
@@ -189,3 +198,167 @@ class LayerReplicaStore:
     def covers(self, num_layers: int, tier: Optional[str] = None) -> bool:
         """Every layer 0..num_layers-1 recoverable from the store."""
         return all(self.has(l, tier) for l in range(num_layers))
+
+
+class DiskLayerTier:
+    """Crash-consistent on-disk tier of per-layer slice files.
+
+    Layout (one directory)::
+
+        layer_00003.00000016.bin   raw bytes of layer 3's packed slice,
+                                   snapshotted at batch 16 (tmp+rename)
+        replicas.json              the INDEX: {layer -> {batch, file,
+                                   dtype, shape}}, atomically replaced
+
+    The index is the single source of truth: ``load()`` reads only files
+    it names, so a SIGKILL mid-``put`` (a ``.bin`` written but not yet
+    indexed, or a dangling ``.tmp``) leaves the previous committed state
+    intact and the stray file is garbage-collected at the next ``sync()``.
+    ``put`` stages an entry in memory; ``sync()`` — called at global
+    replication points, before the manifest is written — fsyncs the staged
+    files, replaces the index (fsync + rename + directory fsync), and GCs
+    orphans. A delta-skip ``restamp`` only rewrites the index entry's
+    batch stamp (the bytes on disk are verified-current by the sender), so
+    the file name's embedded batch is a birth label, not authoritative.
+
+    Values must be array-like (the live runtime's packed flat f32 slices);
+    legacy pytree snapshots are not durable and stay memory-only."""
+
+    INDEX = "replicas.json"
+
+    def __init__(self, directory: str):
+        self.dir = directory
+        os.makedirs(self.dir, exist_ok=True)
+        self._index: dict[int, dict] = {}
+        self._staged: dict[int, dict] = {}
+        self._dirty = False
+        path = os.path.join(self.dir, self.INDEX)
+        if os.path.exists(path):
+            with open(path, encoding="utf-8") as f:
+                doc = json.load(f)
+            self._index = {int(k): dict(v)
+                           for k, v in doc.get("layers", {}).items()}
+
+    def put(self, layer: int, batch: int, value: Any) -> None:
+        arr = np.asarray(value)
+        cur = self._staged.get(layer) or self._index.get(layer)
+        if cur is not None and int(cur["batch"]) >= batch:
+            return
+        name = f"layer_{layer:05d}.{batch:08d}.bin"
+        tmp = os.path.join(self.dir, name + ".tmp")
+        with open(tmp, "wb") as f:
+            f.write(np.ascontiguousarray(arr).tobytes())
+        os.replace(tmp, os.path.join(self.dir, name))
+        self._staged[layer] = {"batch": int(batch), "file": name,
+                               "dtype": str(arr.dtype),
+                               "shape": list(arr.shape)}
+        self._dirty = True
+
+    def restamp(self, layer: int, batch: int) -> None:
+        """Delta-skip: the sender verified the stored bytes are still its
+        current snapshot — advance the stamp without rewriting the file."""
+        ent = self._staged.get(layer) or self._index.get(layer)
+        if ent is not None and batch >= int(ent["batch"]):
+            newe = dict(ent)
+            newe["batch"] = int(batch)
+            self._staged[layer] = newe
+            self._dirty = True
+
+    def sync(self) -> None:
+        """Commit staged puts: fsync their files, atomically replace the
+        index, GC unreferenced ``.bin``/``.tmp`` files."""
+        if not self._dirty:
+            return
+        for ent in self._staged.values():
+            path = os.path.join(self.dir, ent["file"])
+            try:
+                fd = os.open(path, os.O_RDONLY)
+            except OSError:
+                continue
+            try:
+                os.fsync(fd)
+            finally:
+                os.close(fd)
+        self._index.update(self._staged)
+        self._staged = {}
+        atomic_write_json(
+            os.path.join(self.dir, self.INDEX),
+            {"layers": {str(k): v for k, v in self._index.items()}})
+        live = {ent["file"] for ent in self._index.values()}
+        for name in os.listdir(self.dir):
+            if name.endswith((".bin", ".tmp")) and name not in live:
+                try:
+                    os.remove(os.path.join(self.dir, name))
+                except OSError:
+                    pass
+        _fsync_dir(self.dir)
+        self._dirty = False
+
+    def load(self) -> dict[int, tuple[int, np.ndarray]]:
+        """{layer -> (batch, array)} for every INDEXED snapshot; staged or
+        orphaned files are invisible (they never committed)."""
+        out: dict[int, tuple[int, np.ndarray]] = {}
+        for layer, ent in self._index.items():
+            path = os.path.join(self.dir, ent["file"])
+            try:
+                raw = open(path, "rb").read()
+            except OSError:
+                continue
+            arr = np.frombuffer(raw, dtype=np.dtype(ent["dtype"]))
+            out[layer] = (int(ent["batch"]),
+                          arr.reshape([int(s) for s in ent["shape"]]))
+        return out
+
+    def batches(self) -> dict[int, int]:
+        return {layer: int(ent["batch"])
+                for layer, ent in self._index.items()}
+
+    def nbytes(self) -> int:
+        total = 0
+        for ent in self._index.values():
+            try:
+                total += os.path.getsize(os.path.join(self.dir, ent["file"]))
+            except OSError:
+                pass
+        return total
+
+
+class DurableLayerReplicaStore(LayerReplicaStore):
+    """``LayerReplicaStore`` whose GLOBAL tier is mirrored to a
+    ``DiskLayerTier`` (ISSUE direction 4: the coordinator's central store
+    must survive the coordinator). Construction replays the disk index
+    into the in-memory GLOBAL tier, which is how a relaunched coordinator
+    recovers every layer at the manifest's committed batch. Mirroring is
+    write-through but commit is explicit: call ``sync()`` at replication
+    points (the coordinator does, right before saving the manifest)."""
+
+    def __init__(self, directory: str):
+        super().__init__()
+        self.disk = DiskLayerTier(directory)
+        for layer, (batch, arr) in self.disk.load().items():
+            super().put(layer, batch, arr, self.GLOBAL)
+
+    def put(self, layer: int, batch: int, params: Any,
+            tier: str = LayerReplicaStore.GLOBAL) -> None:
+        super().put(layer, batch, params, tier)
+        if tier == self.GLOBAL:
+            try:
+                self.disk.put(layer, batch, params)
+            except (TypeError, ValueError):
+                pass                    # non-array legacy value: memory-only
+
+    def refresh(self, batch: int, same: dict,
+                tier: str = LayerReplicaStore.GLOBAL) -> list[int]:
+        done = super().refresh(batch, same, tier)
+        if tier == self.GLOBAL:
+            for j in done:
+                self.disk.restamp(j, batch)
+        return done
+
+    def sync(self) -> None:
+        self.disk.sync()
+
+    def nbytes_report(self) -> dict:
+        rep = super().nbytes_report()
+        rep["on_disk"] = self.disk.nbytes()
+        return rep

@@ -98,6 +98,19 @@ def build_parser() -> argparse.ArgumentParser:
                          "(chain_put/global_put); default: follow "
                          "--wire-compress. §III-F redistribution payloads "
                          "are always exact f32 regardless")
+    ap.add_argument("--reliable-wire", action="store_true",
+                    help="seq/ack retransmit window on the data plane: a "
+                         "dropped act/grad frame costs a resend (~rto), "
+                         "not a segment-timeout drain; cluster-wide")
+    ap.add_argument("--run-dir", default=None, metavar="DIR",
+                    help="durable control plane: mirror global replicas "
+                         "to a disk tier under DIR and keep a resumable "
+                         "run manifest there (docs/protocol.md \u00a78)")
+    ap.add_argument("--resume", default=None, metavar="DIR",
+                    help="relaunch the run persisted under DIR from its "
+                         "last committed batch (re-adopting surviving "
+                         "worker processes on tcp); other flags are "
+                         "ignored \u2014 the manifest is the config")
     ap.add_argument("--transport", default="queue", choices=["queue", "tcp"],
                     help="queue = threads in one process; tcp = one OS "
                          "process per worker over runtime/net.py sockets")
@@ -124,32 +137,19 @@ def _parse_at(value):
     return (int(dev), int(b))
 
 
-def _build_cfg(args, specs, kill):
-    from repro.runtime.live import LiveConfig
-    from repro.runtime.protocol import ProtocolConfig
-    return LiveConfig(
-        num_workers=args.workers, num_batches=args.batches,
-        protocol=ProtocolConfig(chain_every=args.chain_every,
-                                global_every=args.global_every,
-                                repartition_first_at=5,
-                                repartition_every=args.repartition_every,
-                                detect_timeout=args.detect_timeout),
-        lr=args.lr, momentum=args.momentum, kill=kill,
-        device_specs=specs, emulate_capacity=args.emulate,
-        capacity_source=args.capacity_source,
-        aggregate_every=args.aggregate_every,
-        compiled=not args.uncompiled, wire_codec=args.wire_codec,
-        wire_compress=args.wire_compress,
-        wire_compress_replica=args.wire_compress_replica,
-        rejoin=_parse_at(args.rejoin), join_after=args.join_after,
-        join_wait=args.join_wait)
+def _build_run_config(args, specs, kill):
+    """The CLI's single source of run configuration: the shared
+    ``run.RunConfig.from_args`` core (the part a manifest serializes),
+    plus the CLI-local extras — fault injection and device emulation —
+    layered on via ``dataclasses.replace``."""
+    import dataclasses
 
-
-def _workload_spec(args):
-    from repro.runtime.workload import WorkloadSpec
-    return WorkloadSpec(kind=args.chain, seed=args.seed,
-                        num_layers=args.layers, batch_size=args.batch_size,
-                        num_data_batches=8 if args.chain == "mlp" else 4)
+    from repro.run import RunConfig
+    cfg = RunConfig.from_args(args)
+    live = dataclasses.replace(
+        cfg.live, kill=kill, rejoin=_parse_at(args.rejoin),
+        join_after=args.join_after, device_specs=specs)
+    return dataclasses.replace(cfg, live=live)
 
 
 def _report(res, args):
@@ -159,8 +159,10 @@ def _report(res, args):
           f"hot path={'eager' if args.uncompiled else 'compiled'}"
           f"{', wire codec on' if args.wire_codec else ''}"
           f"{f', wire compress {args.wire_compress}' if args.wire_compress != 'off' else ''}")
-    print(f"  loss: {res.losses[0]:.3f} -> {res.losses[-1]:.3f} "
-          f"(median last 5: {np.median(res.losses[-5:]):.3f})")
+    # resumed runs NaN-pad the batches trained before the resume point
+    losses = [l for l in res.losses if np.isfinite(l)]
+    print(f"  loss: {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"(median last 5: {np.median(losses[-5:]):.3f})")
     for t, e in res.events:
         print(f"  t={t:7.2f}s  {e}")
     print("  partitions:")
@@ -193,7 +195,26 @@ def main():
     os.environ.setdefault("JAX_PLATFORMS", "cpu")
     import jax  # noqa: F401  (select platform before any jax usage below)
 
+    from repro.run import Run
     from repro.runtime.devices import DeviceSpec
+
+    if args.resume:
+        # the manifest IS the config: everything else on the command line
+        # is ignored except --batches as an explicit horizon override
+        run = Run.resume(args.resume)
+        print(f"resuming run from {args.resume}: transport="
+              f"{run.config.transport}, start batch "
+              f"{run.config.live.start_batch}")
+        res = run.start().wait()
+        _report(res, argparse.Namespace(
+            workers=run.config.live.num_workers,
+            batches=run.config.live.num_batches,
+            chain=run.config.workload.kind,
+            transport=run.config.transport,
+            uncompiled=not run.config.live.compiled,
+            wire_codec=run.config.live.wire_codec,
+            wire_compress=run.config.live.wire_compress))
+        return
 
     specs = None
     if args.capacities:
@@ -201,53 +222,37 @@ def main():
         assert len(caps) == args.workers, (caps, args.workers)
         specs = [DeviceSpec(f"dev-{i}", c) for i, c in enumerate(caps)]
 
-    kill = _parse_at(args.kill)
+    cfg = _build_run_config(args, specs, _parse_at(args.kill))
 
-    cfg = _build_cfg(args, specs, kill)
-    spec = _workload_spec(args)
-
-    if args.transport == "tcp":
+    if args.transport == "tcp" and args.role == "worker":
+        # one process of a multi-host cluster: no coordinator facade here,
+        # just the worker loop against the operator-provided addresses
         from repro.runtime import net
-        if args.role == "worker":
-            assert args.dev is not None and args.listen and args.peers, \
-                "--role worker needs --dev, --listen and --peers"
-            addr_of = net.parse_peers(args.peers)
-            host, _, port = args.listen.rpartition(":")
-            addr_of[args.dev] = (host, int(port))
-            net.worker_main(args.dev, addr_of, spec, cfg,
-                            incarnation=args.incarnation)
-            return
-        if args.role == "coordinator":
-            assert args.listen and args.peers, \
-                "--role coordinator needs --listen and --peers"
-            assert not (args.rejoin or args.join_after is not None), \
-                "--rejoin/--join-after cannot spawn processes on OTHER " \
-                "hosts: relaunch the worker's own command with " \
-                "--incarnation bumped; the coordinator admits it " \
-                "automatically"
-            from repro.runtime.live import COORD, Coordinator
-            addr_of = net.parse_peers(args.peers)
-            host, _, port = args.listen.rpartition(":")
-            addr_of[COORD] = addr_of[0] = (host, int(port))
-            chain, batches = spec.build()
-            transport = net.SocketTransport(addr_of, local=(COORD, 0),
-                                            fault=cfg.fault)
-            coord = Coordinator(chain, lambda gb: batches[gb % len(batches)],
-                                cfg, transport=transport,
-                                remote_devs=set(range(1, args.workers)))
-            try:
-                res = coord.run()
-            finally:
-                transport.close()
-            _report(res, args)
-            return
-        res = net.run_tcp_training(spec, cfg)
-        _report(res, args)
+        assert args.dev is not None and args.listen and args.peers, \
+            "--role worker needs --dev, --listen and --peers"
+        addr_of = net.parse_peers(args.peers)
+        host, _, port = args.listen.rpartition(":")
+        addr_of[args.dev] = (host, int(port))
+        net.worker_main(args.dev, addr_of, cfg.workload, cfg.live,
+                        incarnation=args.incarnation)
         return
 
-    from repro.runtime.live import run_live_training
-    chain, batches = spec.build()
-    res = run_live_training(chain, batches, cfg)
+    addr_of = None
+    if args.transport == "tcp" and args.role == "coordinator":
+        from repro.runtime import net
+        from repro.runtime.live import COORD
+        assert args.listen and args.peers, \
+            "--role coordinator needs --listen and --peers"
+        assert not (args.rejoin or args.join_after is not None), \
+            "--rejoin/--join-after cannot spawn processes on OTHER " \
+            "hosts: relaunch the worker's own command with " \
+            "--incarnation bumped; the coordinator admits it " \
+            "automatically"
+        addr_of = net.parse_peers(args.peers)
+        host, _, port = args.listen.rpartition(":")
+        addr_of[COORD] = addr_of[0] = (host, int(port))
+
+    res = Run(cfg, addr_of=addr_of).start().wait()
     _report(res, args)
 
 

@@ -66,6 +66,16 @@ TIERS = ("off", "fp16", "int8")
 DATA_KINDS = frozenset({"act", "grad"})          # activations + cotangents
 REPLICA_KINDS = frozenset({"chain_put", "global_put"})   # §III-E snapshots
 
+# data-plane kinds covered by the transports' seq/ack retransmit window
+# (docs/protocol.md §7): a reliable sender wraps the payload as
+# {"_seq": n, "_era": e, "body": payload} and the receiver answers with
+# batched CUMULATIVE ACK_KIND frames carrying {"era", "floor", "seqs"}.
+# Acks are themselves best-effort (an unacked frame is simply
+# retransmitted) and are consumed at the transport layer — worker code
+# never sees them.
+RELIABLE_KINDS = frozenset(DATA_KINDS)
+ACK_KIND = "ack"
+
 
 @dataclasses.dataclass(frozen=True)
 class WirePolicy:

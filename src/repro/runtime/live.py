@@ -39,6 +39,7 @@ only activations/gradients/weights travel the transport.
 from __future__ import annotations
 
 import dataclasses
+import os
 import threading
 import time
 from typing import Any, Callable, Optional
@@ -47,7 +48,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint.replication_store import LayerReplicaStore
+from repro.checkpoint.manifest import RunManifest
+from repro.checkpoint.replication_store import (DurableLayerReplicaStore,
+                                                LayerReplicaStore)
 from repro.core import fault as fault_sm
 from repro.runtime import codec as wire_codec_mod
 from repro.core import schedule as sched
@@ -57,7 +60,8 @@ from repro.core.redistribution import RedistributionPlan
 from repro.runtime import protocol
 from repro.runtime.devices import DeviceSpec, WorkloadProfile, uniform_bandwidth
 from repro.runtime.stage_executor import ChainLayout, StageExecutor
-from repro.runtime.transport import FaultSpec, Heartbeat, Transport
+from repro.runtime.transport import (FaultSpec, Heartbeat, Transport,
+                                     TransportBase)
 from repro.runtime.workload import LayerChain
 
 COORD = -1          # coordinator control-plane node id on the transport
@@ -168,6 +172,22 @@ class LiveConfig:
     join_wait: float = 20.0      # max seconds the coordinator waits at a
     #   control point for a scheduled joiner's hello before giving up on
     #   admitting it there (bounded — a no-show can never wedge the run)
+    # ---- reliable data plane (seq/ack retransmit window) ----------------
+    reliable_data: bool = False  # retransmit unacked act/grad frames at
+    #   the transport layer (TransportBase seq/ack window) instead of
+    #   paying a segment-timeout drain per dropped frame. Cluster-wide:
+    #   every node's transport must agree (the facade/CLI set it on all)
+    rto: float = 0.25            # retransmit timeout (seconds) when
+    #   reliable_data is on
+    # ---- durable control plane (disk replicas + run manifest) -----------
+    run_dir: Optional[str] = None   # directory for the disk replica tier
+    #   and the run manifest; None = pure in-memory coordinator (legacy)
+    start_batch: int = 0         # first batch of this process's training
+    #   loop: 0 for a fresh run, manifest last_committed + ... on resume
+    resume: bool = False         # this coordinator is a RELAUNCH: seed
+    #   worker slices from the disk-backed global store, tolerate absent
+    #   workers at bring-up, and re-adopt live remote workers through the
+    #   abort+install handshake instead of assuming a cold cluster
 
     def wire_policy(self) -> wire_codec_mod.WirePolicy:
         """The compression tiers this config asks for, as the per-kind
@@ -197,6 +217,9 @@ class LiveResult:
     exitcode_history: dict = dataclasses.field(default_factory=dict)
     #   dev -> [exit codes in incarnation order] (multi-process runs; a
     #   SIGKILL-then-rejoin device reads [-9, 0])
+    replica_report: dict = dataclasses.field(default_factory=dict)
+    #   LayerReplicaStore.nbytes_report() of the coordinator's global
+    #   store at teardown (includes the on-disk tier for durable runs)
 
     @property
     def final_partition(self) -> tuple:
@@ -252,6 +275,11 @@ class Worker(threading.Thread):
         self._refit_cancel = False   # coordinator abandoned the refit in
         #                              flight (a holder died): do NOT
         #                              install, keep the pre-refit state
+        self._installed_key = None   # (range, version) of the last applied
+        #                              install MESSAGE: a relaunched
+        #                              coordinator resends installs until
+        #                              acked, and a duplicate must re-ack
+        #                              without resetting the stash
         self._execs: dict[tuple, StageExecutor] = {}
         # §III-E delta-plus-skip: per-peer shadow of the packed layer
         # slices last shipped there, keyed by (tier, peer node) — unchanged
@@ -436,7 +464,7 @@ class Worker(threading.Thread):
         admitted after this worker's bring-up is absent from its startup
         ``addr_of``, and acts/grads/fetches to it would otherwise drop."""
         addrs = spec.get("addrs")
-        if addrs and hasattr(self.transport, "add_route"):
+        if addrs:                # no-op on in-process transports (ABC default)
             for d, a in addrs.items():
                 if int(d) != self.dev:
                     self.transport.add_route(int(d), (a[0], int(a[1])))
@@ -697,20 +725,36 @@ class Worker(threading.Thread):
         converges on the coordinator's tiers. Decode needs no negotiation
         (tags are self-describing); only the ENCODE side is steered."""
         w = spec.get("wire") if isinstance(spec, dict) else None
-        if w and hasattr(self.transport, "set_policy"):
+        if w:
             self.transport.set_policy(wire_codec_mod.WirePolicy.from_payload(w))
 
     def _do_install(self, spec: dict):
         """Startup install for a remote worker: the coordinator ships the
         initial slice over the wire (range + per-layer packed weights);
-        ACK with ``ready`` so the control plane can start segment 0."""
+        ACK with ``ready`` so the control plane can start segment 0.
+
+        Idempotent per (range, version): a relaunched coordinator
+        re-adopting this worker RESENDS the install until the ready ack
+        gets through, and applying a duplicate would throw away live
+        training state (stash reset) mid-run — so a repeat is re-acked
+        without reinstalling (docs/protocol.md §8)."""
         self._apply_wire(spec)
         a, e = spec["range"]
-        self.install((a, e), {int(j): p for j, p in spec["layers"].items()},
-                     version=spec.get("version", 0))
+        version = spec.get("version", 0)
+        key = ((a, e), version)
+        if self._installed_key != key:
+            self._learn_routes(spec)
+            # a fresh install fences a new data-plane era: drop reliable
+            # seq/ack state so a relaunched peer's restarted sequence
+            # space isn't mistaken for duplicates (docs/protocol.md §8)
+            self.transport.reliable_reset()
+            self.install((a, e),
+                         {int(j): p for j, p in spec["layers"].items()},
+                         version=version)
+            self._installed_key = key
         self.transport.send(self.dev, COORD, "ready",
                             {"stage": spec.get("stage", -1), "missing": [],
-                             "version": spec.get("version", 0)})
+                             "version": version})
 
     def _do_refit(self, spec: dict):
         """Re-partition / recovery commit: assemble the new slice from local
@@ -804,9 +848,11 @@ class Coordinator:
     process SIGKILLs itself) instead of calling ``Worker.crash``."""
 
     def __init__(self, chain: LayerChain, data_fn: Callable[[int], dict],
-                 cfg: LiveConfig, transport: Optional[Transport] = None,
+                 cfg: LiveConfig, transport: Optional[TransportBase] = None,
                  remote_devs: Optional[set] = None,
-                 spawner: Optional[Callable[[int, int], None]] = None):
+                 spawner: Optional[Callable[[int, int], None]] = None,
+                 manifest_doc: Optional[dict] = None,
+                 resume_state: Optional[dict] = None):
         self.chain = chain
         self.data_fn = data_fn
         self.cfg = cfg
@@ -818,10 +864,10 @@ class Coordinator:
         self.bandwidth = (cfg.bandwidth if cfg.bandwidth is not None
                           else uniform_bandwidth(N))
         self.wire = cfg.wire_policy()
-        self.transport = transport or Transport(cfg.fault,
-                                                codec=cfg.wire_codec,
-                                                policy=self.wire)
-        if transport is not None and hasattr(transport, "set_policy"):
+        self.transport = transport or Transport.create(
+            "queue", fault=cfg.fault, codec=cfg.wire_codec,
+            policy=self.wire, reliable=cfg.reliable_data, rto=cfg.rto)
+        if transport is not None:
             # the coordinator's policy is authoritative for the cluster:
             # applied to its own endpoint here, shipped to remote workers
             # in the install/admit handshake
@@ -829,17 +875,34 @@ class Coordinator:
         self.remote_devs = set(remote_devs or ())
         assert 0 not in self.remote_devs, \
             "worker 0 shares the coordinator process (the central node)"
+        # ---- durable control plane (manifest + resume) ------------------
+        self.run_dir = cfg.run_dir
+        self._manifest_config = manifest_doc or {}
+        rs = resume_state or {}
+        ids = rs.get("worker_ids")
+        # the worker set this coordinator brings up: a RELAUNCH adopts the
+        # manifest's membership (which may differ from range(N) after
+        # failures/joins); a fresh run starts with the launch set
+        self._startup_ids = ([int(d) for d in ids] if ids
+                             else list(range(N)))
         self.transport.register(COORD)
-        for dev in range(N):
+        for dev in set(range(N)) | set(self._startup_ids):
             self.transport.register(dev)
         self.layout = chain.flat_layout()
-        self.global_store = LayerReplicaStore()
+        if self.run_dir is not None:
+            self.global_store: LayerReplicaStore = DurableLayerReplicaStore(
+                os.path.join(self.run_dir, "replicas"))
+        else:
+            self.global_store = LayerReplicaStore()
         self.abort_event = threading.Event()
+        self._stop_requested = threading.Event()
+        for dev in self._startup_ids:
+            self._ensure_spec(dev)       # manifest ids can exceed N (hot-join)
         self.workers = {
             dev: Worker(dev, chain, data_fn, self.transport, cfg,
                         self.abort_event, self.specs[dev], self.layout,
                         global_store=self.global_store if dev == 0 else None)
-            for dev in range(N) if dev not in self.remote_devs}
+            for dev in self._startup_ids if dev not in self.remote_devs}
         self.events: list = []
         self.loss_log: list = []
         self.losses = np.full(cfg.num_batches, np.nan)
@@ -864,6 +927,10 @@ class Coordinator:
         self._inc: dict[int, int] = {dev: 0 for dev in range(N)}
         #   admitted incarnation per device; a hello at or below it while
         #   the device is fenced is a stale frame and is ignored
+        for d, inc in rs.get("incarnations", {}).items():
+            # resume: restore PR 4 epoch fencing so a zombie of a fenced
+            # incarnation cannot talk its way back in past the relaunch
+            self._inc[int(d)] = int(inc)
         self._pending_joins: dict[int, dict] = {}   # dev -> {inc, addr}
         self._spawn_queue: dict[int, int] = {}      # dev -> incarnation,
         #   deferred until the dev has left the worker list (a rejoin
@@ -875,6 +942,9 @@ class Coordinator:
         #   learned from hellos; shipped to peers with segment/refit
         #   payloads so workers can route to devices admitted after their
         #   own bring-up (TCP runs; empty under the queue transport)
+        for node, a in rs.get("addr_of", {}).items():
+            if int(node) > 0:            # resume: pre-learned worker routes
+                self._dev_addrs[int(node)] = (a[0], int(a[1]))
         self._respawn: dict[int, int] = {}          # dev -> commit batch
         if cfg.rejoin is not None:
             dev, b = cfg.rejoin
@@ -1120,7 +1190,7 @@ class Coordinator:
                 self.remote_devs.add(dev)
                 self._log(f"spawning dev{dev} inc{inc} (process)")
                 self.spawner(dev, inc)
-            elif hasattr(self.transport, "add_route"):
+            elif self.transport.is_networked:
                 # socket transport without a spawner (multi-host
                 # coordinator role): this process cannot host a worker
                 # thread for a remote device — the operator relaunches the
@@ -1150,8 +1220,7 @@ class Coordinator:
                 # were never in the startup remote set)
                 self.remote_devs.add(dev)
             self._ensure_spec(dev)
-            if info.get("addr") is not None \
-                    and hasattr(self.transport, "add_route"):
+            if info.get("addr") is not None:
                 self.transport.add_route(dev, info["addr"])
             self.transport.register(dev)
             self.transport.revive(dev)
@@ -1193,14 +1262,19 @@ class Coordinator:
 
     # ----------------------------- phases --------------------------------
 
-    def _await_remote_workers(self) -> None:
+    def _await_remote_workers(self, optional: bool = False,
+                              timeout: Optional[float] = None) -> set:
         """Block until every own-process worker has been heard from (its
         ``hello`` or first heartbeat) — their interpreters cold-start JAX,
-        so this gate keeps segment 0 from racing the cluster bring-up."""
+        so this gate keeps segment 0 from racing the cluster bring-up.
+        Returns the devices heard. ``optional`` (coordinator relaunch):
+        a no-show is not fatal — the caller shrinks the worker list to
+        the survivors instead of refusing to come back up."""
         if not self.remote_devs:
-            return
+            return set()
         heard: set = set()
-        deadline = time.monotonic() + self.cfg.segment_timeout
+        deadline = time.monotonic() + (timeout if timeout is not None
+                                       else self.cfg.segment_timeout)
         while len(heard) < len(self.remote_devs) \
                 and time.monotonic() < deadline:
             msg = self.transport.recv(COORD, timeout=self.cfg.poll)
@@ -1210,9 +1284,13 @@ class Coordinator:
             if msg.src in self.remote_devs and msg.kind in ("hello", "hb"):
                 heard.add(msg.src)
         missing = sorted(self.remote_devs - heard)
-        if missing:
+        if missing and not optional:
             raise RuntimeError(f"worker processes never connected: {missing}")
+        if missing:
+            self._log(f"workers not heard from at relaunch: {missing} — "
+                      f"resuming without them")
         self._log(f"remote workers connected: {sorted(heard)}")
+        return heard
 
     def _replicate(self, batch: int, do_chain: bool, do_global: bool,
                    part: PartitionResult, worker_ids: list,
@@ -1240,6 +1318,42 @@ class Coordinator:
                       f"acks — continuing, failure detection will follow")
         else:
             self._log(f"{kind} replication @batch {batch}")
+        if do_global:
+            # per-sender FIFO puts every worker's global_put ahead of its
+            # "replicated" ack, so by now the store holds this round's
+            # snapshots (short-ack stragglers only make the floor
+            # conservative) — the right moment to commit durable state
+            self._durable_sync(part, worker_ids)
+
+    def _durable_sync(self, part: PartitionResult, worker_ids: list) -> None:
+        """Commit the durable control plane (run_dir runs only): fsync the
+        disk replica tier, then atomically rewrite the run manifest naming
+        the newest batch the tier fully covers. Ordering matters — the
+        manifest must never name a batch the disk cannot serve."""
+        if self.run_dir is None:
+            return
+        self.global_store.sync()
+        stamps = self.global_store.batches(tier=LayerReplicaStore.GLOBAL)
+        L = self.chain.num_layers
+        floor = min((stamps.get(j, -1) for j in range(L)), default=-1)
+        # a replication at control point b snapshots weights that have
+        # trained batches [0, b) — so the newest batch the disk tier can
+        # replay PAST is b-1, and a resume restarts at last_committed + 1
+        last = int(floor) - 1 if floor > 0 else -1
+        state = {
+            "last_committed": last,
+            "partition": [int(p) for p in part.points],
+            "worker_ids": [int(d) for d in worker_ids],
+            "incarnations": {str(d): int(self._inc.get(d, 0))
+                             for d in worker_ids},
+            "addr_of": {str(n): [a[0], int(a[1])]
+                        for n, a in self.transport.addresses().items()},
+            "wire": self.wire.to_payload(),
+            "num_batches": int(self.cfg.num_batches),
+        }
+        RunManifest(config=self._manifest_config, state=state).save(
+            self.run_dir)
+        self._log(f"manifest committed: last_committed={last}")
 
     def _redistribute(self, part_new: PartitionResult, plans, worker_ids,
                       version: int, kind: str) -> list:
@@ -1375,6 +1489,74 @@ class Coordinator:
                 self._absorb(msg)
         self.abort_event.clear()
 
+    # ----------------------- durable resume helpers -----------------------
+
+    def request_stop(self) -> None:
+        """Ask the batch loop to wind down at the next boundary (clean
+        teardown, manifest intact) — the ``Run.stop()`` entry point.
+        Thread-safe; idempotent."""
+        self._stop_requested.set()
+
+    def _resume_flats(self, a: int, e: int) -> dict:
+        """Initial slice weights for layers [a, e] on a resumed run: the
+        disk-backed global store's committed snapshots, falling back to
+        init params for any layer the store never covered (possible only
+        when resuming a manifest with last_committed = -1)."""
+        out = {}
+        for j in range(a, e + 1):
+            got = self.global_store.get(j, tier=LayerReplicaStore.GLOBAL)
+            out[j] = (np.asarray(got[1]) if got is not None
+                      else self.layout.pack_layer(j, self.chain.params[j]))
+        return out
+
+    def _readopt_remote(self, worker_ids: list, part: PartitionResult,
+                        version: int) -> None:
+        """Coordinator re-adoption (docs/protocol.md §8): fold LIVE remote
+        workers — survivors of a coordinator crash, mid-segment, waiting on
+        acts that will never come — back under this control plane.
+
+        Per pending worker, send ``abort`` (releases a ``_await`` wedge;
+        survivors see the old segment as a drain) THEN the ``install`` for
+        its resumed slice, and RESEND the pair until its ``ready`` ack
+        lands: a worker deep in ``_await`` only dispatches aborts, so an
+        install arriving there would be dropped on the floor — the resend
+        loop plus ``_do_install`` idempotency makes the handshake converge
+        regardless of where the worker was when the old coordinator died.
+        Per-sender FIFO keeps abort-before-install ordering."""
+        remote = [d for d in worker_ids if d in self.remote_devs]
+        if not remote:
+            return
+        self._ready_acks[version] = set()
+        self._ready_missing[version] = []
+        deadline = time.monotonic() + self.cfg.segment_timeout
+        resend_every = max(0.5, self.proto.detect_timeout)
+        last_sent = 0.0
+        while True:
+            pending = [d for d in remote
+                       if d not in self._ready_acks.get(version, set())]
+            if not pending:
+                break
+            if time.monotonic() > deadline:
+                raise RuntimeError(
+                    f"re-adoption incomplete: {pending} never acked the "
+                    f"resumed install")
+            if time.monotonic() - last_sent > resend_every:
+                addrs = self._addrs_payload(worker_ids)
+                for dev in pending:
+                    i = worker_ids.index(dev)
+                    a, e = part.ranges[i]
+                    self.transport.send(COORD, dev, "abort", {})
+                    self.transport.send(
+                        COORD, dev, "install",
+                        {"range": (a, e), "layers": self._resume_flats(a, e),
+                         "version": version, "stage": i,
+                         "wire": self.wire.to_payload(), "addrs": addrs})
+                last_sent = time.monotonic()
+            msg = self.transport.recv(COORD, timeout=self.cfg.poll)
+            if msg is not None:
+                self._absorb(msg)
+        self._log(f"re-adopted workers {remote} @version {version}")
+
     # ------------------------------- run ---------------------------------
 
     def run(self) -> LiveResult:
@@ -1384,39 +1566,60 @@ class Coordinator:
         ones, then drives the segment loop; always tears the cluster down
         (threads joined, remote workers told to stop)."""
         cfg, proto = self.cfg, self.proto
-        N = cfg.num_workers
         L = self.chain.num_layers
         profile = cfg.profile or self.chain.measure_profile(
             self.data_fn(0), repeats=cfg.profile_repeats)
-        est = CapacityEstimator(profile.exec_times, N)
-        worker_ids = list(range(N))
-        part = uniform_partition(L, N)
-        partitions = [(0, part.points)]
+        worker_ids = list(self._startup_ids)
+        v0 = cfg.start_batch
         state = fault_sm.TrainingState(learning_rate=cfg.lr)
 
-        # startup: install uniform slices everywhere (directly for local
-        # workers, over the wire for own-process ones), then replicate the
-        # init weights so replicas exist even for a failure before the
-        # first cadence point. The WHOLE startup sits inside the teardown
-        # try: a failed bring-up (workers never connect, installs unacked)
-        # must not leak worker/heartbeat threads or leave remote processes
-        # polling forever.
+        # startup: install slices everywhere (directly for local workers,
+        # over the wire for own-process ones), then replicate so replicas
+        # exist even for a failure before the first cadence point. A fresh
+        # run installs init weights at version 0; a RESUMED run installs
+        # the disk-backed store's committed snapshots at version
+        # ``start_batch``, re-adopting live remote workers through the
+        # abort+install resend handshake. The WHOLE startup sits inside
+        # the teardown try: a failed bring-up (workers never connect,
+        # installs unacked) must not leak worker/heartbeat threads or
+        # leave remote processes polling forever.
         try:
-            self._await_remote_workers()
+            if cfg.resume:
+                # survivors-only membership: workers that died with (or
+                # since) the old coordinator are dropped here; they can
+                # still rejoin later through the usual hello/admit path
+                heard = self._await_remote_workers(optional=True)
+                worker_ids = [d for d in worker_ids
+                              if d not in self.remote_devs or d in heard]
+                if not worker_ids or worker_ids[0] != 0:
+                    raise RuntimeError(
+                        "resume requires the central worker (device 0)")
+            else:
+                self._await_remote_workers()
+            est = CapacityEstimator(profile.exec_times, len(worker_ids))
+            part = uniform_partition(L, len(worker_ids))
+            partitions = [(v0, part.points)]
             for i, dev in enumerate(worker_ids):
                 a, e = part.ranges[i]
-                flats = {j: self.layout.pack_layer(j, self.chain.params[j])
-                         for j in range(a, e + 1)}
                 if dev in self.workers:
-                    self.workers[dev].install((a, e), flats)
-                else:
+                    flats = (self._resume_flats(a, e) if cfg.resume else
+                             {j: self.layout.pack_layer(j,
+                                                        self.chain.params[j])
+                              for j in range(a, e + 1)})
+                    self.workers[dev].install((a, e), flats, version=v0)
+                elif not cfg.resume:
+                    flats = {j: self.layout.pack_layer(j,
+                                                       self.chain.params[j])
+                             for j in range(a, e + 1)}
                     self.transport.send(COORD, dev, "install",
                                         {"range": (a, e), "layers": flats,
                                          "version": 0, "stage": i,
                                          "wire": self.wire.to_payload()})
             for w in self.workers.values():
                 w.start()
-            if self.remote_devs:
+            if cfg.resume:
+                self._readopt_remote(worker_ids, part, v0)
+            elif self.remote_devs:
                 got = self._collect({"ready"}, len(self.remote_devs),
                                     timeout=self.cfg.segment_timeout)
                 if got < len(self.remote_devs):
@@ -1451,19 +1654,23 @@ class Coordinator:
             capacities=np.array(est.capacities),
             transport_stats=dict(self.transport.stats),
             stash_high_water=dict(self.stash_high_water),
-            recoveries=self.recoveries, admissions=self.admissions)
+            recoveries=self.recoveries, admissions=self.admissions,
+            replica_report=self.global_store.nbytes_report())
 
     def _run_protocol(self, est, part, partitions, worker_ids, profile,
                       state):
         """The coordinator's batch loop (factored out of run() so thread
         teardown can wrap it)."""
         cfg, proto = self.cfg, self.proto
-        self._replicate(0, True, True, part, worker_ids, full=True)
+        b0 = cfg.start_batch
+        self._replicate(b0, True, True, part, worker_ids, full=True)
 
-        b0 = 0
         B = cfg.num_batches
         stall_at, stalls = -1, 0          # no-progress guard for restarts
         while b0 < B:
+            if self._stop_requested.is_set():
+                self._log(f"stop requested @batch {b0}")
+                break
             pts = [p for p in proto.control_points(B) if p > b0]
             nxt = pts[0] if pts else B
             ok, info, committed = self._run_segment(b0, nxt - b0, part,

@@ -59,7 +59,7 @@ import time
 from typing import Any, Dict, Iterable, Optional, Sequence, Tuple
 
 from repro.runtime import codec as wire
-from repro.runtime.transport import FaultSpec, Message
+from repro.runtime.transport import FaultSpec, Message, TransportBase
 
 _HDR = struct.Struct("<Iii")          # length | src | dst (length excludes u32)
 _MAX_FRAME = 1 << 31                  # sanity bound on inbound frame length
@@ -230,7 +230,7 @@ class _Peer:
                 pass
 
 
-class SocketTransport:
+class SocketTransport(TransportBase):
     """``Transport`` over length-prefixed TCP frames (see module docstring).
 
     Parameters
@@ -253,14 +253,22 @@ class SocketTransport:
         to the ENCODE side only — decoding is self-describing, so peers
         with different policies interoperate; the coordinator's policy is
         shipped in the install/admit handshake (``set_policy``).
+    reliable / rto : enable the shared seq/ack retransmit window of
+        ``TransportBase`` on the data plane (``codec.RELIABLE_KINDS``):
+        unacked ``act``/``grad`` frames are resent every ``rto`` seconds
+        until acked or until ``retry_window`` lapses. Cluster-wide
+        setting — every node's transport must agree.
     """
+
+    is_networked = True
 
     def __init__(self, addr_of: Dict[int, Addr], local: Sequence[int],
                  fault: Optional[FaultSpec] = None, *,
                  retry_window: float = 10.0,
                  backoff: Tuple[float, float] = (0.05, 1.0),
                  coalesce_bytes: int = 1 << 20,
-                 policy: Optional[wire.WirePolicy] = None):
+                 policy: Optional[wire.WirePolicy] = None,
+                 reliable: bool = False, rto: float = 0.25):
         import random
         self.addr_of = dict(addr_of)
         self.local = tuple(local)
@@ -280,6 +288,9 @@ class SocketTransport:
         self.stats = {"sent": 0, "delivered": 0, "dropped": 0, "to_dead": 0,
                       "bytes": 0, "tx_bytes": 0, "net_dropped": 0,
                       "data_bytes": 0, "replica_bytes": 0}
+        # frames past the per-frame retry window are shed by the sender
+        # anyway, so bound retransmission attempts by the same horizon
+        self._rel_init(reliable, rto, expiry=retry_window)
         host, port = self.addr_of[self.local[0]]
         self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
@@ -313,6 +324,13 @@ class SocketTransport:
         with self._lock:
             self.addr_of[node] = tuple(addr)
 
+    def addresses(self) -> Dict[int, Addr]:
+        """Snapshot of the routing table {node -> (host, port)} — what the
+        run manifest persists so a relaunched coordinator can dial the
+        surviving workers."""
+        with self._lock:
+            return dict(self.addr_of)
+
     def kill(self, node: int) -> None:
         """Fence a node locally: frames to and from it are dropped from now
         on. For a remote node this models the coordinator's *belief* that
@@ -320,6 +338,7 @@ class SocketTransport:
         process itself dies by SIGKILL, not by this call."""
         with self._lock:
             self._dead.add(node)
+        self._rel_forget(node)
         q = self._inboxes.get(node)
         if q is not None:
             try:
@@ -339,7 +358,8 @@ class SocketTransport:
 
     # ----------------------------- messaging ----------------------------
 
-    def send(self, src: int, dst: int, kind: str, payload: Any = None) -> bool:
+    def send(self, src: int, dst: int, kind: str, payload: Any = None,
+             *, _retx: bool = False) -> bool:
         """Encode and ship one message. Local destinations loop back through
         the codec (fresh deserialized copy, same as one TCP hop); remote
         destinations are framed and enqueued on the peer's sender thread.
@@ -348,8 +368,14 @@ class SocketTransport:
         kill-fence (see ``Transport.send``): it announces a NEW incarnation
         of a fenced device, and admission is decided by the incarnation in
         its payload, not by the transport."""
+        if self._rel_on and not _retx and kind in wire.RELIABLE_KINDS:
+            # wrap before the fault dice / enqueue: a lost first copy stays
+            # in the retransmit window until the receiver's ack arrives
+            payload = self._rel_wrap(src, dst, kind, payload)
         with self._lock:
             self.stats["sent"] += 1
+            if _retx:
+                self.stats["retransmits"] += 1
             if (src in self._dead or dst in self._dead) and kind != "hello":
                 self.stats["to_dead"] += 1
                 return False
@@ -410,15 +436,30 @@ class SocketTransport:
             if (src in self._dead or dst in self._dead) and kind != "hello":
                 self.stats["to_dead"] += 1
                 return
+
+        def _account():
+            with self._lock:
+                self.stats["delivered"] += 1
+                self.stats["bytes"] += len(data)
+                if kind in wire.DATA_KINDS:
+                    self.stats["data_bytes"] += len(data)
+                elif kind in wire.REPLICA_KINDS:
+                    self.stats["replica_bytes"] += len(data)
+
+        if self._rel_on:
+            hit = self._rel_deliver(src, dst, kind, payload)
+            if hit is not None:            # ack/dup/ordered-release path
+                fresh, released = hit
+                for k2, body in released:
+                    inbox.put(Message(src=src, dst=dst, kind=k2,
+                                      payload=body,
+                                      sent_at=time.monotonic()))
+                if fresh:
+                    _account()
+                return
         inbox.put(Message(src=src, dst=dst, kind=kind, payload=payload,
                           sent_at=time.monotonic()))
-        with self._lock:
-            self.stats["delivered"] += 1
-            self.stats["bytes"] += len(data)
-            if kind in wire.DATA_KINDS:
-                self.stats["data_bytes"] += len(data)
-            elif kind in wire.REPLICA_KINDS:
-                self.stats["replica_bytes"] += len(data)
+        _account()
 
     def _accept_loop(self):
         while not self.closed:
@@ -527,7 +568,8 @@ def worker_main(dev: int, addr_of: Dict[int, Addr], spec, cfg,
     # wire-compression tiers from the shared config; the coordinator's
     # install/admit handshake overrides them if the configs disagree
     transport = SocketTransport(addr_of, local=(dev,), fault=cfg.fault,
-                                policy=cfg.wire_policy())
+                                policy=cfg.wire_policy(),
+                                reliable=cfg.reliable_data, rto=cfg.rto)
     host, port = addr_of[dev]
     # announce=True: the Worker loop sends the hello AND re-sends it until
     # the coordinator is heard from — one lost hello (drop fault, expired
@@ -580,8 +622,38 @@ def _spawn_with_pythonpath(procs) -> None:
             os.environ["PYTHONPATH"] = old_pp
 
 
+def coordinator_main(spec, cfg, addr_of: Dict[int, Addr],
+                     manifest_doc: Optional[dict] = None,
+                     resume_state: Optional[dict] = None) -> None:
+    """Entry point of a coordinator PROCESS that can itself be SIGKILLed:
+    hosts the control plane (``COORD``) plus worker device 0 on
+    ``addr_of[0]``, with every other worker expected to run as its own
+    process (``worker_main``). The failover demo runs the coordinator
+    through this so killing it severs sockets mid-stream; a relaunch with
+    the run manifest (``run.Run.resume``) then re-adopts the surviving
+    worker processes."""
+    import os
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    from repro.runtime.live import COORD, Coordinator
+
+    chain, batches = spec.build()
+    transport = SocketTransport(addr_of, local=(COORD, 0), fault=cfg.fault,
+                                policy=cfg.wire_policy(),
+                                reliable=cfg.reliable_data, rto=cfg.rto)
+    remote = {d for d in addr_of if d > 0}
+    coord = Coordinator(chain, lambda gb: batches[gb % len(batches)], cfg,
+                        transport=transport, remote_devs=remote,
+                        manifest_doc=manifest_doc, resume_state=resume_state)
+    try:
+        coord.run()
+    finally:
+        transport.close()
+
+
 def run_tcp_training(spec, cfg, *, host: str = "127.0.0.1",
-                     join_timeout: float = 15.0):
+                     join_timeout: float = 15.0,
+                     manifest_doc: Optional[dict] = None,
+                     on_coordinator=None):
     """Train over real OS processes: coordinator + worker 0 here, workers
     1..N-1 spawned as separate interpreters, all talking TCP through
     ``SocketTransport``. Returns the usual ``LiveResult`` with
@@ -622,10 +694,13 @@ def run_tcp_training(spec, cfg, *, host: str = "127.0.0.1",
 
     chain, batches = spec.build()
     transport = SocketTransport(addr_of, local=(COORD, 0), fault=cfg.fault,
-                                policy=cfg.wire_policy())
+                                policy=cfg.wire_policy(),
+                                reliable=cfg.reliable_data, rto=cfg.rto)
     coord = Coordinator(chain, lambda gb: batches[gb % len(batches)], cfg,
                         transport=transport, remote_devs=set(history),
-                        spawner=spawner)
+                        spawner=spawner, manifest_doc=manifest_doc)
+    if on_coordinator is not None:
+        on_coordinator(coord)            # hand the Run facade its handle
     try:
         res = coord.run()
     finally:

@@ -81,6 +81,29 @@ def test_compression_ratio_gate_fires():
     assert "wire_compress_ratio_int8" in failures[0]
 
 
+def test_reliable_wire_relative_gate():
+    """The reliable-window overhead gate compares within CURRENT (machine-
+    independent), skips result JSONs that predate the metric, and fires
+    when the window costs more than 30% of plain TCP throughput."""
+    # absent from current: skipped, even though the baseline lacks it too
+    assert check_bench.compare(BASELINE, dict(BASELINE)) == []
+    healthy = dict(BASELINE)
+    healthy["wire_MBps_tcp_reliable"] = 350.0      # 0.875x of 400: fine
+    assert check_bench.compare(BASELINE, healthy) == []
+    taxed = dict(BASELINE)
+    taxed["wire_MBps_tcp_reliable"] = 200.0        # 0.5x: over the ceiling
+    failures = check_bench.compare(BASELINE, taxed)
+    assert len(failures) == 1
+    assert "wire_MBps_tcp_reliable" in failures[0] \
+        and "0.50x" in failures[0]
+    # numerator present but denominator missing: a truncated run, not a skip
+    truncated = dict(taxed)
+    truncated["wire_MBps_tcp_reliable"] = 350.0
+    del truncated["wire_MBps_tcp"]
+    failures = check_bench.compare(BASELINE, truncated)
+    assert any("missing" in f and "wire_MBps_tcp" in f for f in failures)
+
+
 def test_cli_exit_codes(tmp_path):
     base_p = tmp_path / "baseline.json"
     base_p.write_text(json.dumps(BASELINE))

@@ -19,6 +19,12 @@ Gated metrics (lower-is-better — the bytes-per-batch gate):
     batch on the live run; growing it past the band means the compressed
     wire regressed even if the f32/int8 ratio held (e.g. both sides grew)
 
+Relative gates (within the current results, no baseline needed):
+
+  * ``wire_MBps_tcp_reliable >= 0.7 * wire_MBps_tcp`` — the seq/ack
+    retransmit window must not tax lossless TCP throughput by more than
+    30% (skipped for result JSONs that predate the metric)
+
 Usage (what CI runs)::
 
     python benchmarks/bench_live_throughput.py --quick --out bench_current.json
@@ -60,6 +66,16 @@ GATED_METRICS_LOWER = {
     "live_bytes_per_batch_int8": "int8 wire bytes per training batch",
 }
 
+# relative gates WITHIN the current results: (numerator, denominator,
+# min ratio, meaning). Machine-independent by construction — both sides
+# come from the same run on the same box — so no baseline is consulted.
+# A numerator missing from current is SKIPPED (older result JSONs predate
+# the metric), unlike the baseline-gated metrics above.
+RELATIVE_GATES = [
+    ("wire_MBps_tcp_reliable", "wire_MBps_tcp", 0.70,
+     "seq/ack retransmit window overhead on the lossless TCP wire"),
+]
+
 
 def compare(baseline: dict, current: dict,
             max_regression: float = 0.30) -> list[str]:
@@ -92,6 +108,19 @@ def compare(baseline: dict, current: dict,
                 f"{key} ({meaning}): {cur:.2f} vs baseline {base:.2f} "
                 f"— {100 * (1 - cur / base):.0f}% regression "
                 f"(> {100 * max_regression:.0f}% allowed)")
+    for num, den, min_ratio, meaning in RELATIVE_GATES:
+        if num not in current:
+            continue                   # result JSON predates the metric
+        if den not in current:
+            failures.append(f"{den}: missing from current results but "
+                            f"{num} is present — truncated benchmark?")
+            continue
+        ratio = float(current[num]) / max(float(current[den]), 1e-12)
+        if ratio < min_ratio:
+            failures.append(
+                f"{num} ({meaning}): {float(current[num]):.2f} is only "
+                f"{ratio:.2f}x of {den} {float(current[den]):.2f} "
+                f"(floor {min_ratio:.2f}x)")
     return failures
 
 

@@ -56,6 +56,7 @@ CLI_HINTS = {
     "live_tcp_fault_tolerance.py": "examples/live_tcp_fault_tolerance.py",
     "live_elastic_rejoin.py": "examples/live_elastic_rejoin.py",
     "live_compressed_wire.py": "examples/live_compressed_wire.py",
+    "live_coordinator_failover.py": "examples/live_coordinator_failover.py",
     "fault_tolerance_demo.py": "examples/fault_tolerance_demo.py",
     "check_bench.py": "tools/check_bench.py",
 }
