@@ -16,6 +16,22 @@ It then VERIFIES, exiting non-zero on any regression so CI can smoke it:
     acceptance floor also enforced by ``benchmarks/bench_live_throughput.py``
     and gated in CI by ``tools/check_bench.py``.
 
+Then it repeats the experiment on the FUSED on-device tier
+(``--wire-compress int8-fused``: per-channel quantization with
+error-feedback residuals inside the compiled stage step, ``kernels/quant``,
+shipped zero-copy as codec tag 13) — this time with a worker KILLED
+mid-run on both sides, so the §III-F detect -> recover -> resume path is
+exercised over quantized frames. The kill pair runs on the in-process
+queue transport (codec on, same byte-level wire format): a real SIGKILL's
+detection point is wall-clock nondeterministic, so over TCP the two runs
+can restart from different batches and the loss comparison would measure
+recovery TIMING, not quantization — the queue transport injects the kill
+at a deterministic batch, isolating the tier's effect. Replica snapshots
+stay exact for this pair so the divergence is attributable to the data
+plane alone. Acceptance: both runs recover exactly once, fused losses
+track the exact kill run within the same tolerance, and the fused data
+plane still shrinks.
+
     PYTHONPATH=src python examples/live_compressed_wire.py
 """
 import os
@@ -34,9 +50,11 @@ from repro.runtime.workload import WorkloadSpec
 NUM_BATCHES = 20
 LOSS_ATOL = 0.05          # quantization noise, not divergence
 MIN_RATIO = 2.5           # data-plane bytes, f32 / int8
+MIN_RATIO_FUSED = 2.0     # per-channel params cost more than per-tensor
+KILL = (1, 8)             # kill worker 1 at batch 8 (fused pair only)
 
 
-def run(tier: str):
+def run(tier: str, kill=None, replica=None, transport="tcp"):
     cfg = RunConfig(
         workload=WorkloadSpec(kind="mlp", seed=0, num_layers=8),
         live=LiveConfig(
@@ -47,8 +65,9 @@ def run(tier: str):
                                     repartition_first_at=10_000,
                                     repartition_every=10_000,
                                     detect_timeout=0.5),
-            lr=0.1, wire_compress=tier),
-        transport="tcp")
+            lr=0.1, wire_compress=tier, wire_compress_replica=replica,
+            wire_codec=True, kill=kill),
+        transport=transport)
     return start_run(cfg).wait()
 
 
@@ -99,6 +118,47 @@ def main():
         ok = False
         print(f"FAIL: int8 only cut data-plane bytes {data_ratio:.2f}x "
               f"(acceptance floor {MIN_RATIO}x)")
+
+    # ---- fused on-device tier, under a mid-run worker kill -------------
+    # replica snapshots exact on BOTH sides: recovery restores identical
+    # state, so any loss divergence is the fused data plane's doing
+    exact_kill = run("off", kill=KILL, replica="off", transport="queue")
+    fused_kill = run("int8-fused", kill=KILL, replica="off",
+                     transport="queue")
+    sk0, sk1 = exact_kill.transport_stats, fused_kill.transport_stats
+    fused_ratio = sk0["data_bytes"] / max(sk1["data_bytes"], 1)
+    kdiff = float(np.nanmax(np.abs(fused_kill.losses - exact_kill.losses)))
+    print(f"fused-wire kill/recovery parity: worker {KILL[0]} killed at "
+          f"batch {KILL[1]}, int8-fused vs exact f32")
+    print(f"  losses  f32 : {np.round(exact_kill.losses[-5:], 4)} (last 5)")
+    print(f"  losses fused: {np.round(fused_kill.losses[-5:], 4)} (last 5)")
+    print(f"  max |loss diff| = {kdiff:.5f} (tolerance {LOSS_ATOL})")
+    print(f"  coordinator data-plane bytes: {sk0['data_bytes']} -> "
+          f"{sk1['data_bytes']} ({fused_ratio:.2f}x smaller)")
+    for name, res in (("exact-kill", exact_kill),
+                      ("fused-kill", fused_kill)):
+        if np.isnan(res.losses).any():
+            ok = False
+            print(f"FAIL: {name} run left batches unfinished:",
+                  np.flatnonzero(np.isnan(res.losses)))
+        if len(res.recoveries) != 1:
+            ok = False
+            print(f"FAIL: {name} run expected exactly 1 recovery, got:",
+                  res.recoveries)
+    if not (kdiff <= LOSS_ATOL):
+        ok = False
+        print(f"FAIL: fused losses diverged from exact f32 under kill "
+              f"({kdiff:.5f} > {LOSS_ATOL})")
+    first = float(np.median(exact_kill.losses[:3]))
+    last = float(np.median(fused_kill.losses[-5:]))
+    if not (last < 0.8 * first):
+        ok = False
+        print(f"FAIL: fused kill run did not train ({first:.3f} -> "
+              f"{last:.3f})")
+    if fused_ratio < MIN_RATIO_FUSED:
+        ok = False
+        print(f"FAIL: fused tier only cut data-plane bytes "
+              f"{fused_ratio:.2f}x (acceptance floor {MIN_RATIO_FUSED}x)")
     print("PASS" if ok else "FAIL")
     sys.exit(0 if ok else 1)
 

@@ -1,0 +1,6 @@
+"""Fused per-channel affine int8 quantize/dequantize Pallas kernels with
+error-feedback residuals (AccEPT, arXiv:2311.05827) — the on-device side
+of the wire-compression tiers in ``runtime/codec.py``."""
+from repro.kernels.quant.ops import dequantize, quantize_ef
+
+__all__ = ["quantize_ef", "dequantize"]

@@ -1,0 +1,103 @@
+"""Fused per-channel affine int8 quantize / dequantize as Pallas kernels.
+
+One VMEM pass per channel tile: the quantizer reduces each channel (last
+axis) to its ``(lo, scale)`` affine range, emits the u8 codes, AND writes
+the error-feedback residual ``z - dequant(q)`` in the same pass — the
+three outputs the ``StageExecutor`` boundary needs to ship a
+device-quantized activation without a single host-side numpy pass
+(vs. the ~15 GIL-bound passes of the codec's tag-12 encoder).
+
+Conventions (shared with ``ref.py``, the numpy oracle, and the wire
+format of ``runtime/qtensor.DeviceQuantized``). The wire-visible outputs
+(``q``, ``lo``, ``scale``) are BIT-IDENTICAL to the oracle; the
+dequantized value and the residual may be 1 ulp more accurate than the
+oracle's two-step rounding where the backend contracts ``lo + scale*q``
+into an FMA (it does on XLA CPU), and sender residual vs receiver
+dequant always agree exactly on a given backend.
+
+  * channel = LAST axis; inputs arrive as 2D ``[rows, channels]`` tiles,
+  * ``scale = (hi - lo) / levels`` with ``q in [0, levels]``
+    (``levels = 255`` on the wire; tests use coarser grids),
+  * a degenerate channel (``hi == lo``, or a non-finite range) stores
+    ``scale = 0`` and ``q = 0`` — it decodes to exactly ``lo``, so
+    constant channels (zeros included) round-trip EXACTLY,
+  * non-finite inputs are the CALLER's fallback case (``ops.quantize_ef``
+    returns an ``ok`` flag); the kernel itself just propagates them.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quant_kernel(z_ref, q_ref, lo_ref, scale_ref, res_ref, *, levels):
+    z = z_ref[...].astype(jnp.float32)               # [rows, blk]
+    lo = jnp.min(z, axis=0)                          # [blk]
+    hi = jnp.max(z, axis=0)
+    scale = (hi - lo) * (1.0 / levels)
+    scale = jnp.where(jnp.isfinite(scale) & (scale > 0), scale, 0.0)
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.rint((z - lo[None, :]) / safe[None, :]), 0, levels)
+    q = jnp.where(scale[None, :] > 0, q, 0.0)
+    # lo + scale*q: backends contract this into an FMA, which is what the
+    # receiver's _dequant_kernel computes too — the residual is therefore
+    # EXACTLY z - dequantize(q, lo, scale) on the compiled path (the
+    # invariant error feedback needs), and within 1 ulp of the two-step
+    # numpy oracle in ref.py.
+    dq = lo[None, :] + scale[None, :] * q
+    q_ref[...] = q.astype(jnp.uint8)
+    lo_ref[...] = lo[None, :].astype(jnp.float32)
+    scale_ref[...] = scale[None, :].astype(jnp.float32)
+    res_ref[...] = (z - dq).astype(jnp.float32)
+
+
+def quantize_kernel(z, *, levels: int = 255, block: int = 128,
+                    interpret: bool = True):
+    """``z``: f32 [rows, C] with C a multiple of ``min(block, C)`` (pad
+    upstream). Returns ``(q u8 [rows, C], lo f32 [1, C], scale f32 [1, C],
+    residual f32 [rows, C])``."""
+    rows, C = z.shape
+    blk = min(block, C)
+    assert C % blk == 0, (C, blk)
+    kern = functools.partial(_quant_kernel, levels=levels)
+    return pl.pallas_call(
+        kern,
+        grid=(pl.cdiv(C, blk),),
+        in_specs=[pl.BlockSpec((rows, blk), lambda i: (0, i))],
+        out_specs=[pl.BlockSpec((rows, blk), lambda i: (0, i)),
+                   pl.BlockSpec((1, blk), lambda i: (0, i)),
+                   pl.BlockSpec((1, blk), lambda i: (0, i)),
+                   pl.BlockSpec((rows, blk), lambda i: (0, i))],
+        out_shape=[jax.ShapeDtypeStruct((rows, C), jnp.uint8),
+                   jax.ShapeDtypeStruct((1, C), jnp.float32),
+                   jax.ShapeDtypeStruct((1, C), jnp.float32),
+                   jax.ShapeDtypeStruct((rows, C), jnp.float32)],
+        interpret=interpret,
+    )(z)
+
+
+def _dequant_kernel(q_ref, lo_ref, scale_ref, x_ref):
+    q = q_ref[...].astype(jnp.float32)
+    x_ref[...] = (lo_ref[...] + scale_ref[...] * q).astype(jnp.float32)
+
+
+def dequantize_kernel(q, lo, scale, *, block: int = 128,
+                      interpret: bool = True):
+    """``q``: u8 [rows, C]; ``lo``/``scale``: f32 [1, C] (same padding
+    contract as ``quantize_kernel``). Returns f32 [rows, C]."""
+    rows, C = q.shape
+    blk = min(block, C)
+    assert C % blk == 0, (C, blk)
+    return pl.pallas_call(
+        _dequant_kernel,
+        grid=(pl.cdiv(C, blk),),
+        in_specs=[pl.BlockSpec((rows, blk), lambda i: (0, i)),
+                  pl.BlockSpec((1, blk), lambda i: (0, i)),
+                  pl.BlockSpec((1, blk), lambda i: (0, i))],
+        out_specs=[pl.BlockSpec((rows, blk), lambda i: (0, i))],
+        out_shape=[jax.ShapeDtypeStruct((rows, C), jnp.float32)],
+        interpret=interpret,
+    )(q, lo, scale)[0]

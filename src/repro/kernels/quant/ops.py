@@ -1,0 +1,95 @@
+"""Traceable wrappers around the fused quantize/dequantize kernels.
+
+``quantize_ef`` / ``dequantize`` are jit-safe: ``StageExecutor`` calls
+them INSIDE its single compiled step so the boundary tensor leaves the
+device already quantized (u8 codes + per-channel affine params + the
+carried error-feedback residual), and the codec ships it zero-copy.
+
+Like ``fused_sgd``, ``interpret=None`` autodetects: interpret-mode
+Pallas on CPU, native Mosaic/Triton lowering on TPU/GPU. Arbitrary-rank
+inputs are viewed as ``[rows, channels]`` with channel = last axis, and
+the channel axis is zero-padded to a block multiple (padded channels
+quantize independently and are sliced away).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quant.kernel import dequantize_kernel, quantize_kernel
+
+
+def pallas_native_backend() -> bool:
+    return jax.default_backend() in ("tpu", "gpu", "cuda", "rocm")
+
+
+def default_interpret() -> bool:
+    # Interpret mode on CPU (no Mosaic/Triton lowering there); native
+    # kernels on TPU/GPU.
+    return not pallas_native_backend()
+
+
+def _pad_cols(a, blk):
+    C = a.shape[-1]
+    pad = (-C) % blk
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad)))
+    return a
+
+
+def quantize_ef(x, res=None, *, levels: int = 255, block: int = 128,
+                interpret: bool | None = None):
+    """Fused per-channel affine quantize with error feedback.
+
+    ``x``: f32 [..., C] (channel = last axis); ``res``: carried residual
+    of the same shape, or None (treated as zeros — first send).
+
+    Returns ``(q, lo, scale, res', ok, z)``:
+      * ``q``     u8 [..., C] codes in ``[0, levels]``,
+      * ``lo``    f32 [C] per-channel offset,
+      * ``scale`` f32 [C] per-channel step (0 = degenerate channel,
+        decoded exactly as ``lo``),
+      * ``res'``  f32 [..., C] next residual ``z - dequant(q)``,
+      * ``ok``    scalar bool — False when ``z`` has non-finite values;
+        callers must then ship ``z`` exactly (and reset the residual),
+      * ``z``     f32 [..., C] ``x + res``, the exact-fallback payload.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    x = jnp.asarray(x, jnp.float32)
+    if x.ndim < 1 or x.size == 0:
+        raise ValueError(f"quantize_ef needs a non-empty array, got shape "
+                         f"{x.shape}")
+    shape = x.shape
+    C = shape[-1]
+    z = x if res is None else x + jnp.asarray(res, jnp.float32)
+    ok = jnp.isfinite(z).all()
+    z2 = z.reshape(-1, C)
+    blk = min(block, C)
+    zp = _pad_cols(z2, blk)
+    q, lo, scale, rout = quantize_kernel(zp, levels=levels,
+                                         block=block, interpret=interpret)
+    return (q[:, :C].reshape(shape), lo[0, :C], scale[0, :C],
+            rout[:, :C].reshape(shape), ok, z)
+
+
+def dequantize(q, lo, scale, *, block: int = 128,
+               interpret: bool | None = None):
+    """Fused dequantize: u8 codes + per-channel ``(lo, scale)`` -> f32.
+
+    ``q``: u8 [..., C]; ``lo``/``scale``: f32 [C]. Inverse of
+    ``quantize_ef`` up to scale/2 per element (exact for degenerate
+    channels where ``scale == 0``).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    q = jnp.asarray(q)
+    shape = q.shape
+    C = shape[-1]
+    q2 = q.reshape(-1, C)
+    blk = min(block, C)
+    qp = _pad_cols(q2, blk)
+    lop = _pad_cols(jnp.asarray(lo, jnp.float32).reshape(1, C), blk)
+    scp = _pad_cols(jnp.asarray(scale, jnp.float32).reshape(1, C), blk)
+    x = dequantize_kernel(qp, lop, scp, block=block, interpret=interpret)
+    return x[:, :C].reshape(shape)

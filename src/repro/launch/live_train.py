@@ -86,10 +86,13 @@ def build_parser() -> argparse.ArgumentParser:
                          "through the bytes wire format (runtime/codec.py); "
                          "TCP always does")
     ap.add_argument("--wire-compress", default="off",
-                    choices=["off", "fp16", "int8"],
+                    choices=["off", "fp16", "int8", "int8-fused"],
                     help="data-plane wire tier: quantize act/grad tensors "
                          "(fp16 cast, or int8 per-tensor affine ~3.9x "
-                         "smaller); decode is self-describing and "
+                         "smaller); int8-fused quantizes INSIDE the "
+                         "compiled stage step (kernels/quant, per-channel "
+                         "+ error-feedback residuals) and ships the codes "
+                         "zero-copy. Decode is self-describing and "
                          "ineligible tensors fall back to exact f32. "
                          "Implies --wire-codec on the queue transport")
     ap.add_argument("--wire-compress-replica", default=None,

@@ -226,8 +226,10 @@ class Run:
 
     def status(self) -> dict:
         """Progress snapshot: lifecycle state, batches trained so far,
-        and — for durable runs — the manifest's last committed batch
-        (readable by ANY process, not just the owning one)."""
+        the coordinator transport's per-plane wire breakdown (``wire``:
+        total bytes plus act/grad/replica/control byte & message
+        counters), and — for durable runs — the manifest's last committed
+        batch (readable by ANY process, not just the owning one)."""
         if self._thread is None:
             state = "created"
         elif self._thread.is_alive():
@@ -237,6 +239,14 @@ class Run:
         out = {"state": state, "transport": self.config.transport,
                "batches_done": len(self._coord.loss_log)
                if self._coord is not None else 0}
+        tstats = (getattr(self._coord.transport, "stats", None)
+                  if self._coord is not None else None)
+        if tstats is not None:
+            # Per-plane wire breakdown (act/grad/replica/control) — copies,
+            # so callers can't mutate the transport's live counters.
+            out["wire"] = {"bytes": tstats.get("bytes", 0),
+                           "kind_bytes": dict(tstats.get("kind_bytes", {})),
+                           "kind_msgs": dict(tstats.get("kind_msgs", {}))}
         run_dir = self.config.live.run_dir
         if run_dir:
             manifest = RunManifest.try_load(run_dir)

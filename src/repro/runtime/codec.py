@@ -40,6 +40,20 @@ ranges (max == min). Which tier a sender uses per message KIND is a
 always exact); the policy is config-carried and confirmed by the
 coordinator in the ``install``/``admit`` handshake (``docs/protocol.md``).
 
+Codec v3 adds the DEVICE-QUANTIZED ndarray tag (13): the payload is a
+``runtime/qtensor.DeviceQuantized`` — u8 codes + per-channel affine
+params produced INSIDE the compiled ``StageExecutor`` step by the fused
+``kernels/quant`` Pallas kernels (with error-feedback residuals carried
+on-device). Unlike tags 11/12, the codec performs NO quantization math in
+either direction: ``encode`` frames the already-quantized bytes with pure
+struct-packing (zero numpy passes — enforced by
+``tools/check_codec_hotpath.py``), and ``decode`` returns the
+``DeviceQuantized`` container itself, handing dequantization to the
+receiving ``StageExecutor`` (fused kernel, on-device) or the consumer's
+explicit ``to_f32()``. The ``int8-fused`` tier selects this path; plain
+f32 ndarrays under that tier fall back to tag 12 (so replica snapshots
+still compress).
+
 ``runtime/net.py`` ships exactly these bytes across process boundaries
 (one message per length-prefixed TCP frame); the full byte-level spec,
 including the frame header, lives in ``docs/protocol.md``.
@@ -52,15 +66,17 @@ from typing import Any, Optional
 
 import numpy as np
 
+from repro.runtime.qtensor import DeviceQuantized
+
 MAGIC = b"FTPH"
-VERSION = 2                  # v2 = v1 + compressed ndarray tags (11/12)
-DECODABLE_VERSIONS = (1, 2)  # v1 frames contain no compressed tags
+VERSION = 3                  # v2 = compressed tags (11/12); v3 = tag 13
+DECODABLE_VERSIONS = (1, 2, 3)
 
 _NONE, _TRUE, _FALSE, _INT, _FLOAT = 0, 1, 2, 3, 4
 _STR, _BYTES, _LIST, _TUPLE, _DICT, _ARRAY = 5, 6, 7, 8, 9, 10
-_ARRAY_F16, _ARRAY_Q8 = 11, 12
+_ARRAY_F16, _ARRAY_Q8, _ARRAY_QD = 11, 12, 13
 
-TIERS = ("off", "fp16", "int8")
+TIERS = ("off", "fp16", "int8", "int8-fused")
 
 # message-kind classes a WirePolicy assigns tiers to (docs/protocol.md §3)
 DATA_KINDS = frozenset({"act", "grad"})          # activations + cotangents
@@ -120,8 +136,15 @@ class WirePolicy:
 def _enc_array(x: Any, out: list, tier: str, used: list) -> None:
     """One ndarray value: compressed per ``tier`` when safe, else the
     exact f32/any-dtype tag (the per-tensor fallback rule — see module
-    docstring and docs/protocol.md §1b). ``used[0]`` is set when a
-    compressed tag was actually emitted (drives the frame version)."""
+    docstring and docs/protocol.md §1b). ``used[0]`` tracks the highest
+    codec level any emitted tag requires (drives the frame version).
+
+    ``int8-fused`` reaching HERE means the sender shipped a plain f32
+    ndarray under the fused tier (replica snapshots, or a stage's exact
+    non-finite fallback): replica arrays take the tag-12 path; exact
+    fallbacks are non-finite and hit the exact-tag fallback below."""
+    if tier == "int8-fused":
+        tier = "int8"
     arr = np.ascontiguousarray(np.asarray(x))
     if tier != "off" and arr.dtype == np.float32 and arr.size:
         dims = struct.pack(f"<{arr.ndim}I", *arr.shape)
@@ -130,7 +153,7 @@ def _enc_array(x: Any, out: list, tier: str, used: list) -> None:
                 f16 = arr.astype(np.float16)
             # finite f16 result implies finite f32 input AND no overflow
             if np.isfinite(f16).all():
-                used[0] = True
+                used[0] = max(used[0], 2)
                 out.append(bytes([_ARRAY_F16, arr.ndim]) + dims
                            + f16.tobytes())
                 return
@@ -148,7 +171,7 @@ def _enc_array(x: Any, out: list, tier: str, used: list) -> None:
                     and float(scale32) > 0.0:
                 q = np.clip(np.rint((arr - lo32) / scale32),
                             0, 255).astype(np.uint8)
-                used[0] = True
+                used[0] = max(used[0], 2)
                 out.append(bytes([_ARRAY_Q8, arr.ndim]) + dims
                            + struct.pack("<ff", lo32, scale32)
                            + q.tobytes())
@@ -159,10 +182,28 @@ def _enc_array(x: Any, out: list, tier: str, used: list) -> None:
                + arr.tobytes())
 
 
+def _enc_qd(x: DeviceQuantized, out: list, used: list) -> None:
+    """Zero-copy passthrough of a device-quantized tensor (tag 13). The
+    payload was quantized INSIDE the compiled step; this function is pure
+    struct-packing + byte concatenation by design — no numpy calls on
+    the data-plane hot path (tools/check_codec_hotpath.py enforces it).
+
+    Layout: tag u8 | ndim u8 | dims u32*ndim | C u32 | lo f32*C |
+    scale f32*C | codes u8*prod(dims), with C = dims[-1]."""
+    used[0] = max(used[0], 3)
+    ndim = len(x.shape)
+    out.append(bytes([_ARRAY_QD, ndim])
+               + struct.pack(f"<{ndim}I", *x.shape)
+               + struct.pack("<I", x.num_channels))
+    out.append(x.lo)
+    out.append(x.scale)
+    out.append(x.data)
+
+
 def _enc(x: Any, out: list, tier: str = "off",
          used: Optional[list] = None) -> None:
     if used is None:
-        used = [False]
+        used = [1]
     if x is None:
         out.append(bytes([_NONE]))
     elif isinstance(x, (bool, np.bool_)):
@@ -186,10 +227,50 @@ def _enc(x: Any, out: list, tier: str = "off",
         for k, v in x.items():
             _enc(k, out, tier, used)
             _enc(v, out, tier, used)
+    elif isinstance(x, DeviceQuantized):                # pre-quantized, tag 13
+        _enc_qd(x, out, used)
     elif hasattr(x, "shape") and hasattr(x, "dtype"):   # ndarray / jax.Array
         _enc_array(x, out, tier, used)
     else:
         raise TypeError(f"codec cannot encode {type(x).__name__}: {x!r}")
+
+
+def _need(buf: bytes, off: int, n: int, what: str) -> None:
+    """Truncation guard for the array decode paths: a clear error instead
+    of whatever ``np.frombuffer``/``struct`` would raise on a short
+    buffer."""
+    if len(buf) - off < n:
+        raise ValueError(f"codec: truncated {what} — need {n} bytes at "
+                         f"offset {off}, have {len(buf) - off}")
+
+
+def _dec_qd(buf: bytes, off: int) -> tuple[DeviceQuantized, int]:
+    """Tag-13 decode: pure byte slicing into a ``DeviceQuantized`` — the
+    receiving StageExecutor dequantizes on-device (or the consumer calls
+    ``to_f32()``); no numpy pass here."""
+    _need(buf, off, 1, "device-quantized header")
+    ndim = buf[off]
+    off += 1
+    if ndim < 1:
+        raise ValueError("codec: device-quantized array requires rank >= 1")
+    _need(buf, off, 4 * ndim + 4, "device-quantized header")
+    shape = struct.unpack_from(f"<{ndim}I", buf, off)
+    off += 4 * ndim
+    (C,) = struct.unpack_from("<I", buf, off)
+    off += 4
+    if C != shape[-1]:
+        raise ValueError(f"codec: device-quantized channel count {C} does "
+                         f"not match shape {shape}")
+    count = 1
+    for d in shape:
+        count *= d
+    _need(buf, off, 8 * C + count, "device-quantized payload")
+    lo = buf[off:off + 4 * C]
+    off += 4 * C
+    scale = buf[off:off + 4 * C]
+    off += 4 * C
+    data = buf[off:off + count]
+    return DeviceQuantized(shape, data, lo, scale), off + count
 
 
 def _dec(buf: bytes, off: int) -> tuple[Any, int]:
@@ -234,10 +315,12 @@ def _dec(buf: bytes, off: int) -> tuple[Any, int]:
         off += nlen
         ndim = buf[off]
         off += 1
+        _need(buf, off, 4 * ndim, "array header")
         shape = struct.unpack_from(f"<{ndim}I", buf, off)
         off += 4 * ndim
         count = int(np.prod(shape, dtype=np.int64)) if ndim else 1
         nbytes = count * dtype.itemsize
+        _need(buf, off, nbytes, f"{dtype} array data")
         arr = np.frombuffer(buf, dtype, count=count,
                             offset=off).reshape(shape)
         return arr, off + nbytes
@@ -246,37 +329,44 @@ def _dec(buf: bytes, off: int) -> tuple[Any, int]:
         # consumer (and the compiled StageExecutor step) always sees f32
         ndim = buf[off]
         off += 1
+        _need(buf, off, 4 * ndim, "array header")
         shape = struct.unpack_from(f"<{ndim}I", buf, off)
         off += 4 * ndim
         count = int(np.prod(shape, dtype=np.int64)) if ndim else 1
         if tag == _ARRAY_F16:
+            _need(buf, off, 2 * count, "fp16 array data")
             arr = np.frombuffer(buf, np.float16, count=count,
                                 offset=off).reshape(shape)
             return arr.astype(np.float32), off + 2 * count
+        _need(buf, off, 8 + count, "int8 array data")
         lo, scale = struct.unpack_from("<ff", buf, off)
         off += 8
         q = np.frombuffer(buf, np.uint8, count=count,
                           offset=off).reshape(shape)
         return (lo + scale * q).astype(np.float32), off + count
+    if tag == _ARRAY_QD:
+        return _dec_qd(buf, off)
     raise ValueError(f"codec: unknown tag {tag} at offset {off - 1}")
 
 
 def encode(kind: str, payload: Any, tier: str = "off") -> bytes:
     """One framed wire message. ``tier`` selects the ndarray compression
-    ("off" | "fp16" | "int8") applied to every eligible f32 tensor in the
-    payload; ineligible tensors fall back to the exact f32 tag per tensor
-    (see ``_enc_array``). Decoding needs no tier — the tags are
-    self-describing. The version byte is stamped 2 exactly when a
-    compressed tag was emitted; a frame without any is byte-identical to
-    codec v1, so a v1-only decoder keeps understanding every
-    uncompressed message from a v2 sender."""
+    ("off" | "fp16" | "int8" | "int8-fused") applied to every eligible
+    f32 tensor in the payload; ineligible tensors fall back to the exact
+    f32 tag per tensor (see ``_enc_array``), and ``DeviceQuantized``
+    payloads pass through zero-copy as tag 13 regardless of tier.
+    Decoding needs no tier — the tags are self-describing. The version
+    byte is stamped with the HIGHEST codec level any emitted tag
+    requires: 1 (no compressed tags — byte-identical to codec v1, so a
+    v1-only decoder keeps understanding every uncompressed message), 2
+    (tags 11/12), or 3 (tag 13)."""
     if tier not in TIERS:
         raise ValueError(f"unknown wire tier {tier!r} (one of {TIERS})")
     k = kind.encode("utf-8")
     out = [MAGIC, b"\x00", struct.pack("<H", len(k)), k]
-    used = [False]
+    used = [1]
     _enc(payload, out, tier, used)
-    out[1] = bytes([VERSION if used[0] else 1])
+    out[1] = bytes([used[0]])
     return b"".join(out)
 
 

@@ -154,13 +154,21 @@ class LiveConfig:
     # ---- wire compression (codec.WirePolicy tiers) ----------------------
     wire_compress: str = "off"   # data-plane tier for act/grad payloads:
     #                              "off" | "fp16" | "int8" (per-tensor
-    #                              affine). Any tier != "off" implies the
-    #                              wire codec. Decode is self-describing;
-    #                              the §III-F redistribution payloads stay
-    #                              exact f32 regardless of tier.
+    #                              affine, codec-side numpy) |
+    #                              "int8-fused" (per-channel affine
+    #                              quantized INSIDE the compiled step by
+    #                              the kernels/quant Pallas kernels, with
+    #                              error-feedback residuals; the codec
+    #                              ships the payload zero-copy). Any tier
+    #                              != "off" implies the wire codec. Decode
+    #                              is self-describing; the §III-F
+    #                              redistribution payloads stay exact f32
+    #                              regardless of tier.
     wire_compress_replica: Optional[str] = None   # §III-E replica tier
     #                              (chain_put/global_put); None = follow
-    #                              wire_compress
+    #                              wire_compress ("int8-fused" downgrades
+    #                              to tag-12 int8 there: replica payloads
+    #                              are plain snapshots, not stage outputs)
     interpret: Optional[bool] = None   # Pallas interpret (None = autodetect)
     # ---- elastic membership (rejoin / hot-join) -------------------------
     rejoin: Optional[tuple[int, int]] = None   # (device, batch): relaunch
@@ -288,6 +296,12 @@ class Worker(threading.Thread):
         self._acts: dict[int, Any] = {}
         self._grads: dict[int, Any] = {}
         self._fwd_ctx: dict[int, tuple] = {}   # batch -> (version buf, x)
+        # error-feedback residuals for the int8-fused wire tier (AccEPT):
+        # one per boundary direction, carried across batches by
+        # StageExecutor.forward_q/step_q like momentum; reset whenever the
+        # slice changes (activation shapes may change with it)
+        self._act_res = None
+        self._grad_res = None
         self._fetch_res: dict[int, dict] = {}
         # pre-refit snapshot: peers' redistribution plans reference the OLD
         # partition, so fetches must be served from it even after this
@@ -322,6 +336,10 @@ class Worker(threading.Thread):
         # the slice (and possibly the membership around it) changed: every
         # delta-skip shadow is stale — the next replication resends in full
         self._repl_shadow.clear()
+        # boundary shapes may have changed with the slice; quantization
+        # error carried against the old boundary is meaningless now
+        self._act_res = None
+        self._grad_res = None
 
     def _executor(self, last: bool) -> StageExecutor:
         """Per (slice, role) compiled executor; rebuilt only on refit."""
@@ -484,6 +502,12 @@ class Worker(threading.Thread):
         last = stage == n - 1
         ex = self._executor(last)
         cap = self.spec.capacity if self.cfg.emulate_capacity else 1.0
+        # int8-fused tier: boundary tensors leave the device already
+        # quantized (StageExecutor.forward_q/step_q + error feedback) and
+        # the codec ships them zero-copy as tag 13
+        policy = getattr(self.transport, "policy", None)
+        fused = (policy is not None
+                 and policy.tier_for("act") == "int8-fused")
 
         ops = list(sched.stage_schedule(stage, n, nb))
         # for retention pruning: next fwd batch at-or-after each op index
@@ -513,6 +537,10 @@ class Worker(threading.Thread):
                     jax.block_until_ready(loss)
                     self.transport.send(self.dev, COORD, "loss",
                                         (gb, float(loss)))
+                elif fused:
+                    y, self._act_res = ex.forward_q(ver_buf, x,
+                                                    self._act_res)
+                    jax.block_until_ready(self._act_res)
                 else:
                     y = ex.forward(ver_buf, x)
                     jax.block_until_ready(y)
@@ -538,9 +566,16 @@ class Worker(threading.Thread):
                         break
                 t0 = time.perf_counter()
                 ver_buf, x = self._fwd_ctx.pop(op.batch)
-                g_x, new_buf, self.mom_buf = ex.step(
-                    ver_buf, self.stash.newest(), self.mom_buf, x, ct,
-                    self.data_fn(gb) if last else None)
+                if fused and stage > 0:
+                    # quantize the outgoing cotangent inside the same
+                    # compiled call (stage 0 sends no grad — plain step)
+                    g_x, new_buf, self.mom_buf, self._grad_res = ex.step_q(
+                        ver_buf, self.stash.newest(), self.mom_buf, x, ct,
+                        self.data_fn(gb) if last else None, self._grad_res)
+                else:
+                    g_x, new_buf, self.mom_buf = ex.step(
+                        ver_buf, self.stash.newest(), self.mom_buf, x, ct,
+                        self.data_fn(gb) if last else None)
                 jax.block_until_ready(new_buf)
                 self.stash.push(max(gb + 1, self.stash.newest_v + 1),
                                 new_buf)

@@ -59,7 +59,8 @@ import time
 from typing import Any, Dict, Iterable, Optional, Sequence, Tuple
 
 from repro.runtime import codec as wire
-from repro.runtime.transport import FaultSpec, Message, TransportBase
+from repro.runtime.transport import (FaultSpec, Message, TransportBase,
+                                     _kind_class_counters, kind_class)
 
 _HDR = struct.Struct("<Iii")          # length | src | dst (length excludes u32)
 _MAX_FRAME = 1 << 31                  # sanity bound on inbound frame length
@@ -287,7 +288,9 @@ class SocketTransport(TransportBase):
         self._readers: list = []
         self.stats = {"sent": 0, "delivered": 0, "dropped": 0, "to_dead": 0,
                       "bytes": 0, "tx_bytes": 0, "net_dropped": 0,
-                      "data_bytes": 0, "replica_bytes": 0}
+                      "data_bytes": 0, "replica_bytes": 0,
+                      "kind_bytes": _kind_class_counters(),
+                      "kind_msgs": _kind_class_counters()}
         # frames past the per-frame retry window are shed by the sender
         # anyway, so bound retransmission attempts by the same horizon
         self._rel_init(reliable, rto, expiry=retry_window)
@@ -437,10 +440,14 @@ class SocketTransport(TransportBase):
                 self.stats["to_dead"] += 1
                 return
 
+        cls = kind_class(kind)
+
         def _account():
             with self._lock:
                 self.stats["delivered"] += 1
                 self.stats["bytes"] += len(data)
+                self.stats["kind_bytes"][cls] += len(data)
+                self.stats["kind_msgs"][cls] += 1
                 if kind in wire.DATA_KINDS:
                     self.stats["data_bytes"] += len(data)
                 elif kind in wire.REPLICA_KINDS:

@@ -47,7 +47,10 @@ import numpy as np
 from repro.kernels.fused_sgd.ops import (default_interpret, fused_sgd,
                                          pack_leaves, pallas_native_backend,
                                          unpack_leaves)
+from repro.kernels.quant.ops import dequantize as quant_dequantize
+from repro.kernels.quant.ops import quantize_ef
 from repro.optim.sgd import sgd_update
+from repro.runtime.qtensor import DeviceQuantized
 
 
 # ============================ packed layouts =============================
@@ -158,6 +161,14 @@ class StageExecutor:
         cotangent ``ct`` (1.0 at the last stage), fused SGD update applied
         to ``new_buf`` (the newest version) — the exact update order of the
         uncompiled path.
+    ``forward_q`` / ``step_q``
+        the fused-wire variants: same compiled call additionally runs the
+        ``kernels/quant`` per-channel int8 quantizer on the outgoing
+        boundary tensor with an error-feedback residual threaded like
+        momentum, returning a ``DeviceQuantized`` payload the codec ships
+        zero-copy (tag 13). Inbound ``DeviceQuantized`` values are
+        accepted by every entry point and dequantized on-device inside
+        the same call.
     """
 
     def __init__(self, chain, slice_layout: SliceLayout, *, last: bool,
@@ -171,23 +182,65 @@ class StageExecutor:
         if interpret is None:
             interpret = default_interpret()
 
-        def fwd_out(buf, x, batch):
+        def dq_in(x):
+            # Trace-time dispatch at the wire boundary: a device-quantized
+            # input arrives as a (q, lo, scale) triple (see ``_coerce``)
+            # and is dequantized INSIDE the compiled call by the fused
+            # kernel; an exact input is already f32. jit caches by pytree
+            # structure, so each input form gets its own trace.
+            if isinstance(x, tuple):
+                q, lo, scale = x
+                return quant_dequantize(q, lo, scale, interpret=interpret)
+            return x
+
+        def fwd_raw(buf, x, batch):
             for j in ids:
                 x = chain.apply_layer(j, slice_layout.unpack_layer(buf, j), x)
             return chain.loss(x, batch) if last else x
 
+        def fwd_out(buf, x, batch):
+            return fwd_raw(buf, dq_in(x), batch)
+
         def step_fn(fwd_buf, new_buf, mom_buf, x, ct, batch):
-            out, vjp = jax.vjp(lambda b, xx: fwd_out(b, xx, batch),
-                               fwd_buf, x)
-            g_buf, dx = vjp(jnp.ones_like(out) if last else ct)
+            # dequantize BEFORE the vjp: dx is then the cotangent w.r.t.
+            # the f32 activation the upstream stage actually produced
+            xf = dq_in(x)
+            ctf = None if ct is None else dq_in(ct)
+            out, vjp = jax.vjp(lambda b, xx: fwd_raw(b, xx, batch),
+                               fwd_buf, xf)
+            g_buf, dx = vjp(jnp.ones_like(out) if last else ctf)
             p_new, m_new = fused_sgd(new_buf, g_buf, mom_buf, lr=lr,
                                      momentum=momentum,
                                      weight_decay=weight_decay,
                                      interpret=interpret)
             return dx, p_new, m_new
 
+        def fwd_q_fn(buf, x, res):
+            # mid-stage forward + fused on-device quantization of the
+            # outgoing activation, error-feedback residual threaded like
+            # momentum (AccEPT): z = y + res is what gets quantized, and
+            # res' = z - dequant(q) carries the noise forward. ``ok``
+            # False (non-finite z) means the caller must ship ``z``
+            # exactly and reset the residual.
+            y = fwd_raw(buf, dq_in(x), None)
+            if res is None:
+                res = jnp.zeros_like(y)
+            return quantize_ef(y, res, interpret=interpret)
+
+        def step_q_fn(fwd_buf, new_buf, mom_buf, x, ct, res, batch):
+            dx, p_new, m_new = step_fn(fwd_buf, new_buf, mom_buf, x, ct,
+                                       batch)
+            if res is None:
+                res = jnp.zeros_like(dx)
+            q, lo, scale, res2, ok, z = quantize_ef(dx, res,
+                                                    interpret=interpret)
+            return q, lo, scale, res2, ok, z, p_new, m_new
+
         def step_ref(fwd_buf, new_buf, mom_buf, x, ct, batch):
             # legacy hot path: eager per-layer vjp + pytree sgd_update
+            x = dq_in(x)
+            if ct is not None:
+                ct = dq_in(ct)
             plist = [slice_layout.unpack_layer(fwd_buf, j) for j in ids]
 
             def sf(ps, xx):
@@ -216,19 +269,54 @@ class StageExecutor:
             donate = (2,) if pallas_native_backend() else ()
             self._forward = jax.jit(fwd_out)
             self._step = jax.jit(step_fn, donate_argnums=donate)
+            self._forward_q = jax.jit(fwd_q_fn)
+            self._step_q = jax.jit(step_q_fn, donate_argnums=donate)
         else:
             self._forward = fwd_out
             self._step = step_ref
+            # the fused-quantize entry points stay available uncompiled
+            # (interpret-mode kernels run eagerly); the legacy step_ref
+            # backward is not re-derived for them — they wrap step_fn.
+            self._forward_q = fwd_q_fn
+            self._step_q = step_q_fn
+
+    @staticmethod
+    def _coerce(x):
+        """Wire value -> jit input. Exact tensors become f32 arrays; a
+        ``DeviceQuantized`` becomes a (q, lo, scale) device triple that
+        the compiled call dequantizes via the fused kernel — this is the
+        dequantization boundary of the wire-compression tiers
+        (``runtime/codec.py``): tags 10-12 already decoded to f32, tag 13
+        dequantizes on-device HERE, inside the single jitted step."""
+        if isinstance(x, DeviceQuantized):
+            q, lo, scale = x.arrays()
+            return (jnp.asarray(q), jnp.asarray(lo), jnp.asarray(scale))
+        return jnp.asarray(x, jnp.float32)
 
     def forward(self, buf, x, batch=None):
         """Run the slice forward under packed weights ``buf``: activation
         for a mid stage, scalar loss at the last (``batch`` supplies the
-        labels there). ``x`` is coerced to f32 here — this is the
-        dequantization boundary of the wire-compression tiers
-        (``runtime/codec.py``): whatever precision an activation crossed
-        the transport in, the compiled step always sees f32, so one
-        compiled executor serves every tier with no retrace."""
-        return self._forward(buf, jnp.asarray(x, jnp.float32), batch)
+        labels there). ``x`` may be an exact tensor of any wire precision
+        or a ``DeviceQuantized`` (see ``_coerce``); the compiled step
+        always sees f32."""
+        return self._forward(buf, self._coerce(x), batch)
+
+    def forward_q(self, buf, x, res, batch=None):
+        """Mid-stage forward that emits a PRE-QUANTIZED boundary tensor:
+        forward + fused per-channel int8 quantize with error feedback in
+        ONE compiled call. ``res`` is the carried residual (None on the
+        first send after an install). Returns ``(payload, res')`` where
+        ``payload`` is a ``DeviceQuantized`` ready for zero-copy encode —
+        or an exact f32 ndarray when the activation went non-finite (the
+        per-tensor exact-fallback rule; the residual then resets)."""
+        if self.last:
+            raise ValueError("forward_q is for mid stages; the last stage "
+                             "emits a loss, not an activation")
+        q, lo, scale, res2, ok, z = self._forward_q(buf, self._coerce(x),
+                                                    res)
+        if bool(ok):
+            return DeviceQuantized.from_arrays(q, lo, scale), res2
+        return np.asarray(z), jnp.zeros_like(res2)
 
     def step(self, fwd_buf, new_buf, mom_buf, x, ct=None, batch=None):
         """One fused backward+update: recompute the forward under
@@ -236,9 +324,28 @@ class StageExecutor:
         cotangent ``ct`` (implicit 1.0 at the last stage), and apply the
         SGD update to ``new_buf`` (the newest version). Returns
         ``(dx, new_buf', mom_buf')``; ``mom_buf`` may be donated. ``x``
-        and ``ct`` are coerced to f32 (same wire-compression boundary as
-        ``forward``)."""
-        x = jnp.asarray(x, jnp.float32)
+        and ``ct`` go through ``_coerce`` (same wire boundary as
+        ``forward``; a quantized ``x`` recomputes the forward from the
+        identical dequantized tensor the send-side residual accounted
+        for)."""
+        x = self._coerce(x)
         if ct is not None:
-            ct = jnp.asarray(ct, jnp.float32)
+            ct = self._coerce(ct)
         return self._step(fwd_buf, new_buf, mom_buf, x, ct, batch)
+
+    def step_q(self, fwd_buf, new_buf, mom_buf, x, ct=None, batch=None,
+               res=None):
+        """``step`` that also quantizes the outgoing cotangent ``dx`` with
+        error feedback, all inside the single compiled call (for stages
+        > 0 on the fused wire tier). Returns
+        ``(payload, new_buf', mom_buf', res')`` with the same
+        exact-fallback rule as ``forward_q``."""
+        x = self._coerce(x)
+        if ct is not None:
+            ct = self._coerce(ct)
+        q, lo, scale, res2, ok, z, p_new, m_new = self._step_q(
+            fwd_buf, new_buf, mom_buf, x, ct, res, batch)
+        if bool(ok):
+            return DeviceQuantized.from_arrays(q, lo, scale), p_new, \
+                m_new, res2
+        return np.asarray(z), p_new, m_new, jnp.zeros_like(res2)

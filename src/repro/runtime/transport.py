@@ -24,6 +24,9 @@ selects the compression tier per message class (fp16 / int8 quantized
 tensors for the data plane and §III-E replica traffic); any compression
 implies the codec, and ``stats["data_bytes"]`` / ``stats["replica_bytes"]``
 break the wire volume down by class so compression wins are measurable.
+``stats["kind_bytes"]`` / ``stats["kind_msgs"]`` refine that further into
+act / grad / replica / control counters (``kind_class``), surfaced through
+``Run.status()`` so a compression tier's win is attributable per plane.
 """
 from __future__ import annotations
 
@@ -77,6 +80,26 @@ def payload_bytes(payload: Any) -> int:
         elif isinstance(x, (int, float, bool)):
             total += 8
     return total
+
+
+#: Message-kind classes used by the per-kind stats breakdown. ``act`` and
+#: ``grad`` are singled out (they are the two data-plane directions whose
+#: compression tier differs per run); everything in ``codec.REPLICA_KINDS``
+#: is ``replica``; the rest of the protocol catalog is ``control``.
+KIND_CLASSES = ("act", "grad", "replica", "control")
+
+
+def kind_class(kind: str) -> str:
+    """Map a protocol message kind to its stats class."""
+    if kind in ("act", "grad"):
+        return kind
+    if kind in wire.REPLICA_KINDS:
+        return "replica"
+    return "control"
+
+
+def _kind_class_counters() -> Dict[str, int]:
+    return {c: 0 for c in KIND_CLASSES}
 
 
 class TransportBase(abc.ABC):
@@ -359,7 +382,9 @@ class Transport(TransportBase):
         self._lock = threading.Lock()
         self.stats = {"sent": 0, "delivered": 0, "dropped": 0,
                       "to_dead": 0, "bytes": 0, "data_bytes": 0,
-                      "replica_bytes": 0}
+                      "replica_bytes": 0,
+                      "kind_bytes": _kind_class_counters(),
+                      "kind_msgs": _kind_class_counters()}
         self._rel_init(reliable, rto)
 
     def set_policy(self, policy: wire.WirePolicy) -> None:
@@ -439,11 +464,14 @@ class Transport(TransportBase):
             nbytes = payload_bytes(payload)
         is_data = kind in wire.DATA_KINDS
         is_replica = kind in wire.REPLICA_KINDS
+        cls = kind_class(kind)
 
         def _account():
             with self._lock:
                 self.stats["delivered"] += 1
                 self.stats["bytes"] += nbytes
+                self.stats["kind_bytes"][cls] += nbytes
+                self.stats["kind_msgs"][cls] += 1
                 if is_data:
                     self.stats["data_bytes"] += nbytes
                 elif is_replica:

@@ -19,6 +19,7 @@ BASELINE = {
     "wire_compress_ratio_int8": 3.9,
     "live_compress_ratio_int8": 3.0,
     "live_bytes_per_batch_int8": 3000.0,   # gated LOWER-is-better
+    "live_bytes_per_batch_int8_fused": 3200.0,   # gated LOWER-is-better
     "recovery_s_compiled": 0.8,       # not gated
 }
 
@@ -59,6 +60,7 @@ def test_threshold_is_configurable():
 def test_improvements_never_fail():
     current = {k: v * 10 for k, v in BASELINE.items()}
     current["live_bytes_per_batch_int8"] = 100.0   # lower IS the improvement
+    current["live_bytes_per_batch_int8_fused"] = 100.0
     assert check_bench.compare(BASELINE, current) == []
 
 
@@ -102,6 +104,23 @@ def test_reliable_wire_relative_gate():
     del truncated["wire_MBps_tcp"]
     failures = check_bench.compare(BASELINE, truncated)
     assert any("missing" in f and "wire_MBps_tcp" in f for f in failures)
+
+
+def test_fused_wire_relative_gate():
+    """The fused-tier gate (zero-copy encode must keep >= 0.9x of plain
+    TCP msgs/s) compares within CURRENT, skips predating JSONs, and
+    fires when the fused path falls behind."""
+    assert check_bench.compare(BASELINE, dict(BASELINE)) == []
+    healthy = dict(BASELINE)
+    healthy["wire_msgs_per_s_tcp"] = 10000.0
+    healthy["wire_msgs_per_s_tcp_int8_fused"] = 20000.0   # 2x: fine
+    assert check_bench.compare(BASELINE, healthy) == []
+    slow = dict(healthy)
+    slow["wire_msgs_per_s_tcp_int8_fused"] = 5000.0       # 0.5x: fails
+    failures = check_bench.compare(BASELINE, slow)
+    assert len(failures) == 1
+    assert "wire_msgs_per_s_tcp_int8_fused" in failures[0] \
+        and "0.50x" in failures[0]
 
 
 def test_cli_exit_codes(tmp_path):

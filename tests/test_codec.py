@@ -301,3 +301,97 @@ def test_live_training_identical_with_wire_codec():
     np.testing.assert_allclose(coded.losses, plain.losses, rtol=1e-5,
                                atol=1e-6)
     assert coded.transport_stats["bytes"] > 0
+
+
+# ============== device-quantized passthrough (codec v3, tag 13) ==========
+
+def _dq(shape=(4, 3), seed=3):
+    from repro.runtime.qtensor import DeviceQuantized
+
+    rng = np.random.default_rng(seed)
+    C = shape[-1]
+    q = rng.integers(0, 256, size=shape, dtype=np.uint8)
+    lo = rng.standard_normal(C).astype("<f4")
+    scale = np.abs(rng.standard_normal(C)).astype("<f4")
+    return DeviceQuantized.from_arrays(q, lo, scale)
+
+
+def test_device_quantized_round_trip_and_version():
+    """Tag 13 frames stamp codec v3, round-trip every field bit-exactly,
+    and pass the payload bytes through VERBATIM (zero-copy: the codes
+    appear unmodified in the frame)."""
+    from repro.runtime.qtensor import DeviceQuantized
+
+    x = _dq((5, 2, 7))
+    data = codec.encode("act", (2, 0, x))
+    assert data[4] == 3                               # codec v3
+    kind, payload = codec.decode(data)
+    assert kind == "act" and payload[0] == 2
+    y = payload[2]
+    assert isinstance(y, DeviceQuantized)
+    assert y.shape == x.shape
+    assert y.data == x.data and y.lo == x.lo and y.scale == x.scale
+    assert x.data in data                             # shipped as-is
+    # a DeviceQuantized encodes as tag 13 under ANY tier (it is already
+    # quantized); the tier only steers plain ndarrays
+    for tier in codec.TIERS:
+        assert codec.decode(codec.encode("act", x, tier=tier))[1].data \
+            == x.data
+
+
+def test_fused_tier_downgrades_plain_arrays_to_int8():
+    """Plain f32 under int8-fused (e.g. replica snapshots) take the
+    tag-12 path — only stage boundaries carry tag 13 — so the frame is
+    v2, not v3."""
+    x = _rand((6, 4))
+    data = codec.encode("chain_put", {"w": x}, tier="int8-fused")
+    assert data[4] == 2
+    _, y = codec.decode(data)
+    assert y["w"].dtype == np.float32
+    # non-finite under the fused tier still falls back to exact v1
+    nan = np.full((4,), np.nan, np.float32)
+    assert codec.encode("act", nan, tier="int8-fused")[4] == 1
+
+
+def test_truncated_compressed_payloads_rejected():
+    """Regression: a short read must raise a clear error, never decode
+    to a smaller tensor — for the int8 tag, the fused tag, and friends."""
+    frames = {
+        "int8": codec.encode("act", _rand((8, 4)), tier="int8"),
+        "fp16": codec.encode("act", _rand((8, 4)), tier="fp16"),
+        "f32": codec.encode("act", _rand((8, 4))),
+        "fused": codec.encode("act", _dq((8, 4))),
+    }
+    for name, data in frames.items():
+        for cut in (1, 4, len(data) // 2):
+            with pytest.raises(ValueError, match="truncated|exhausted"):
+                codec.decode(data[:-cut])
+        with pytest.raises(ValueError, match="trailing"):
+            codec.decode(data + b"\x00")
+        with pytest.raises(ValueError, match="trailing"):
+            codec.decode(data + data[-8:])
+
+
+def test_corrupt_device_quantized_header_rejected():
+    """Tampering the tag-13 channel count must fail loudly (it is
+    redundant with dims[-1] precisely so corruption is detectable)."""
+    import struct
+
+    x = _dq((4, 3))
+    data = bytearray(codec.encode("act", x))
+    # locate the channel-count u32 right after tag|ndim|dims
+    idx = data.index(bytes([13])) + 1 + 1 + 4 * len(x.shape)
+    struct.pack_into("<I", data, idx, 99)
+    with pytest.raises(ValueError, match="channel"):
+        codec.decode(bytes(data))
+
+
+def test_device_quantized_validates_byte_lengths():
+    from repro.runtime.qtensor import DeviceQuantized
+
+    with pytest.raises(ValueError, match="code bytes"):
+        DeviceQuantized((4, 3), b"\x00" * 11, b"\x00" * 12, b"\x00" * 12)
+    with pytest.raises(ValueError, match="channels"):
+        DeviceQuantized((4, 3), b"\x00" * 12, b"\x00" * 8, b"\x00" * 12)
+    with pytest.raises(ValueError, match="rank"):
+        DeviceQuantized((), b"", b"", b"")

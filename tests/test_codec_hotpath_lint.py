@@ -1,0 +1,84 @@
+"""The zero-copy codec lint (`tools/check_codec_hotpath.py`) must catch
+numpy sneaking into the quantized-tag encode/decode path, pass on the
+real codec, and fail when a hot function disappears — tested directly so
+a broken lint can't silently wave a numpy pass through."""
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "tools"))
+
+import check_codec_hotpath  # noqa: E402
+
+CLEAN = """
+import struct
+
+def _enc_qd(x, out, used):
+    out.append(struct.pack("<I", x.num_channels))
+    out.append(x.data)
+
+def _dec_qd(buf, off):
+    return buf[off:off + 4]
+"""
+
+DIRTY = """
+import numpy as np
+import struct
+
+def _enc_qd(x, out, used):
+    arr = np.frombuffer(x.data, np.uint8)      # the bug this lint exists for
+    out.append(arr.tobytes())
+
+def _dec_qd(buf, off):
+    return buf[off:off + 4]
+"""
+
+
+def test_real_codec_is_clean():
+    codec = REPO / "src" / "repro" / "runtime" / "codec.py"
+    assert check_codec_hotpath.find_violations(codec.read_text()) == []
+
+
+def test_clean_source_passes():
+    assert check_codec_hotpath.find_violations(CLEAN) == []
+
+
+def test_numpy_in_hot_path_is_flagged():
+    violations = check_codec_hotpath.find_violations(DIRTY, "dirty.py")
+    # three np references on the frombuffer line (np.frombuffer + 2 args)
+    assert violations and all("_enc_qd" in v for v in violations)
+    assert any("dirty.py:6" in v for v in violations)
+
+
+def test_numpy_outside_hot_path_is_legal():
+    src = CLEAN + "\ndef _enc_array(x):\n    import numpy as np\n" \
+                  "    return np.asarray(x)\n"
+    assert check_codec_hotpath.find_violations(src) == []
+
+
+def test_missing_hot_function_is_a_violation():
+    src = "def _enc_qd(x, out, used):\n    pass\n"
+    violations = check_codec_hotpath.find_violations(src)
+    assert len(violations) == 1 and "_dec_qd" in violations[0]
+
+
+def test_cli_exit_codes(tmp_path):
+    tool = REPO / "tools" / "check_codec_hotpath.py"
+
+    def run(*extra):
+        return subprocess.run([sys.executable, str(tool), *extra],
+                              capture_output=True, text=True)
+
+    ok = run()                         # lints the real codec by default
+    assert ok.returncode == 0, ok.stdout + ok.stderr
+    assert "OK" in ok.stdout
+
+    dirty_p = tmp_path / "dirty.py"
+    dirty_p.write_text(DIRTY)
+    bad = run("--file", str(dirty_p))
+    assert bad.returncode == 1
+    assert "zero-copy" in bad.stdout
+
+    missing = run("--file", str(tmp_path / "nope.py"))
+    assert missing.returncode == 2

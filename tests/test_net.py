@@ -290,3 +290,80 @@ def test_tcp_sigkill_parity_with_queue_transport():
     untrained = float(np.median(queue_res.losses[:3]))
     assert q_final < 0.7 * untrained and t_final < 0.7 * untrained
     assert abs(q_final - t_final) < 0.35 * max(q_final, t_final) + 0.05
+
+
+class TestPerKindStats:
+    def test_socket_transport_kind_breakdown(self):
+        """stats["kind_bytes"]/["kind_msgs"] attribute wire volume to
+        act / grad / replica / control planes at the receiver."""
+        a, b = _pair()
+        try:
+            x = np.arange(64, dtype=np.float32)
+            a.send(0, 1, "act", (0, 0, x))
+            a.send(0, 1, "grad", (0, 0, x))
+            a.send(0, 1, "grad", (0, 1, x))
+            a.send(0, 1, "chain_put", {"layers": {0: x}})
+            a.send(0, 1, "hb", {"t": 0.1})
+            for _ in range(5):
+                assert b.recv(1, timeout=5.0) is not None
+            km, kb = b.stats["kind_msgs"], b.stats["kind_bytes"]
+            assert km == {"act": 1, "grad": 2, "replica": 1, "control": 1}
+            assert kb["grad"] > kb["act"] > 0
+            assert kb["replica"] > 0 and kb["control"] > 0
+            assert sum(kb.values()) == b.stats["bytes"]
+            assert sum(km.values()) == b.stats["delivered"]
+            # consistent with the coarser data/replica counters
+            assert kb["act"] + kb["grad"] == b.stats["data_bytes"]
+            assert kb["replica"] == b.stats["replica_bytes"]
+        finally:
+            a.close()
+            b.close()
+
+    def test_queue_transport_kind_breakdown_matches(self):
+        from repro.runtime.transport import Transport, kind_class
+
+        t = Transport(codec=True)
+        t.register(0)
+        t.register(1)
+        x = np.arange(16, dtype=np.float32)
+        for kind in ("act", "grad", "global_put", "install", "hb"):
+            t.send(0, 1, kind, (0, 0, x))
+            assert t.recv(1, timeout=1.0) is not None
+        km = t.stats["kind_msgs"]
+        assert km == {"act": 1, "grad": 1, "replica": 1, "control": 2}
+        assert sum(t.stats["kind_bytes"].values()) == t.stats["bytes"]
+        # kind_class is the single source of the mapping
+        assert kind_class("act") == "act" and kind_class("grad") == "grad"
+        assert kind_class("chain_put") == kind_class("global_put") \
+            == "replica"
+        for k in ("install", "fetch_res", "hello", "hb", "commit"):
+            assert kind_class(k) == "control"
+
+    @pytest.mark.live
+    def test_run_status_surfaces_wire_breakdown(self):
+        """Run.status() exposes the coordinator transport's per-plane
+        counters (copies, not live references)."""
+        from repro.run import RunConfig, start_run
+
+        cfg = RunConfig(
+            workload=WorkloadSpec(kind="mlp", seed=0, num_layers=6),
+            live=LiveConfig(
+                num_workers=2, num_batches=8,
+                protocol=ProtocolConfig(chain_every=4, global_every=8,
+                                        repartition_first_at=10_000,
+                                        repartition_every=10_000,
+                                        detect_timeout=2.0),
+                lr=0.1, wire_codec=True),
+            transport="queue")
+        run = start_run(cfg)
+        run.wait()
+        status = run.status()
+        wire = status["wire"]
+        assert wire["bytes"] > 0
+        assert set(wire["kind_bytes"]) \
+            == {"act", "grad", "replica", "control"}
+        assert wire["kind_bytes"]["act"] > 0
+        assert wire["kind_msgs"]["control"] > 0
+        # mutating the copy must not touch the transport's counters
+        wire["kind_bytes"]["act"] = -1
+        assert run.status()["wire"]["kind_bytes"]["act"] > 0

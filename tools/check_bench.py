@@ -18,12 +18,17 @@ Gated metrics (lower-is-better — the bytes-per-batch gate):
   * ``live_bytes_per_batch_int8`` — absolute int8 wire bytes per training
     batch on the live run; growing it past the band means the compressed
     wire regressed even if the f32/int8 ratio held (e.g. both sides grew)
+  * ``live_bytes_per_batch_int8_fused`` — same budget for the fused
+    on-device tier (``kernels/quant`` + zero-copy tag-13 frames)
 
 Relative gates (within the current results, no baseline needed):
 
   * ``wire_MBps_tcp_reliable >= 0.7 * wire_MBps_tcp`` — the seq/ack
     retransmit window must not tax lossless TCP throughput by more than
     30% (skipped for result JSONs that predate the metric)
+  * ``wire_msgs_per_s_tcp_int8_fused >= 0.9 * wire_msgs_per_s_tcp`` —
+    the fused tier's encode is pure struct packing, so it must keep pace
+    with the uncompressed wire in messages per second (skipped likewise)
 
 Usage (what CI runs)::
 
@@ -64,6 +69,8 @@ GATED_METRICS = {
 # bytes-per-batch gate next to the MB/s ones)
 GATED_METRICS_LOWER = {
     "live_bytes_per_batch_int8": "int8 wire bytes per training batch",
+    "live_bytes_per_batch_int8_fused":
+        "fused on-device int8 wire bytes per training batch",
 }
 
 # relative gates WITHIN the current results: (numerator, denominator,
@@ -74,6 +81,8 @@ GATED_METRICS_LOWER = {
 RELATIVE_GATES = [
     ("wire_MBps_tcp_reliable", "wire_MBps_tcp", 0.70,
      "seq/ack retransmit window overhead on the lossless TCP wire"),
+    ("wire_msgs_per_s_tcp_int8_fused", "wire_msgs_per_s_tcp", 0.90,
+     "fused int8 tier (zero-copy tag-13 encode) vs plain TCP msgs/s"),
 ]
 
 

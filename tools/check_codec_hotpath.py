@@ -1,0 +1,94 @@
+#!/usr/bin/env python3
+"""Codec hot-path lint (stdlib only; run by the CI docs/lint job).
+
+The whole point of the device-quantized wire tier (codec tag 13,
+``docs/protocol.md`` §1b) is that ``encode``/``decode`` never touch numpy
+for those frames: the tensor is already u8 codes + per-channel params
+(quantized INSIDE the compiled stage step by ``kernels/quant``), so the
+codec's job is pure struct packing and byte slicing — zero-copy
+passthrough. A numpy call creeping into that path would silently
+reintroduce the per-send array pass this tier exists to delete.
+
+This lint parses ``src/repro/runtime/codec.py`` and fails if any ``np.``
+reference appears inside the quantized-tag hot functions
+(``_enc_qd`` / ``_dec_qd``). It is AST-based (not a text grep) so
+comments and docstrings mentioning numpy stay legal, and it fails too if
+a hot function disappears — a rename must update this check, not dodge
+it.
+
+    python tools/check_codec_hotpath.py             # exits non-zero on hit
+    python tools/check_codec_hotpath.py --file F    # lint another file
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+CODEC = REPO / "src" / "repro" / "runtime" / "codec.py"
+
+#: functions that frame / unframe device-quantized tensors — the
+#: zero-copy hot path that must stay numpy-free
+HOT_FUNCS = ("_enc_qd", "_dec_qd")
+
+#: module aliases that count as "numpy reached the hot path"
+BANNED_NAMES = ("np", "numpy")
+
+
+def find_violations(source: str, filename: str = "<codec>") -> list[str]:
+    """Return one message per banned reference inside a hot function
+    (empty list = clean). A hot function missing from the source is
+    itself a violation — silently skipping would hollow the lint."""
+    tree = ast.parse(source, filename=filename)
+    seen = set()
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if node.name not in HOT_FUNCS:
+            continue
+        seen.add(node.name)
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Name) and sub.id in BANNED_NAMES:
+                out.append(
+                    f"{filename}:{sub.lineno}: numpy reference "
+                    f"`{sub.id}` inside {node.name}() — the quantized-tag "
+                    f"wire path must stay zero-copy (struct packing and "
+                    f"byte slicing only)")
+    for name in HOT_FUNCS:
+        if name not in seen:
+            out.append(
+                f"{filename}: hot function {name}() not found — if it was "
+                f"renamed, update HOT_FUNCS in tools/check_codec_hotpath.py "
+                f"so the zero-copy lint follows it")
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description="Fail if numpy appears in the codec's device-quantized "
+                    "(zero-copy) encode/decode path")
+    ap.add_argument("--file", default=str(CODEC),
+                    help="python source to lint (default: the repo codec)")
+    args = ap.parse_args()
+    path = Path(args.file)
+    try:
+        source = path.read_text()
+    except OSError as e:
+        print(f"check_codec_hotpath: cannot read {path}: {e}")
+        return 2
+    violations = find_violations(source, str(path))
+    if violations:
+        print(f"check_codec_hotpath: {len(violations)} violation(s):")
+        for msg in violations:
+            print("  " + msg)
+        return 1
+    print(f"check_codec_hotpath: OK — {', '.join(HOT_FUNCS)} in {path} "
+          f"are numpy-free")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
