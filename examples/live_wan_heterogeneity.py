@@ -1,0 +1,99 @@
+"""Live WAN heterogeneity demo — the paper's §IV-D setting end to end,
+over EMULATED wide-area links (``runtime/netem.py``).
+
+A 3-worker in-process cluster trains over shaped links (3ms +-1ms one-way
+latency, 40 MB/s token-bucket bandwidth per directed link); one device is
+10x slower (sleep-emulated), and a fast worker is killed a quarter of the
+way in. The demo VERIFIES — and exits non-zero otherwise, so CI can smoke
+it headlessly — that:
+
+  * the kill is detected and recovered exactly once (§III-F);
+  * the dynamic partitioner (§III-D) learned the 10x spread from live
+    measurements and moved layers OFF the slow device, EWMA-smoothed so
+    post-recovery compile transients don't flap the partition;
+  * every message actually crossed a shaped link (netem transport stats);
+  * every batch trained (no NaN losses).
+
+    PYTHONPATH=src python examples/live_wan_heterogeneity.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import numpy as np
+
+from repro.run import RunConfig, start_run
+from repro.runtime.devices import DeviceSpec, uniform_bandwidth
+from repro.runtime.live import LiveConfig
+from repro.runtime.netem import NetemSpec
+from repro.runtime.protocol import ProtocolConfig
+from repro.runtime.workload import WorkloadSpec
+
+NL, NUM_BATCHES = 12, 16
+KILL_DEV, KILL_BATCH = 1, 4
+
+
+def main():
+    cfg = RunConfig(
+        workload=WorkloadSpec(kind="mlp", seed=0, num_layers=NL,
+                              width=256, batch_size=64),
+        live=LiveConfig(
+            num_workers=3, num_batches=NUM_BATCHES,
+            protocol=ProtocolConfig(chain_every=8, global_every=10_000,
+                                    repartition_first_at=4,
+                                    repartition_every=6,
+                                    detect_timeout=0.5,
+                                    refit_hysteresis=0.25),
+            lr=0.05,
+            device_specs=[DeviceSpec("fast-0", 1.0),
+                          DeviceSpec("fast-1", 1.0),
+                          DeviceSpec("slow", 10.0)],
+            bandwidth=uniform_bandwidth(3, 40e6),
+            emulate_capacity=True, capacity_source="measured",
+            capacity_ema=0.7,
+            netem=NetemSpec.wan(latency=0.003, jitter=0.001, rate=40e6,
+                                seed=7),
+            kill=(KILL_DEV, KILL_BATCH)))
+    res = start_run(cfg).wait()
+
+    print(f"WAN run: 3 workers (capacities 1/1/10x-slow), shaped links, "
+          f"kill worker {KILL_DEV} @batch {KILL_BATCH}")
+    for t, e in res.events:
+        print(f"  t={t:6.2f}s  {e}")
+    stats = res.transport_stats
+    print(f"  netem: shaped={stats.get('shaped', 0)} "
+          f"dropped={stats.get('netem_dropped', 0)} "
+          f"blocked={stats.get('netem_blocked', 0)}")
+
+    ok = True
+    if np.isnan(res.losses).any():
+        ok = False
+        print("FAIL: some batches never completed:",
+              np.flatnonzero(np.isnan(res.losses)))
+    if len(res.recoveries) != 1:
+        ok = False
+        print(f"FAIL: expected exactly 1 recovery, got "
+              f"{len(res.recoveries)}")
+    if stats.get("shaped", 0) == 0:
+        ok = False
+        print("FAIL: no message ever crossed a shaped link — netem spec "
+              "was not applied")
+    # dynamic partition: the surviving pair is (fast, 10x slow); the last
+    # stage IS the slow device after renumbering, and the learned cut must
+    # starve it well below the equal split
+    points = res.final_partition
+    slow_layers = (NL - 1) - points[-2] if len(points) >= 2 else NL
+    print(f"  final partition points {tuple(points)} -> slow device runs "
+          f"{slow_layers}/{NL} layers (equal split would be {NL // 2})")
+    if not (len(points) == 2 and slow_layers < NL // 2):
+        ok = False
+        print("FAIL: partitioner did not move layers off the slow device")
+    print("PASS" if ok else "FAIL")
+    sys.exit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

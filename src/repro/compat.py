@@ -1,0 +1,25 @@
+"""Version compatibility shims for jax APIs the repo relies on.
+
+The pipeline engine targets current jax (top-level ``jax.shard_map``,
+``jax.set_mesh``, ``jax.sharding.AxisType``), but the runtime also has to
+run on older 0.4.x installs where those live elsewhere or do not exist.
+Each shim resolves the modern spelling first and falls back to the legacy
+one with the same semantics; ``launch/mesh.py`` hosts the mesh-construction
+side of this (``axis_types_kwarg`` / ``mesh_context``).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` where it exists, else the legacy
+    ``jax.experimental.shard_map.shard_map`` (same call surface; the
+    replication check is named ``check_rep`` there)."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as legacy
+    return legacy(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=check_vma)

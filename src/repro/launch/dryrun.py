@@ -9,6 +9,7 @@ import traceback
 
 import jax
 import jax.numpy as jnp
+from repro.launch.mesh import mesh_context
 
 from repro.configs import ARCH_IDS, SHAPES, TrainConfig, get_config, get_shape
 from repro.launch import analysis
@@ -34,7 +35,7 @@ def lower_combo(arch: str, shape_id: str, multi_pod: bool, overrides=None):
     chips = mesh.devices.size
     t0 = time.time()
 
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         if shape.kind == "train":
             tc = TrainConfig(remat=True)
             step, _ = make_train_step(mesh, cfg, tc)

@@ -101,6 +101,27 @@ def build_parser() -> argparse.ArgumentParser:
                          "(chain_put/global_put); default: follow "
                          "--wire-compress. §III-F redistribution payloads "
                          "are always exact f32 regardless")
+    ap.add_argument("--netem", default=None, metavar="JSON|FILE",
+                    help="WAN emulation: a NetemSpec as inline JSON or a "
+                         "path to a JSON file (schema in docs/operations.md "
+                         "§WAN emulation) shaping every link under the "
+                         "transport — one-way latency + jitter, token-"
+                         "bucket bandwidth, loss, timed partitions; works "
+                         "under both --transport queue and tcp")
+    ap.add_argument("--capacity-ema", type=float, default=0.0,
+                    help="EWMA factor for capacity samples (0 = paper's "
+                         "last-sample-wins; 0.6-0.8 smooths jittery WAN "
+                         "measurements)")
+    ap.add_argument("--refit-hysteresis", type=float, default=None,
+                    metavar="H",
+                    help="only adopt a re-partition when its predicted "
+                         "saving over the next control interval exceeds "
+                         "(1+H) x the redistribution cost (default: the "
+                         "paper's rule — refit on any cut-point change)")
+    ap.add_argument("--static-partition", action="store_true",
+                    help="PipeDream static baseline: equal split at launch "
+                         "and at every re-solve (the control arm the WAN "
+                         "heterogeneity bench compares against)")
     ap.add_argument("--reliable-wire", action="store_true",
                     help="seq/ack retransmit window on the data plane: a "
                          "dropped act/grad frame costs a resend (~rto), "

@@ -19,12 +19,33 @@ DATA_AXIS = 16
 NUM_PODS = 2
 
 
+def axis_types_kwarg(n: int) -> dict:
+    """``axis_types=`` kwarg for ``jax.make_mesh`` / ``jax.sharding.Mesh``,
+    or ``{}`` on jax versions that predate ``jax.sharding.AxisType`` (whose
+    mesh constructors also reject the kwarg — old meshes are implicitly
+    all-Auto, so omitting it is the same semantics)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n}
+
+
+def mesh_context(mesh):
+    """Context manager making ``mesh`` the ambient mesh: ``jax.set_mesh``
+    where it exists, else the mesh's own (legacy) context manager — on
+    those versions the ambient mesh is how jit resolves ``P(...)`` axis
+    names, which is all our pipeline steps need from ``set_mesh``."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    return mesh
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (NUM_PODS, DATA_AXIS, MODEL_AXIS) if multi_pod \
         else (DATA_AXIS, MODEL_AXIS)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **axis_types_kwarg(len(axes)))
 
 
 def make_train_mesh(pipeline_stages: int, tensor_parallel: int, *,
@@ -48,8 +69,7 @@ def make_train_mesh(pipeline_stages: int, tensor_parallel: int, *,
         shape = tuple(s for s, nm in zip(shape, names) if nm != "extra")
         names = tuple(nm for nm in names if nm != "extra")
     return jax.sharding.Mesh(
-        arr.reshape(shape), names,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(names))
+        arr.reshape(shape), names, **axis_types_kwarg(len(names)))
 
 
 def make_debug_mesh(data: int = 2, stage: int = 2, tensor: int = 2):
@@ -57,4 +77,4 @@ def make_debug_mesh(data: int = 2, stage: int = 2, tensor: int = 2):
     --xla_force_host_platform_device_count >= data*stage*tensor)."""
     return jax.make_mesh(
         (data, stage, tensor), ("data", "stage", "tensor"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 3)
+        **axis_types_kwarg(3))

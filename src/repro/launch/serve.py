@@ -1,3 +1,4 @@
+from repro.launch.mesh import mesh_context
 """Batched pipelined serving driver: decodes tokens through the stage-
 partitioned model with per-stage KV/SSM caches.
 
@@ -37,7 +38,7 @@ def main():
                                         tensor_parallel=dims[2])
     mesh = make_debug_mesh(*dims)
     key = jax.random.PRNGKey(0)
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         params = jax.jit(lambda k: model_lib.init_params(k, cfg),
                          out_shardings=param_shardings(mesh, cfg))(key)
         layout = (cfg.decoder_slot_layout if cfg.family == "audio"

@@ -1,3 +1,4 @@
+from repro.launch.mesh import mesh_context
 """End-to-end training driver.
 
 Runs the full framework stack (config -> sharded init -> pipelined
@@ -61,7 +62,7 @@ def main():
                      microbatches=args.microbatches, weight_decay=0.0)
 
     key = jax.random.PRNGKey(0)
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         params = jax.jit(
             lambda k: model_lib.init_params(k, cfg),
             out_shardings=param_shardings(mesh, cfg))(key)

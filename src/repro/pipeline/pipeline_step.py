@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 from repro.configs.base import ModelConfig, TrainConfig
 from repro.models import model as model_lib
 from repro.models import modules
@@ -114,7 +116,7 @@ def pipeline_forward(mesh, cfg: ModelConfig, blocks, x, pad_mask, *,
     out_specs = (P(AXIS_STAGE, Bspec, None, None), P(AXIS_STAGE, dspec))
 
     kv_arg = kv_source if kv_source is not None else jnp.zeros((), jnp.float32)
-    y_all, aux_all = jax.shard_map(
+    y_all, aux_all = compat.shard_map(
         body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
         check_vma=False)(blocks, x, pad_mask, kv_arg)
     y = y_all[S - 1]
@@ -216,7 +218,7 @@ def pipeline_decode(mesh, cfg: ModelConfig, blocks, x, caches, pos,
     out_specs = (P(AXIS_STAGE, Bspec, None, None), caches_sp)
 
     kv_arg = kv_source if kv_source is not None else jnp.zeros((), jnp.float32)
-    y_all, new_caches = jax.shard_map(
+    y_all, new_caches = compat.shard_map(
         body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
         check_vma=False)(blocks, x, pad_mask, caches,
                          jnp.asarray(pos, jnp.int32), kv_arg)
@@ -293,7 +295,7 @@ def pipeline_prefill_chunked(mesh, cfg: ModelConfig, blocks, x, caches,
     in_specs = (blocks_specs, P(Bspec, None, None), P(AXIS_STAGE, None),
                 caches_sp)
     out_specs = (P(AXIS_STAGE, Bspec, None, None), caches_sp)
-    y_all, new_caches = jax.shard_map(
+    y_all, new_caches = compat.shard_map(
         body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
         check_vma=False)(blocks, x, pad_mask, caches)
     return y_all[S - 1], new_caches

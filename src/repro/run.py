@@ -31,14 +31,15 @@ from repro.runtime.workload import WorkloadSpec
 
 # LiveConfig fields that do NOT round-trip through the manifest: runtime
 # objects (profile, device_specs, bandwidth), fault injection (fault,
-# kill, rejoin, join_after — a resumed run must not replay the crash
-# schedule that produced the manifest), per-process knobs (interpret),
-# and the resume coordinates themselves (run_dir/start_batch/resume are
-# assigned by Run.resume, never persisted).
+# kill, rejoin, join_after, netem — a resumed run must not replay the
+# crash schedule or the emulated network that produced the manifest),
+# per-process knobs (interpret), and the resume coordinates themselves
+# (run_dir/start_batch/resume are assigned by Run.resume, never
+# persisted).
 _LIVE_SKIP = frozenset({
     "protocol", "profile", "device_specs", "bandwidth", "fault", "kill",
     "rejoin", "join_after", "interpret", "run_dir", "start_batch",
-    "resume",
+    "resume", "netem",
 })
 
 
@@ -96,7 +97,8 @@ class RunConfig:
             global_every=g("global_every", 20),
             repartition_first_at=g("repartition_first_at", 5),
             repartition_every=g("repartition_every", 15),
-            detect_timeout=g("detect_timeout", 0.5))
+            detect_timeout=g("detect_timeout", 0.5),
+            refit_hysteresis=g("refit_hysteresis", None))
         live = LiveConfig(
             num_workers=g("workers", 3), num_batches=g("batches", 40),
             protocol=proto, lr=g("lr", 0.1), momentum=g("momentum", 0.0),
@@ -109,7 +111,15 @@ class RunConfig:
             wire_compress_replica=g("wire_compress_replica", None),
             join_wait=g("join_wait", 20.0),
             reliable_data=g("reliable_wire", False),
-            run_dir=g("run_dir", None))
+            run_dir=g("run_dir", None),
+            capacity_ema=g("capacity_ema", 0.0),
+            static_partition=g("static_partition", False))
+        netem_arg = g("netem", None)
+        if netem_arg:
+            from repro.runtime.netem import NetemSpec
+            live = dataclasses.replace(
+                live, netem=(netem_arg if not isinstance(netem_arg, str)
+                             else NetemSpec.from_json(netem_arg)))
         return RunConfig(workload=workload, live=live,
                          transport=g("transport", "queue"),
                          host=g("host", "127.0.0.1"))
@@ -303,7 +313,8 @@ class Run:
                                     fault=cfg.live.fault,
                                     policy=cfg.live.wire_policy(),
                                     reliable=cfg.live.reliable_data,
-                                    rto=cfg.live.rto)
+                                    rto=cfg.live.rto,
+                                    netem=cfg.live.netem)
         coord = Coordinator(chain, lambda b: batches[b % len(batches)],
                             cfg.live, transport=transport,
                             remote_devs={d for d in addr_of if d > 0},
@@ -332,7 +343,8 @@ class Run:
         transport = SocketTransport(addr_of, local=(COORD, 0),
                                     policy=cfg.live.wire_policy(),
                                     reliable=cfg.live.reliable_data,
-                                    rto=cfg.live.rto)
+                                    rto=cfg.live.rto,
+                                    netem=cfg.live.netem)
         remote = {int(d) for d in state.get("worker_ids", []) if int(d) > 0}
         coord = Coordinator(chain, lambda b: batches[b % len(batches)],
                             cfg.live, transport=transport,

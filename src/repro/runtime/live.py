@@ -57,6 +57,7 @@ from repro.core import schedule as sched
 from repro.core.capacity import CapacityEstimator
 from repro.core.partition import PartitionResult, uniform_partition
 from repro.core.redistribution import RedistributionPlan
+from repro.runtime import netem as netem_mod
 from repro.runtime import protocol
 from repro.runtime.devices import DeviceSpec, WorkloadProfile, uniform_bandwidth
 from repro.runtime.stage_executor import ChainLayout, StageExecutor
@@ -196,6 +197,18 @@ class LiveConfig:
     #   worker slices from the disk-backed global store, tolerate absent
     #   workers at bring-up, and re-adopt live remote workers through the
     #   abort+install handshake instead of assuming a cold cluster
+    # ---- WAN emulation + estimator robustness ---------------------------
+    netem: Optional["netem_mod.NetemSpec"] = None   # per-link shaping
+    #   (latency/jitter, token-bucket bandwidth, loss, timed partitions)
+    #   layered under the transport; None = unshaped. Rides the config to
+    #   every node so queue and TCP runs shape identically
+    capacity_ema: float = 0.0    # EWMA factor for capacity samples
+    #   (CapacityEstimator ema): 0 = paper's last-sample-wins, 0.6-0.8
+    #   smooths jittery WAN measurements
+    static_partition: bool = False   # PipeDream static baseline: equal
+    #   split at launch AND at every re-solve (recovery still re-splits
+    #   over the survivor count) — the control arm the WAN heterogeneity
+    #   bench compares the paper's dynamic partition against
 
     def wire_policy(self) -> wire_codec_mod.WirePolicy:
         """The compression tiers this config asks for, as the per-kind
@@ -216,6 +229,10 @@ class LiveResult:
     transport_stats: dict
     stash_high_water: dict                 # device -> max live versions
     recoveries: list                       # [{failed, restart, partition}]
+    commit_times: dict = dataclasses.field(default_factory=dict)
+    #   batch -> seconds since the coordinator's clock zero at which that
+    #   batch's commit was (last) absorbed — per-batch wall timing for
+    #   benchmarks (diff consecutive batches for steady-state batch time)
     worker_exitcodes: dict = dataclasses.field(default_factory=dict)
     #   dev -> OS exit code, filled by net.run_tcp_training (multi-process
     #   runs only; a SIGKILLed worker reports -9)
@@ -295,6 +312,13 @@ class Worker(threading.Thread):
         self._repl_shadow: dict[tuple, dict[int, np.ndarray]] = {}
         self._acts: dict[int, Any] = {}
         self._grads: dict[int, Any] = {}
+        # acts/grads that arrived for a segment we have not ENTERED yet:
+        # links are independently delayed (WAN jitter, netem), so a peer's
+        # first act of segment N can beat the coordinator's own `segment`
+        # N message here — buffer by (seg_id, kind, batch) and claim them
+        # at segment entry instead of dropping (which wedges the pipeline
+        # until segment_timeout)
+        self._future: dict[tuple[int, str, int], Any] = {}
         self._fwd_ctx: dict[int, tuple] = {}   # batch -> (version buf, x)
         # error-feedback residuals for the int8-fused wire tier (AccEPT):
         # one per boundary direction, carried across batches by
@@ -410,6 +434,10 @@ class Worker(threading.Thread):
             k = msg.kind
             if k == "segment":
                 self._run_segment(msg.payload)
+            elif k in ("act", "grad"):
+                # a peer's data for the NEXT segment outran our `segment`
+                # message (independent link delays); _dispatch buffers it
+                self._dispatch(msg)
             elif k == "replicate":
                 self._do_replicate(msg.payload)
             elif k in ("repart", "recover"):
@@ -448,6 +476,8 @@ class Worker(threading.Thread):
             seg_id, b, x = msg.payload
             if seg_id == self._seg_id:          # stale segments are dropped
                 (self._acts if k == "act" else self._grads)[b] = x
+            elif seg_id > self._seg_id:         # early: segment msg in flight
+                self._future[(seg_id, k, b)] = x
         elif k == "probe":
             self.transport.send(self.dev, COORD, "probe_ack",
                                 {"status": "ok"})
@@ -497,6 +527,12 @@ class Worker(threading.Thread):
         self._seg_id = spec["seg_id"]
         self._acts.clear()
         self._grads.clear()
+        for (sid, kind, b) in list(self._future):
+            x = self._future.pop((sid, kind, b))
+            if sid == self._seg_id:             # arrived before we entered
+                (self._acts if kind == "act" else self._grads)[b] = x
+            elif sid > self._seg_id:
+                self._future[(sid, kind, b)] = x   # still ahead of us
         self._fwd_ctx.clear()
         self._pre_refit = {}          # redistribution is over once we train
         last = stage == n - 1
@@ -901,7 +937,8 @@ class Coordinator:
         self.wire = cfg.wire_policy()
         self.transport = transport or Transport.create(
             "queue", fault=cfg.fault, codec=cfg.wire_codec,
-            policy=self.wire, reliable=cfg.reliable_data, rto=cfg.rto)
+            policy=self.wire, reliable=cfg.reliable_data, rto=cfg.rto,
+            netem=cfg.netem)
         if transport is not None:
             # the coordinator's policy is authoritative for the cluster:
             # applied to its own endpoint here, shipped to remote workers
@@ -947,6 +984,7 @@ class Coordinator:
         self._cur_seg = -1
         self._done: dict[int, dict] = {}
         self._committed = -1
+        self.commit_times: dict[int, float] = {}
         self._last_hb: dict[int, float] = {}
         self._ready_acks: dict[int, set] = {}    # refit version -> acked devs
         self._ready_missing: dict[int, list] = {}
@@ -1064,6 +1102,8 @@ class Coordinator:
             self._cap_acks[msg.payload.get("dev", msg.src)] = msg.payload
         elif msg.kind == "commit":
             self._committed = max(self._committed, msg.payload)
+            self.commit_times[int(msg.payload)] = \
+                time.monotonic() - self._t0
             for dev, kb in list(self._kill.items()):
                 if msg.payload >= kb:
                     self._log(f"KILL worker dev{dev} @batch {msg.payload}")
@@ -1631,7 +1671,8 @@ class Coordinator:
                         "resume requires the central worker (device 0)")
             else:
                 self._await_remote_workers()
-            est = CapacityEstimator(profile.exec_times, len(worker_ids))
+            est = CapacityEstimator(profile.exec_times, len(worker_ids),
+                                    ema=cfg.capacity_ema)
             part = uniform_partition(L, len(worker_ids))
             partitions = [(v0, part.points)]
             for i, dev in enumerate(worker_ids):
@@ -1686,8 +1727,9 @@ class Coordinator:
         return LiveResult(
             losses=self.losses, loss_log=self.loss_log,
             partitions=partitions, events=self.events,
+            commit_times=dict(self.commit_times),
             capacities=np.array(est.capacities),
-            transport_stats=dict(self.transport.stats),
+            transport_stats=self.transport.stats_snapshot(),
             stash_high_water=dict(self.stash_high_water),
             recoveries=self.recoveries, admissions=self.admissions,
             replica_report=self.global_store.nbytes_report())
@@ -1832,8 +1874,10 @@ class Coordinator:
             if proto.repartition_due(b0):
                 new_part = protocol.solve_from_estimates(
                     profile, self.bandwidth, worker_ids, est,
-                    proto.comm_factor)
-                if new_part.points != part.points:
+                    proto.comm_factor, static=self.cfg.static_partition)
+                if protocol.refit_worthwhile(profile, self.bandwidth,
+                                             worker_ids, est, part,
+                                             new_part, proto):
                     plans = protocol.plan_repartition_all(
                         new_part, part, len(worker_ids))
                     self._log(f"re-partition {part.counts} -> "
@@ -1887,7 +1931,8 @@ class Coordinator:
         failed_pos = [worker_ids.index(d) for d in dead]
         dec = protocol.plan_failure_recovery(
             part, worker_ids, failed_pos, est, profile,
-            self.bandwidth, self.proto.comm_factor)
+            self.bandwidth, self.proto.comm_factor,
+            static=self.cfg.static_partition)
         restart = self._committed + 1
         state.reset_after_recovery(restart)
         shortfall = self._redistribute(dec.partition, dec.plans,

@@ -259,6 +259,12 @@ class SocketTransport(TransportBase):
         unacked ``act``/``grad`` frames are resent every ``rto`` seconds
         until acked or until ``retry_window`` lapses. Cluster-wide
         setting — every node's transport must agree.
+    netem : optional ``netem.NetemSpec`` shaping every link on the SEND
+        side (one-way latency + jitter, token-bucket bandwidth, loss,
+        timed partitions) — the same shaper the queue transport layers
+        in, so WAN emulation behaves identically across transports.
+        Each process shapes its own outbound links; give every process
+        the same spec (it rides ``LiveConfig``) for a symmetric WAN.
     """
 
     is_networked = True
@@ -269,7 +275,8 @@ class SocketTransport(TransportBase):
                  backoff: Tuple[float, float] = (0.05, 1.0),
                  coalesce_bytes: int = 1 << 20,
                  policy: Optional[wire.WirePolicy] = None,
-                 reliable: bool = False, rto: float = 0.25):
+                 reliable: bool = False, rto: float = 0.25,
+                 netem=None):
         import random
         self.addr_of = dict(addr_of)
         self.local = tuple(local)
@@ -294,6 +301,7 @@ class SocketTransport(TransportBase):
         # frames past the per-frame retry window are shed by the sender
         # anyway, so bound retransmission attempts by the same horizon
         self._rel_init(reliable, rto, expiry=retry_window)
+        self._netem_init(netem, self.fault)
         host, port = self.addr_of[self.local[0]]
         self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
@@ -398,8 +406,16 @@ class SocketTransport(TransportBase):
                 frame = _HDR.pack(len(data) + 8, src, dst) + data
                 self._peer(addr).enqueue(frame)
 
-        if self.fault.delay > 0.0:
-            threading.Timer(self.fault.delay, _ship).start()
+        delay = 0.0
+        if self.netem is not None:
+            # price the actual frame bytes (header included) so the
+            # token bucket sees what the wire would
+            verdict = self._netem_admit(src, dst, len(data) + 12)
+            if verdict is None:
+                return False               # the shaped link dropped it
+            delay = verdict
+        if delay > 0.0:
+            self.netem.scheduler.schedule(time.monotonic() + delay, _ship)
         else:
             _ship()
         return True
@@ -541,6 +557,7 @@ class SocketTransport(TransportBase):
             peers = list(self._peers.values())
         for p in peers:
             p.close()
+        self._netem_close()
 
 
 # ======================= multi-process harness ===========================
@@ -576,7 +593,8 @@ def worker_main(dev: int, addr_of: Dict[int, Addr], spec, cfg,
     # install/admit handshake overrides them if the configs disagree
     transport = SocketTransport(addr_of, local=(dev,), fault=cfg.fault,
                                 policy=cfg.wire_policy(),
-                                reliable=cfg.reliable_data, rto=cfg.rto)
+                                reliable=cfg.reliable_data, rto=cfg.rto,
+                                netem=cfg.netem)
     host, port = addr_of[dev]
     # announce=True: the Worker loop sends the hello AND re-sends it until
     # the coordinator is heard from — one lost hello (drop fault, expired
@@ -646,7 +664,8 @@ def coordinator_main(spec, cfg, addr_of: Dict[int, Addr],
     chain, batches = spec.build()
     transport = SocketTransport(addr_of, local=(COORD, 0), fault=cfg.fault,
                                 policy=cfg.wire_policy(),
-                                reliable=cfg.reliable_data, rto=cfg.rto)
+                                reliable=cfg.reliable_data, rto=cfg.rto,
+                                netem=cfg.netem)
     remote = {d for d in addr_of if d > 0}
     coord = Coordinator(chain, lambda gb: batches[gb % len(batches)], cfg,
                         transport=transport, remote_devs=remote,
@@ -702,7 +721,8 @@ def run_tcp_training(spec, cfg, *, host: str = "127.0.0.1",
     chain, batches = spec.build()
     transport = SocketTransport(addr_of, local=(COORD, 0), fault=cfg.fault,
                                 policy=cfg.wire_policy(),
-                                reliable=cfg.reliable_data, rto=cfg.rto)
+                                reliable=cfg.reliable_data, rto=cfg.rto,
+                                netem=cfg.netem)
     coord = Coordinator(chain, lambda gb: batches[gb % len(batches)], cfg,
                         transport=transport, remote_devs=set(history),
                         spawner=spawner, manifest_doc=manifest_doc)

@@ -42,6 +42,14 @@ class ProtocolConfig:
     probe_rtt: float = 0.05
     commit_rtt: float = 0.05
     comm_factor: float = 2.0              # fwd activation + bwd gradient
+    # Refit hysteresis (beyond-paper, for jittery WAN capacity samples):
+    # None = the paper's behavior, adopt any partition whose cut points
+    # changed. A float h >= 0 only adopts when the predicted saving over
+    # the next control interval exceeds (1 + h) x the redistribution
+    # cost (see ``refit_worthwhile``), so noise-driven flapping is
+    # suppressed while a genuine capacity shift still refits at the
+    # first due batch.
+    refit_hysteresis: Optional[float] = None
 
     def replication_due(self, batch: int) -> tuple[bool, bool]:
         """(chain, global) replication due at this batch boundary."""
@@ -71,22 +79,84 @@ class ProtocolConfig:
 
 # --------------------------- decision helpers ----------------------------
 
-def solve_from_estimates(profile, bandwidth: np.ndarray,
-                         worker_ids: Sequence[int], est: CapacityEstimator,
-                         comm_factor: float = 2.0) -> PartitionResult:
-    """Dynamic partition (Eqs. 4-7) from the capacity estimator's current
-    view. Before every worker has reported a measurement the central node
-    assumes homogeneity (paper §III-B / §III-F); C_0 = 1 by Eq. 1."""
+def _estimated_caps(worker_ids: Sequence[int],
+                    est: CapacityEstimator) -> np.ndarray:
+    """Capacity vector the solver sees: the estimator's view normalized to
+    C_0 = 1 (Eq. 1), or all-ones before every worker has reported
+    (paper §III-B / §III-F homogeneity assumption)."""
     n = len(worker_ids)
     if est.all_reported():
         caps = np.asarray(est.capacities[:n], float)
-        caps = caps / caps[0] if caps[0] > 0 else caps
-    else:
-        caps = np.ones(n)
+        return caps / caps[0] if caps[0] > 0 else caps
+    return np.ones(n)
+
+
+def solve_from_estimates(profile, bandwidth: np.ndarray,
+                         worker_ids: Sequence[int], est: CapacityEstimator,
+                         comm_factor: float = 2.0, *,
+                         static: bool = False) -> PartitionResult:
+    """Dynamic partition (Eqs. 4-7) from the capacity estimator's current
+    view. ``static=True`` ignores the estimates and returns PipeDream's
+    equal split (the paper's static baseline) — recovery still re-splits
+    over the survivor count, but never adapts to heterogeneity."""
+    n = len(worker_ids)
+    if static:
+        return uniform_partition(len(profile.exec_times), n)
+    caps = _estimated_caps(worker_ids, est)
     bws = np.array([bandwidth[worker_ids[i], worker_ids[i + 1]]
                     for i in range(n - 1)])
     return solve_partition(profile.exec_times, profile.out_bytes, caps, bws,
                            comm_factor)
+
+
+def partition_cycle_time(profile, bandwidth: np.ndarray,
+                         worker_ids: Sequence[int], est: CapacityEstimator,
+                         part: PartitionResult,
+                         comm_factor: float = 2.0) -> float:
+    """Price an EXISTING partition under the estimator's CURRENT view:
+    the DP objective (max over capacity-scaled stage times and inter-stage
+    comm terms) evaluated at ``part``'s cut points. Shares the
+    normalization of ``solve_from_estimates`` so the two are directly
+    comparable — ``partition_cycle_time(.., solve_from_estimates(..))``
+    equals that solution's bottleneck."""
+    caps = _estimated_caps(worker_ids, est)
+    lt = np.asarray(profile.exec_times, float)
+    ob = np.asarray(profile.out_bytes, float)
+    t, start = 0.0, 0
+    for i, p in enumerate(part.points):
+        t = max(t, float(np.sum(lt[start:p + 1])) * caps[i])
+        if i < len(part.points) - 1:
+            bw = bandwidth[worker_ids[i], worker_ids[i + 1]]
+            t = max(t, comm_factor * ob[p] / bw)
+        start = p + 1
+    return t
+
+
+def refit_worthwhile(profile, bandwidth: np.ndarray,
+                     worker_ids: Sequence[int], est: CapacityEstimator,
+                     part_cur: PartitionResult, part_new: PartitionResult,
+                     proto: "ProtocolConfig") -> bool:
+    """Should the runtime ADOPT ``part_new`` over ``part_cur``? With
+    ``proto.refit_hysteresis`` unset: yes whenever the cut points differ
+    (the paper's rule). With hysteresis h: only when the predicted saving
+    over the next ``repartition_every`` batches exceeds (1 + h) x the
+    redistribution cost of moving the weights, so jitter-sized estimate
+    wobbles (which re-cut by one layer but save microseconds) never pay
+    a multi-second weight reshuffle."""
+    if part_new.points == part_cur.points:
+        return False
+    h = proto.refit_hysteresis
+    if h is None:
+        return True
+    t_cur = partition_cycle_time(profile, bandwidth, worker_ids, est,
+                                 part_cur, proto.comm_factor)
+    t_new = partition_cycle_time(profile, bandwidth, worker_ids, est,
+                                 part_new, proto.comm_factor)
+    gain = (t_cur - t_new) * proto.repartition_every
+    plans = plan_repartition_all(part_new, part_cur, len(worker_ids))
+    cost = redistribution_cost(profile, bandwidth, list(worker_ids), plans,
+                               proto.commit_rtt)
+    return gain > (1.0 + h) * cost
 
 
 @dataclasses.dataclass
@@ -102,7 +172,8 @@ def plan_failure_recovery(part_cur: PartitionResult, worker_ids: Sequence,
                           failed_positions: Sequence[int],
                           est: CapacityEstimator, profile,
                           bandwidth: np.ndarray, comm_factor: float = 2.0,
-                          holder_has=None) -> RecoveryDecision:
+                          holder_has=None, *,
+                          static: bool = False) -> RecoveryDecision:
     """§III-F single/multi failure: renumber the worker list, re-solve the
     partition over the survivors, and emit per-survivor redistribution plans
     (Algorithm 1 via ``core/fault.py``). ``failed_positions`` are indices
@@ -113,7 +184,7 @@ def plan_failure_recovery(part_cur: PartitionResult, worker_ids: Sequence,
     new_ids = rd.update_worker_list(list(worker_ids), list(failed_positions))
     new_est = est.drop_workers(list(failed_positions))
     new_part = solve_from_estimates(profile, bandwidth, new_ids, new_est,
-                                    comm_factor)
+                                    comm_factor, static=static)
     if holder_has is None:
         holder_has = lambda idx, l: idx == 0   # central-only fallback
     plans = recovery_plans(new_part.points, part_cur.points,

@@ -267,7 +267,11 @@ class PipelineSimulator:
                 new_part = protocol.solve_from_estimates(
                     cfg.profile, cfg.bandwidth, worker_ids, est,
                     cfg.comm_factor)
-                if new_part.points != part.points:
+                # same adoption rule as the live runtime (lock-step): the
+                # paper's points-changed test unless refit_hysteresis gates
+                if protocol.refit_worthwhile(cfg.profile, cfg.bandwidth,
+                                             worker_ids, est, part,
+                                             new_part, proto):
                     plans = protocol.plan_repartition_all(new_part, part,
                                                           len(worker_ids))
                     c = protocol.redistribution_cost(cfg.profile,

@@ -8,11 +8,19 @@ injectable so the fault-tolerance protocol can be exercised for real:
   * ``kill(node)``     — the node vanishes: messages to AND from it are
                          silently dropped (a crashed edge device),
   * ``FaultSpec.drop`` — Bernoulli loss per message (flaky WiFi),
-  * ``FaultSpec.delay``— fixed delivery latency via timer threads.
+  * ``FaultSpec.delay``— fixed delivery latency on every link.
 
-The transport models *reachability*, not bandwidth: link speeds enter the
-protocol through the coordinator's bandwidth matrix (what the paper's
-central node measures), exactly as in ``runtime/simulator.py``.
+Beyond reachability faults, a ``runtime/netem.py`` ``NetemSpec`` shapes
+the links themselves — per-link one-way latency + jitter, token-bucket
+bandwidth, probabilistic loss, and timed partitions — under EITHER
+transport (this queue one and ``runtime/net.py``'s sockets), so WAN-class
+conditions are emulated identically in-process and across processes.
+``FaultSpec.delay`` is implemented as the degenerate netem spec (every
+link a fixed-latency pipe); all delayed deliveries ride one scheduler
+thread, not a timer thread per message. Link *capacity* still enters the
+partitioning protocol through the coordinator's bandwidth matrix (what
+the paper's central node measures), exactly as in
+``runtime/simulator.py`` — netem is the physics those measurements see.
 
 With ``codec=True`` every payload round-trips through the wire format of
 ``runtime/codec.py`` (encode to ``bytes`` at send, decode at deliver), so
@@ -39,6 +47,7 @@ import time
 from typing import Any, Dict, Optional, Tuple
 
 from repro.runtime import codec as wire
+from repro.runtime import netem as netem_mod
 
 
 @dataclasses.dataclass(frozen=True)
@@ -172,14 +181,17 @@ class TransportBase(abc.ABC):
 
     def close(self) -> None:
         """Release sockets/threads; idempotent. Queue transports only
-        need the flag (it stops the retransmit daemon)."""
+        need the flag (it stops the retransmit daemon) plus the netem
+        scheduler shutdown."""
         self.closed = True
+        self._netem_close()
 
     @staticmethod
     def create(kind: str, *, fault: Optional[FaultSpec] = None,
                codec: bool = False,
                policy: Optional[wire.WirePolicy] = None,
                reliable: bool = False, rto: float = 0.25,
+               netem: Optional[netem_mod.NetemSpec] = None,
                addr_of: Optional[Dict[int, Tuple[str, int]]] = None,
                local: Optional[Tuple[int, int]] = None,
                **kw: Any) -> "TransportBase":
@@ -189,15 +201,58 @@ class TransportBase(abc.ABC):
         extra kwargs like ``retry_window`` pass through)."""
         if kind == "queue":
             return Transport(fault, codec=codec, policy=policy,
-                             reliable=reliable, rto=rto, **kw)
+                             reliable=reliable, rto=rto, netem=netem, **kw)
         if kind == "tcp":
             from repro.runtime.net import SocketTransport
             if addr_of is None or local is None:
                 raise ValueError("tcp transport needs addr_of and local")
             return SocketTransport(addr_of, local, fault, policy=policy,
-                                   reliable=reliable, rto=rto, **kw)
+                                   reliable=reliable, rto=rto, netem=netem,
+                                   **kw)
         raise ValueError(f"unknown transport kind {kind!r} "
                          f"(expected 'queue' or 'tcp')")
+
+    # ------------------------ shared netem shaping -----------------------
+
+    def _netem_init(self, netem: Optional[netem_mod.NetemSpec],
+                    fault: FaultSpec) -> None:
+        """Build the link shaper (call once from a concrete __init__
+        AFTER ``self.stats`` exists). An explicit ``NetemSpec`` wins;
+        without one, a legacy ``FaultSpec.delay`` becomes the degenerate
+        spec shaping every link into a fixed-latency pipe — same
+        semantics as the old per-message timer threads, minus the
+        unbounded thread spawn."""
+        spec = netem
+        if spec is None and fault.delay > 0.0:
+            spec = netem_mod.NetemSpec(
+                default=netem_mod.LinkSpec(latency=fault.delay),
+                seed=fault.seed, colocated=())
+        self.netem = netem_mod.LinkShaper(spec) if spec is not None else None
+        self.stats.setdefault("netem_dropped", 0)
+
+    def _netem_admit(self, src: int, dst: int,
+                     nbytes: int) -> Optional[float]:
+        """Price one message; ``None`` = the link dropped it (accounted),
+        else the delivery delay in seconds (0.0 = deliver inline)."""
+        verdict = self.netem.admit(src, dst, nbytes)
+        if verdict is None:
+            with self._lock:
+                self.stats["netem_dropped"] += 1
+        return verdict
+
+    def _netem_close(self) -> None:
+        shaper = getattr(self, "netem", None)
+        if shaper is not None:
+            shaper.close()
+
+    def stats_snapshot(self) -> dict:
+        """``self.stats`` plus the link shaper's counters (``shaped``,
+        ``netem_blocked``, per-link breakdowns) when a NetemSpec is
+        active — the view result reports carry."""
+        snap = dict(self.stats)
+        if getattr(self, "netem", None) is not None:
+            snap.update(self.netem.stats)
+        return snap
 
     # -------------------- shared reliable-data layer --------------------
 
@@ -370,7 +425,8 @@ class Transport(TransportBase):
     def __init__(self, fault: Optional[FaultSpec] = None,
                  codec: bool = False,
                  policy: Optional[wire.WirePolicy] = None,
-                 reliable: bool = False, rto: float = 0.25):
+                 reliable: bool = False, rto: float = 0.25,
+                 netem: Optional[netem_mod.NetemSpec] = None):
         self.fault = fault or FaultSpec()
         self.policy = policy or wire.WirePolicy()
         # compression is a property of the byte encoding, so any
@@ -386,6 +442,7 @@ class Transport(TransportBase):
                       "kind_bytes": _kind_class_counters(),
                       "kind_msgs": _kind_class_counters()}
         self._rel_init(reliable, rto)
+        self._netem_init(netem, self.fault)
 
     def set_policy(self, policy: wire.WirePolicy) -> None:
         """Adopt a wire-compression policy at runtime (the coordinator's
@@ -493,13 +550,20 @@ class Transport(TransportBase):
                               sent_at=time.monotonic()))
             _account()
 
-        if self.fault.delay > 0.0:
+        delay = 0.0
+        if self.netem is not None:
+            verdict = self._netem_admit(src, dst, nbytes)
+            if verdict is None:
+                return False               # the shaped link dropped it
+            delay = verdict
+        if delay > 0.0:
             def _deliver():
                 with self._lock:          # re-check: dst may have died (or
                     if dst in self._dead:  # been killed+revived) in flight
                         return
                 _put()
-            threading.Timer(self.fault.delay, _deliver).start()
+            self.netem.scheduler.schedule(time.monotonic() + delay,
+                                          _deliver)
         else:
             _put()
         return True

@@ -107,6 +107,18 @@ class _Booleans(Strategy):
         return rng.random() < 0.5
 
 
+class _Builds(Strategy):
+    def __init__(self, target, args, kwargs):
+        self.target, self.args, self.kwargs = target, args, kwargs
+
+    def sample(self, rng):
+        args = [a.sample(rng) if isinstance(a, Strategy) else a
+                for a in self.args]
+        kwargs = {k: (v.sample(rng) if isinstance(v, Strategy) else v)
+                  for k, v in self.kwargs.items()}
+        return self.target(*args, **kwargs)
+
+
 class _Composite(Strategy):
     def __init__(self, fn, args, kwargs):
         self.fn, self.args, self.kwargs = fn, args, kwargs
@@ -155,6 +167,10 @@ class strategies:
         return _Booleans()
 
     @staticmethod
+    def builds(target, *args, **kwargs):
+        return _Builds(target, args, kwargs)
+
+    @staticmethod
     def composite(fn):
         def factory(*args, **kwargs):
             return _Composite(fn, args, kwargs)
@@ -169,7 +185,9 @@ def given(*strats, **kw_strats):
     def deco(fn):
         # NOTE: no functools.wraps — it sets __wrapped__, pytest would
         # unwrap to fn's signature and treat the drawn params as fixtures
-        def wrapper():
+        def wrapper(*outer):
+            # *outer passes through pytest-provided args (e.g. ``self``
+            # for property tests defined on a class)
             n = getattr(wrapper, "_max_examples",
                         getattr(fn, "_max_examples", _DEFAULT_EXAMPLES))
             rng = random.Random(0xF7B1BE)
@@ -177,7 +195,7 @@ def given(*strats, **kw_strats):
                 drawn = [s.sample(rng) for s in strats]
                 drawn_kw = {k: s.sample(rng) for k, s in kw_strats.items()}
                 try:
-                    fn(*drawn, **drawn_kw)
+                    fn(*outer, *drawn, **drawn_kw)
                 except _Unsatisfied:
                     continue
         wrapper.__name__ = fn.__name__

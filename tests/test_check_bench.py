@@ -123,6 +123,60 @@ def test_fused_wire_relative_gate():
         and "0.50x" in failures[0]
 
 
+WAN_HEALTHY = {
+    "wan_fidelity_min": 0.97,
+    "wan_static_batch_ms": 1500.0,
+    "wan_dynamic_batch_ms": 420.0,     # 3.6x speedup
+}
+
+
+def test_wan_gate_passes_on_healthy_results():
+    assert check_bench.check_wan(dict(WAN_HEALTHY)) == []
+
+
+def test_wan_gate_fires_on_low_fidelity():
+    bad = dict(WAN_HEALTHY)
+    bad["wan_fidelity_min"] = 0.6            # shaper off-spec by 40%
+    failures = check_bench.check_wan(bad)
+    assert len(failures) == 1 and "wan_fidelity_min" in failures[0]
+
+
+def test_wan_gate_fires_below_speedup_floor():
+    slow = dict(WAN_HEALTHY)
+    slow["wan_dynamic_batch_ms"] = 1200.0    # only 1.25x
+    failures = check_bench.check_wan(slow)
+    assert len(failures) == 1
+    assert "wan_static_batch_ms" in failures[0] and "1.25x" in failures[0]
+
+
+def test_wan_gate_fails_on_missing_metric():
+    """Unlike the within-run relative gates, a missing WAN metric is a
+    FAILURE — these gates are the benchmark's reason to run."""
+    for key in WAN_HEALTHY:
+        truncated = dict(WAN_HEALTHY)
+        del truncated[key]
+        failures = check_bench.check_wan(truncated)
+        assert any(key in f and "missing" in f for f in failures), key
+
+
+def test_wan_cli_exit_codes(tmp_path):
+    def run(doc):
+        p = tmp_path / "wan.json"
+        p.write_text(json.dumps(doc))
+        return subprocess.run(
+            [sys.executable, str(REPO / "tools" / "check_bench.py"),
+             "--wan", str(p)], capture_output=True, text=True)
+
+    ok = run(WAN_HEALTHY)
+    assert ok.returncode == 0, ok.stdout + ok.stderr
+    assert "WAN OK" in ok.stdout and "3.57x" in ok.stdout
+
+    bad = dict(WAN_HEALTHY)
+    bad["wan_fidelity_min"] = 0.1
+    failed = run(bad)
+    assert failed.returncode == 1 and "wan_fidelity_min" in failed.stdout
+
+
 def test_cli_exit_codes(tmp_path):
     base_p = tmp_path / "baseline.json"
     base_p.write_text(json.dumps(BASELINE))

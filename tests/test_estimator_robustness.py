@@ -1,0 +1,136 @@
+"""Capacity-estimator robustness under WAN jitter (beyond-paper knobs
+``CapacityEstimator.ema`` + ``ProtocolConfig.refit_hysteresis``).
+
+These are UNIT-level loops over the real decision stack — CapacityEstimator
+-> solve_from_estimates -> refit_worthwhile — with synthetic measurement
+noise, no runtime threads. The contract under test:
+
+  * raw paper behavior (ema=0, hysteresis None) FLAPS: jitter-sized
+    measurement wobble re-cuts the partition and the paper's rule adopts
+    every re-cut, paying a weight reshuffle each time;
+  * EWMA + hysteresis keeps the same inputs to <= 1 adoption;
+  * robustness must not buy deafness: a GENUINE 10x capacity shift is
+    adopted at the first repartition opportunity after the shift.
+"""
+import numpy as np
+import pytest
+
+from repro.core.capacity import CapacityEstimator
+from repro.runtime import protocol
+from repro.runtime.devices import WorkloadProfile, uniform_bandwidth
+from repro.runtime.protocol import ProtocolConfig
+
+L = 12                                  # layers
+N = 3                                   # workers
+WORKER_IDS = list(range(N))
+
+
+def _profile():
+    """Heavy weights vs light per-batch compute: exactly the regime where
+    a jitter-sized re-cut costs far more (weight reshuffle) than it saves
+    (microseconds per batch)."""
+    return WorkloadProfile(fwd_times=np.full(L, 1e-3),
+                           bwd_times=np.full(L, 2e-3),
+                           out_bytes=np.full(L, 2048.0),
+                           weight_bytes=np.full(L, 1e6))
+
+
+def _proto(hysteresis):
+    return ProtocolConfig(repartition_every=50, commit_rtt=0.05,
+                          refit_hysteresis=hysteresis)
+
+
+def _feed(est, part, true_caps, wobble):
+    """One measurement round: every worker reports its current segment's
+    time as (true capacity * profiled ref) * (1 + wobble[i])."""
+    prof = _profile()
+    start = 0
+    for i, p in enumerate(part.points):
+        ref = float(np.sum(prof.exec_times[start:p + 1]))
+        est.update(i, true_caps[i] * ref * (1.0 + wobble[i]), start, p)
+        start = p + 1
+
+
+def _run_intervals(ema, hysteresis, cap_schedule):
+    """Drive the decision stack over ``len(cap_schedule)`` repartition
+    intervals; returns (number of adoptions, list of adopted points)."""
+    prof, bw = _profile(), uniform_bandwidth(N, 1e7)
+    proto = _proto(hysteresis)
+    est = CapacityEstimator(prof.exec_times, N, ema=ema)
+    part = protocol.solve_from_estimates(prof, bw, WORKER_IDS, est,
+                                         proto.comm_factor)
+    refits, adopted = 0, [tuple(part.points)]
+    for true_caps, wobble in cap_schedule:
+        _feed(est, part, true_caps, wobble)
+        new = protocol.solve_from_estimates(prof, bw, WORKER_IDS, est,
+                                            proto.comm_factor)
+        if protocol.refit_worthwhile(prof, bw, WORKER_IDS, est,
+                                     part, new, proto):
+            part = new
+            refits += 1
+            adopted.append(tuple(part.points))
+    return refits, adopted
+
+
+def _jitter_schedule(rounds=8, amp=0.12):
+    """Stable true capacities (1, 1, 2) with deterministic alternating
+    measurement wobble pushing workers 1 and 2 in opposite directions —
+    the WAN-jitter shape that makes a latest-sample-wins estimator re-cut
+    by one layer every interval."""
+    caps = (1.0, 1.0, 2.0)
+    return [(caps, (0.0, amp * s, -amp * s))
+            for s in [1 if r % 2 == 0 else -1 for r in range(rounds)]]
+
+
+def test_raw_estimator_flaps_under_jitter():
+    """Paper behavior (latest sample wins, adopt any re-cut): alternating
+    jitter makes it pay the weight reshuffle over and over."""
+    refits, adopted = _run_intervals(0.0, None, _jitter_schedule())
+    assert refits >= 2, (refits, adopted)
+
+
+def test_ewma_plus_hysteresis_suppresses_flapping():
+    """Same jittered inputs, EWMA-smoothed estimates + refit hysteresis:
+    at most one adoption (settling onto the true heterogeneity), then
+    quiet."""
+    refits, adopted = _run_intervals(0.7, 0.5, _jitter_schedule())
+    assert refits <= 1, (refits, adopted)
+
+
+def test_genuine_shift_refits_within_one_interval():
+    """Robustness must not mean deafness: when worker 2 genuinely slows
+    10x mid-run, the robust config adopts a new partition at the FIRST
+    interval after the shift."""
+    before = [((1.0, 1.0, 1.0), (0.0, 0.0, 0.0))] * 3
+    after = [((1.0, 1.0, 10.0), (0.0, 0.0, 0.0))] * 3
+    refits_pre, adopted_pre = _run_intervals(0.7, 0.5, before)
+    refits_all, adopted_all = _run_intervals(0.7, 0.5, before + after[:1])
+    # quiet while nothing changed...
+    assert refits_pre <= 1
+    # ...and exactly one more adoption the first interval after the shift
+    assert refits_all == refits_pre + 1, (adopted_pre, adopted_all)
+    # the new cut moved layers OFF the slowed worker 2
+    assert adopted_all[-1][1] > adopted_pre[-1][1], adopted_all
+
+
+def test_cycle_time_prices_solver_solution_consistently():
+    """partition_cycle_time at the solver's own solution equals the
+    solver's reported bottleneck (shared normalization)."""
+    prof, bw = _profile(), uniform_bandwidth(N, 1e7)
+    est = CapacityEstimator(prof.exec_times, N)
+    est.update(1, 2.0 * float(np.sum(prof.exec_times[4:8])), 4, 7)
+    est.update(2, 0.5 * float(np.sum(prof.exec_times[8:12])), 8, 11)
+    part = protocol.solve_from_estimates(prof, bw, WORKER_IDS, est)
+    t = protocol.partition_cycle_time(prof, bw, WORKER_IDS, est, part)
+    assert t == pytest.approx(part.bottleneck, rel=1e-9)
+
+
+def test_no_refit_when_points_unchanged():
+    """refit_worthwhile is False for an identical partition regardless of
+    hysteresis setting — no cost model consulted, no reshuffle."""
+    prof, bw = _profile(), uniform_bandwidth(N, 1e7)
+    est = CapacityEstimator(prof.exec_times, N)
+    part = protocol.solve_from_estimates(prof, bw, WORKER_IDS, est)
+    for h in (None, 0.0, 0.5):
+        assert not protocol.refit_worthwhile(prof, bw, WORKER_IDS, est,
+                                             part, part, _proto(h))

@@ -3,6 +3,7 @@ decode, whisper two-phase, stash/aggregation semantics. Runs on an 8-host-
 device (data=2, stage=2, tensor=2) mesh."""
 import jax
 import jax.numpy as jnp
+from repro.launch.mesh import axis_types_kwarg, mesh_context
 import numpy as np
 import pytest
 
@@ -19,7 +20,7 @@ def mesh():
     if jax.device_count() < 8:
         pytest.skip("needs 8 host devices")
     return jax.make_mesh((2, 2, 2), ("data", "stage", "tensor"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+                         **axis_types_kwarg(3))
 
 
 def _seq_loss(params, cfg, toks, labels, aux_w=0.0):
@@ -43,7 +44,7 @@ def test_pipeline_loss_and_grads_match_sequential(mesh, arch, tp):
                               cfg.vocab_size)
     labels = jax.random.randint(jax.random.fold_in(KEY, 2), (4, 16), 0,
                                 cfg.vocab_size)
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         loss_fn = make_loss_fn(mesh, cfg, num_microbatches=2, remat=True)
         (total, metrics), grads = jax.jit(
             jax.value_and_grad(loss_fn, has_aux=True))(
@@ -71,7 +72,7 @@ def test_pipeline_decode_matches_sequential(mesh, arch, tp):
         lg, cc = M.sequential_decode_step(params, cfg, toks[:, t:t + 1], cc,
                                           jnp.int32(t))
         seq_logits.append(lg)
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         serve = jax.jit(make_serve_step(mesh, cfg, num_microbatches=2))
         c2 = M.init_caches(cfg, batch=B, cache_len=W, dtype=jnp.float32)
         for t in range(T):
@@ -90,7 +91,7 @@ def test_whisper_pipeline_matches_sequential(mesh):
     logits_ref, _, _ = M.sequential_encdec_forward(params, cfg, frames, toks)
     lp = jax.nn.log_softmax(logits_ref.astype(jnp.float32))
     ref = -jnp.mean(jnp.take_along_axis(lp, toks[..., None], -1)[..., 0])
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         loss_fn = make_loss_fn(mesh, cfg, num_microbatches=2, remat=False)
         (_, metrics), _ = jax.jit(jax.value_and_grad(loss_fn, has_aux=True))(
             params, {"frames": frames, "tokens": toks, "labels": toks})
@@ -104,7 +105,7 @@ def test_microbatch_count_invariance(mesh):
     params = M.init_params(KEY, cfg)
     toks = jax.random.randint(KEY, (8, 16), 0, cfg.vocab_size)
     batch = {"tokens": toks, "labels": toks}
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         losses = []
         for m in (1, 2, 4):
             loss_fn = make_loss_fn(mesh, cfg, num_microbatches=m, remat=False)
@@ -125,7 +126,7 @@ def test_train_step_stash_and_aggregation(mesh):
     params = M.init_params(KEY, cfg)
     toks = jax.random.randint(KEY, (4, 16), 0, cfg.vocab_size)
     batch = {"tokens": toks, "labels": toks}
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         step_fn, _ = make_train_step(mesh, cfg, tc)
         state = step_fn.init_state(params)
         jstep = jax.jit(step_fn)
@@ -159,7 +160,7 @@ def test_long_context_window_decode(mesh):
         lg, cc = M.sequential_decode_step(params, cfg, toks[:, t:t + 1], cc,
                                           jnp.int32(t))
         seq_logits.append(lg)
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         serve = jax.jit(make_serve_step(mesh, cfg, window=W))
         c2 = M.init_caches(cfg, batch=B, cache_len=W, dtype=jnp.float32)
         for t in range(T):

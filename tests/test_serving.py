@@ -2,6 +2,7 @@
 exactly the tokens a standalone generation produces."""
 import jax
 import jax.numpy as jnp
+from repro.launch.mesh import axis_types_kwarg, mesh_context
 import numpy as np
 import pytest
 
@@ -89,7 +90,7 @@ def test_per_slot_positions_in_pipeline_decode():
         pytest.skip("needs 8 host devices")
     from repro.pipeline.pipeline_step import make_serve_step
     mesh = jax.make_mesh((2, 2, 2), ("data", "stage", "tensor"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+                         **axis_types_kwarg(3))
     cfg = get_config("qwen2-1.5b").reduced(pipeline_stages=2,
                                            tensor_parallel=2, num_layers=4)
     params = M.init_params(KEY, cfg)
@@ -98,7 +99,7 @@ def test_per_slot_positions_in_pipeline_decode():
     # all slots at the same position vector == scalar-pos behaviour
     caches_a = M.init_caches(cfg, batch=B, cache_len=W, dtype=jnp.float32)
     caches_b = M.init_caches(cfg, batch=B, cache_len=W, dtype=jnp.float32)
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         serve = jax.jit(make_serve_step(mesh, cfg, num_microbatches=2))
         for t in range(5):
             la, caches_a = serve(params, toks[:, t:t+1], caches_a,

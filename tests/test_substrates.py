@@ -5,6 +5,7 @@ import tempfile
 
 import jax
 import jax.numpy as jnp
+from repro.launch.mesh import axis_types_kwarg, mesh_context
 import numpy as np
 import pytest
 
@@ -105,14 +106,14 @@ class TestVocabParallel:
         if jax.device_count() < 8:
             pytest.skip("needs 8 host devices")
         return jax.make_mesh((2, 2, 2), ("data", "stage", "tensor"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+                             **axis_types_kwarg(3))
 
     def test_embed_and_loss_with_padded_vocab(self, mesh):
         from repro.pipeline import losses as LL
         V_real, V_pad, d = 50, 64, 16
         table = jax.random.normal(KEY, (V_pad, d))
         toks = jax.random.randint(KEY, (4, 8), 0, V_real)
-        with jax.set_mesh(mesh):
+        with mesh_context(mesh):
             x = LL.embed_tokens(mesh, table, toks, jnp.float32)
         np.testing.assert_allclose(np.asarray(x), np.asarray(table[toks]),
                                    atol=1e-5)
@@ -121,7 +122,7 @@ class TestVocabParallel:
         labels = jax.random.randint(jax.random.fold_in(KEY, 2), (4, 8), 0,
                                     V_real)
         mask = jnp.ones((4, 8), jnp.float32)
-        with jax.set_mesh(mesh):
+        with mesh_context(mesh):
             loss = LL.lm_head_loss(mesh, head, y, labels, mask,
                                    vocab_size=V_real)
         logits = (y @ head)[..., :V_real]
@@ -134,7 +135,7 @@ class TestVocabParallel:
         V_real, V_pad, d = 50, 64, 16
         head = jax.random.normal(KEY, (d, V_pad))
         y = jax.random.normal(KEY, (4, 1, d))
-        with jax.set_mesh(mesh):
+        with mesh_context(mesh):
             logits = LL.lm_head_logits(mesh, head, y, vocab_size=V_real)
         assert np.asarray(logits)[..., V_real:].max() <= -1e29
 
@@ -172,7 +173,7 @@ class TestCostModel:
         from repro.models import model as M
         from repro.pipeline.pipeline_step import make_loss_fn
         mesh = jax.make_mesh((2, 2, 2), ("data", "stage", "tensor"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+                             **axis_types_kwarg(3))
         cfg = get_config("qwen2-1.5b").reduced(
             pipeline_stages=2, tensor_parallel=2, num_layers=4, d_model=256,
             d_ff=512, vocab_size=1024, num_heads=4, num_kv_heads=2,
@@ -180,7 +181,7 @@ class TestCostModel:
         params = M.init_params(KEY, cfg)
         B, T = 8, 128
         toks = jnp.zeros((B, T), jnp.int32)
-        with jax.set_mesh(mesh):
+        with mesh_context(mesh):
             loss_fn = make_loss_fn(mesh, cfg, num_microbatches=4, remat=False,
                                    unroll=True)
             co = jax.jit(jax.value_and_grad(loss_fn, has_aux=True)).lower(

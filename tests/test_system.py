@@ -2,6 +2,7 @@
 the full FTPipeHD protocol survives a mid-training failure."""
 import jax
 import jax.numpy as jnp
+from repro.launch.mesh import axis_types_kwarg, mesh_context
 import numpy as np
 import pytest
 
@@ -17,14 +18,14 @@ def mesh():
     if jax.device_count() < 8:
         pytest.skip("needs 8 host devices")
     return jax.make_mesh((2, 2, 2), ("data", "stage", "tensor"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+                         **axis_types_kwarg(3))
 
 
 def _train(mesh, cfg, steps=40, lr=0.02, opt="adam"):
     tc = TrainConfig(learning_rate=lr, optimizer=opt, microbatches=2,
                      weight_decay=0.0)
     key = jax.random.PRNGKey(0)
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         params = jax.jit(lambda k: M.init_params(k, cfg),
                          out_shardings=param_shardings(mesh, cfg))(key)
         step_fn, _ = make_train_step(mesh, cfg, tc)
@@ -85,7 +86,7 @@ def test_checkpoint_recovery_roundtrip(mesh, tmp_path):
                                            vocab_size=256)
     tc = TrainConfig(learning_rate=0.02, optimizer="adam", microbatches=2)
     key = jax.random.PRNGKey(0)
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         params = jax.jit(lambda k: M.init_params(k, cfg),
                          out_shardings=param_shardings(mesh, cfg))(key)
         step_fn, _ = make_train_step(mesh, cfg, tc)

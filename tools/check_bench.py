@@ -30,11 +30,30 @@ Relative gates (within the current results, no baseline needed):
     the fused tier's encode is pure struct packing, so it must keep pace
     with the uncompressed wire in messages per second (skipped likewise)
 
+WAN-validation mode (``--wan FILE``, mutually exclusive with the
+baseline comparison): absolute gates on a fresh
+``bench_wan_validation.py`` result, machine-independent by construction
+(a fidelity RATIO against the configured LinkSpec, and a dynamic-vs-
+static speedup where both sides ran on the same box in the same
+process), so there is no committed baseline to drift:
+
+  * ``wan_fidelity_min >= 0.8`` — measured latency AND token-bucket rate
+    on BOTH transports within 20% of the configured LinkSpec
+  * ``wan_static_batch_ms >= 1.5 * wan_dynamic_batch_ms`` — the paper's
+    headline: dynamic partition beats the static equal split by >= 1.5x
+    per steady-state batch on the heterogeneous trio under shaped links
+
+Unlike the relative gates below, a metric missing from a --wan result is
+a FAILURE: the WAN gates are this benchmark's entire reason to run.
+
 Usage (what CI runs)::
 
     python benchmarks/bench_live_throughput.py --quick --out bench_current.json
     python tools/check_bench.py --baseline BENCH_live_throughput.json \
         --current bench_current.json
+
+    python benchmarks/bench_wan_validation.py --quick --out wan_current.json
+    python tools/check_bench.py --wan wan_current.json
 
 If the regression is REAL and intended (e.g. a correctness fix that costs
 throughput), refresh the baseline locally and commit it::
@@ -133,19 +152,82 @@ def compare(baseline: dict, current: dict,
     return failures
 
 
+# WAN gates: (numerator, denominator-or-None, min value/ratio, meaning).
+# With a denominator the gate is num/den >= floor; without, num >= floor.
+# All machine-independent (ratios within one run / against the configured
+# spec) — no baseline, no refresh flow. Missing metric = FAILURE.
+WAN_GATES = [
+    ("wan_fidelity_min", None, 0.80,
+     "worst shaper fidelity (latency+rate, queue+tcp) vs LinkSpec"),
+    ("wan_static_batch_ms", "wan_dynamic_batch_ms", 1.50,
+     "dynamic-partition speedup over static equal split under WAN links"),
+]
+
+
+def check_wan(current: dict) -> list[str]:
+    """Failure messages for the WAN-validation gates (empty = pass)."""
+    failures = []
+    for num, den, floor, meaning in WAN_GATES:
+        missing = [k for k in (num, den) if k and k not in current]
+        if missing:
+            failures.append(
+                f"{'/'.join(missing)}: missing from results — the WAN "
+                f"benchmark did not run to completion")
+            continue
+        if den is None:
+            val = float(current[num])
+            if val < floor:
+                failures.append(f"{num} ({meaning}): {val:.3f} "
+                                f"< floor {floor:.2f}")
+            continue
+        ratio = float(current[num]) / max(float(current[den]), 1e-12)
+        if ratio < floor:
+            failures.append(
+                f"{num}/{den} ({meaning}): {float(current[num]):.1f} / "
+                f"{float(current[den]):.1f} = {ratio:.2f}x "
+                f"< floor {floor:.2f}x")
+    return failures
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(
         description="Fail on live-throughput perf regressions vs the "
                     "committed baseline")
     ap.add_argument("--baseline", default="BENCH_live_throughput.json",
                     help="committed baseline JSON")
-    ap.add_argument("--current", required=True,
+    ap.add_argument("--current",
                     help="freshly measured JSON "
                          "(bench_live_throughput.py --out ...)")
     ap.add_argument("--max-regression", type=float, default=0.30,
                     help="allowed fractional drop per metric (default "
                          "0.30 = 30%%)")
+    ap.add_argument("--wan", metavar="FILE",
+                    help="gate a bench_wan_validation.py result instead "
+                         "(absolute gates, no baseline)")
     args = ap.parse_args()
+
+    if args.wan:
+        try:
+            with open(args.wan) as f:
+                current = json.load(f)
+        except (OSError, ValueError) as e:
+            print(f"check_bench: cannot read WAN results {args.wan}: {e}")
+            return 2
+        failures = check_wan(current)
+        if failures:
+            print(f"check_bench: {len(failures)} WAN gate failure(s):")
+            for msg in failures:
+                print("  " + msg)
+            return 1
+        speedup = (float(current["wan_static_batch_ms"])
+                   / float(current["wan_dynamic_batch_ms"]))
+        print(f"check_bench: WAN OK — fidelity_min="
+              f"{float(current['wan_fidelity_min']):.3f} (floor 0.80), "
+              f"dynamic speedup {speedup:.2f}x (floor 1.50x)")
+        return 0
+
+    if not args.current:
+        ap.error("--current is required (or use --wan FILE)")
 
     try:
         with open(args.baseline) as f:

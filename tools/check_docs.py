@@ -58,6 +58,7 @@ CLI_HINTS = {
     "live_compressed_wire.py": "examples/live_compressed_wire.py",
     "live_coordinator_failover.py": "examples/live_coordinator_failover.py",
     "fault_tolerance_demo.py": "examples/fault_tolerance_demo.py",
+    "bench_wan_validation.py": "benchmarks/bench_wan_validation.py",
     "check_bench.py": "tools/check_bench.py",
 }
 
