@@ -1,0 +1,96 @@
+"""Fleet scaling benchmark: data-parallel chains vs one chain.
+
+Measures end-to-end training throughput (samples/s) of the SAME workload
+run as one pipeline chain and as an M-chain fleet (``runtime/fleet.py``,
+queue transport). Each chain is a full coordinator + worker cluster on a
+disjoint shard of the batch stream; chains meet every K batches at the
+weight-aggregation barrier. A fleet of M processes M x num_batches x
+batch_size samples, so with device-speed emulation (sleep-scaled compute,
+``LiveConfig.emulate_capacity`` — where the "compute" releases the GIL
+exactly as real accelerator kernels or remote edge devices would) the
+fleet should approach M x the single-chain samples/s; the CI gate
+(``tools/check_bench.py --fleet``) holds the 2-chain fleet to >= 1.5x.
+
+Metrics (JSON via --out):
+  * ``fleet_samples_per_s_1chain`` — single chain baseline
+  * ``fleet_samples_per_s_2chain`` — 2-chain fleet
+  * ``fleet_speedup_2chain``       — ratio of the two
+  * ``fleet_rounds_2chain``        — aggregation rounds the fleet ran
+    (sanity: the speedup must not come from skipping the barrier)
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/bench_fleet.py --quick --out fleet.json
+    python tools/check_bench.py --fleet fleet.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from repro.runtime.devices import DeviceSpec
+from repro.runtime.fleet import FleetConfig, FleetCoordinator
+from repro.runtime.live import LiveConfig
+from repro.runtime.protocol import ProtocolConfig
+from repro.runtime.workload import WorkloadSpec
+
+
+def measure(chains: int, *, batches: int, workers: int = 2,
+            capacity: float = 4.0, batch_size: int = 32,
+            aggregate_every: int = 6) -> dict:
+    """One fleet run; returns {"samples_per_s", "rounds", "wall_s"}."""
+    spec = WorkloadSpec(kind="mlp", seed=0, num_layers=8, width=32,
+                        in_dim=16, num_classes=4, num_data_batches=8,
+                        batch_size=batch_size)
+    specs = [DeviceSpec(f"dev-{i}", capacity) for i in range(workers)]
+    cfg = LiveConfig(
+        num_workers=workers, num_batches=batches, lr=0.1,
+        device_specs=specs, emulate_capacity=True, capacity_source="spec",
+        protocol=ProtocolConfig(detect_timeout=2.0))
+    fleet = FleetConfig(chains=chains, aggregate_every=aggregate_every,
+                        barrier_timeout=120.0)
+    fc = FleetCoordinator(spec, cfg, fleet, transport="queue")
+    t0 = time.perf_counter()
+    res = fc.run()
+    wall = time.perf_counter() - t0
+    assert not res.chain_errors, res.chain_errors
+    samples = chains * batches * batch_size
+    return {"samples_per_s": samples / wall, "rounds": len(res.rounds),
+            "wall_s": wall}
+
+
+def run(quick: bool = False) -> dict:
+    batches = 12 if quick else 24
+    out = {}
+    one = measure(1, batches=batches)
+    two = measure(2, batches=batches)
+    out["fleet_samples_per_s_1chain"] = round(one["samples_per_s"], 2)
+    out["fleet_samples_per_s_2chain"] = round(two["samples_per_s"], 2)
+    out["fleet_speedup_2chain"] = round(
+        two["samples_per_s"] / max(one["samples_per_s"], 1e-12), 3)
+    out["fleet_rounds_2chain"] = two["rounds"]
+    out["fleet_wall_s_1chain"] = round(one["wall_s"], 2)
+    out["fleet_wall_s_2chain"] = round(two["wall_s"], 2)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(
+        description="Fleet (data-parallel chains) scaling benchmark")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized run (half the batches)")
+    ap.add_argument("--out", default=None, metavar="FILE",
+                    help="write metrics JSON here")
+    args = ap.parse_args()
+    results = run(quick=args.quick)
+    for k, v in results.items():
+        print(f"{k} = {v}")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -104,3 +104,50 @@ class RunManifest:
             return RunManifest.load(directory)
         except (OSError, ValueError):
             return None
+
+
+FLEET_MANIFEST_NAME = "fleet.json"
+
+
+@dataclasses.dataclass
+class FleetManifest:
+    """Fleet-level sibling of ``RunManifest``: one ``fleet.json`` at the
+    fleet's ``run_dir`` root describing the data axis — the
+    ``run.RunConfig.fleet`` block (``config``) plus the supervisor's view
+    (``state``: live chains, published aggregation rounds, per-chain
+    incarnation counts). Each CHAIN keeps its own full ``RunManifest``
+    under ``run_dir/chain<i>/`` exactly as a single-chain run would, so
+    chain-level resume machinery is untouched; fleet-level resume (replay
+    this document) is future work and the version field gates it."""
+
+    config: dict
+    state: dict
+    version: int = 1
+
+    def to_doc(self) -> dict:
+        return {"version": self.version, "config": self.config,
+                "state": self.state}
+
+    @staticmethod
+    def from_doc(doc: dict) -> "FleetManifest":
+        if int(doc.get("version", 0)) != 1:
+            raise ValueError(
+                f"unsupported fleet manifest version {doc.get('version')!r}")
+        return FleetManifest(config=dict(doc.get("config", {})),
+                             state=dict(doc.get("state", {})),
+                             version=1)
+
+    def write(self, directory: str) -> str:
+        os.makedirs(directory, exist_ok=True)
+        path = os.path.join(directory, FLEET_MANIFEST_NAME)
+        atomic_write_json(path, self.to_doc())
+        return path
+
+    @staticmethod
+    def try_load(directory: str) -> Optional["FleetManifest"]:
+        try:
+            path = os.path.join(directory, FLEET_MANIFEST_NAME)
+            with open(path, encoding="utf-8") as f:
+                return FleetManifest.from_doc(json.load(f))
+        except (OSError, ValueError):
+            return None

@@ -114,6 +114,23 @@ def brute_force_partition(layer_times, out_sizes, capacities, bandwidths,
     return PartitionResult(points=best_pts, counts=counts, bottleneck=best)
 
 
+def solve_fleet_partitions(layer_times, out_sizes, chain_capacities,
+                           chain_bandwidths,
+                           comm_factor: float = 2.0) -> list[PartitionResult]:
+    """Per-chain §III-D over a fleet of M replicated pipelines: each chain
+    solves the DP over ITS OWN device capacities and links, so a fleet of
+    heterogeneous clusters stays balanced chain-by-chain — there is no
+    cross-chain coupling in the objective (chains only meet at the weight-
+    aggregation barrier, which is partition-agnostic on per-layer slices).
+
+    chain_capacities: [M][N_m] per-chain capacity vectors (possibly ragged)
+    chain_bandwidths: [M][N_m - 1] per-chain consecutive-link bandwidths
+    """
+    assert len(chain_capacities) == len(chain_bandwidths)
+    return [solve_partition(layer_times, out_sizes, caps, bws, comm_factor)
+            for caps, bws in zip(chain_capacities, chain_bandwidths)]
+
+
 def uniform_partition(num_layers: int, num_workers: int) -> PartitionResult:
     """PipeDream's initial homogeneous split (paper §III-B: 'assumes all the
     worker nodes have the same computing resources')."""

@@ -45,6 +45,9 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--momentum", type=float, default=0.0)
     ap.add_argument("--layers", type=int, default=8,
                     help="mlp chain depth (mobilenet is fixed at 19)")
+    ap.add_argument("--data-batches", type=int, default=None,
+                    help="distinct data batches to cycle over (default: "
+                         "8 for mlp, 4 for mobilenet)")
     ap.add_argument("--kill", default=None, metavar="DEV@BATCH",
                     help="crash worker DEV when BATCH commits, e.g. 1@12 "
                          "(a real SIGKILL under --transport tcp)")
@@ -74,9 +77,23 @@ def build_parser() -> argparse.ArgumentParser:
                     choices=["measured", "spec"])
     ap.add_argument("--chain-every", type=int, default=10)
     ap.add_argument("--global-every", type=int, default=20)
+    ap.add_argument("--repartition-first-at", type=int, default=5,
+                    help="batch of the first capacity-driven re-partition "
+                         "check (then every --repartition-every)")
     ap.add_argument("--repartition-every", type=int, default=15)
     ap.add_argument("--detect-timeout", type=float, default=0.5)
     ap.add_argument("--aggregate-every", type=int, default=0)
+    ap.add_argument("--chains", type=int, default=1,
+                    help="data-parallel fleet: train M replicated pipeline "
+                         "chains on disjoint shards of the batch stream, "
+                         "meeting every --fleet-every batches at a weight-"
+                         "aggregation barrier (runtime/fleet.py); 1 = the "
+                         "classic single-chain run")
+    ap.add_argument("--fleet-every", type=int, default=10,
+                    help="fleet aggregation period K: every K committed "
+                         "batches each chain contributes its packed per-"
+                         "layer weights and installs the fleet mean "
+                         "(only meaningful with --chains > 1)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--uncompiled", action="store_true",
                     help="legacy eager vjp + sgd_update hot path (the "
@@ -138,6 +155,9 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--transport", default="queue", choices=["queue", "tcp"],
                     help="queue = threads in one process; tcp = one OS "
                          "process per worker over runtime/net.py sockets")
+    ap.add_argument("--host", default="127.0.0.1",
+                    help="tcp without --role: bind/connect host for the "
+                         "locally-spawned cluster")
     ap.add_argument("--role", default=None,
                     choices=["coordinator", "worker"],
                     help="tcp only: run ONE process of a multi-host "
@@ -176,8 +196,34 @@ def _build_run_config(args, specs, kill):
     return dataclasses.replace(cfg, live=live)
 
 
+def _report_fleet(res, args):
+    """Fleet-run summary (``fleet.FleetResult``)."""
+    import numpy as np
+    print(f"live FTPipeHD fleet: {args.chains} chains x {args.workers} "
+          f"workers, {args.batches} batches, chain={args.chain}, "
+          f"transport={args.transport}, aggregate every "
+          f"{args.fleet_every} batches")
+    losses = [l for l in res.losses if np.isfinite(l)]
+    print(f"  fleet loss: {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"(median last 5: {np.median(losses[-5:]):.3f})")
+    for rec in res.rounds:
+        extra = (f", degraded {rec['degraded']}" if rec["degraded"] else "")
+        print(f"  round @batch {rec['batch']:4d}: contributors "
+              f"{rec['contributors']}{extra}")
+    for t, e in sorted(res.events):
+        print(f"  t={t:7.2f}s  {e}")
+    print(f"  incarnations: {res.incarnations}")
+    if res.chain_errors:
+        print(f"  chain errors: {res.chain_errors}")
+    if res.exitcodes:
+        print(f"  worker exit codes by chain: {res.exitcodes} "
+              f"(-9 = SIGKILLed)")
+
+
 def _report(res, args):
     import numpy as np
+    if getattr(args, "chains", 1) > 1:
+        return _report_fleet(res, args)
     print(f"live FTPipeHD run: {args.workers} workers, {args.batches} "
           f"batches, chain={args.chain}, transport={args.transport}, "
           f"hot path={'eager' if args.uncompiled else 'compiled'}"
@@ -247,6 +293,9 @@ def main():
         specs = [DeviceSpec(f"dev-{i}", c) for i, c in enumerate(caps)]
 
     cfg = _build_run_config(args, specs, _parse_at(args.kill))
+    assert args.chains == 1 or args.role is None, \
+        "--chains > 1 spawns its own per-chain clusters; --role " \
+        "(operator-managed processes) is single-chain only"
 
     if args.transport == "tcp" and args.role == "worker":
         # one process of a multi-host cluster: no coordinator facade here,

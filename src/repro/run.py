@@ -26,20 +26,21 @@ from typing import Optional
 
 from repro.checkpoint.manifest import RunManifest
 from repro.runtime import protocol as protocol_mod
+from repro.runtime.fleet import FleetConfig
 from repro.runtime.live import COORD, Coordinator, LiveConfig, LiveResult
 from repro.runtime.workload import WorkloadSpec
 
 # LiveConfig fields that do NOT round-trip through the manifest: runtime
 # objects (profile, device_specs, bandwidth), fault injection (fault,
-# kill, rejoin, join_after, netem — a resumed run must not replay the
-# crash schedule or the emulated network that produced the manifest),
-# per-process knobs (interpret), and the resume coordinates themselves
-# (run_dir/start_batch/resume are assigned by Run.resume, never
-# persisted).
+# kill, kill_all_at, rejoin, join_after, netem — a resumed run must not
+# replay the crash schedule or the emulated network that produced the
+# manifest), per-process knobs (interpret), and the resume coordinates
+# themselves (run_dir/start_batch/resume are assigned by Run.resume,
+# never persisted).
 _LIVE_SKIP = frozenset({
     "protocol", "profile", "device_specs", "bandwidth", "fault", "kill",
     "rejoin", "join_after", "interpret", "run_dir", "start_batch",
-    "resume", "netem",
+    "resume", "netem", "kill_all_at",
 })
 
 
@@ -58,6 +59,53 @@ def _live_from_doc(doc: dict) -> LiveConfig:
                       **{k: v for k, v in doc.items() if k in known})
 
 
+# One row per CLI flag: argparse dest -> (config group, config field,
+# fallback default for partial namespaces). This TABLE is the whole
+# CLI-to-config mapping — adding a flag is one argparse line in
+# launch/live_train.py plus one row here (tests/test_fleet.py guards the
+# two against drifting apart). Flags that need more than a rename are
+# finished in the explicit fixup pass inside ``from_args`` below.
+_ARG_MAP = {
+    # ---- workload (WorkloadSpec) ----------------------------------------
+    "chain":                ("workload", "kind", "mlp"),
+    "seed":                 ("workload", "seed", 0),
+    "layers":               ("workload", "num_layers", 8),
+    "batch_size":           ("workload", "batch_size", 16),
+    "data_batches":         ("workload", "num_data_batches", None),
+    # ---- protocol (ProtocolConfig) --------------------------------------
+    "chain_every":          ("protocol", "chain_every", 10),
+    "global_every":         ("protocol", "global_every", 20),
+    "repartition_first_at": ("protocol", "repartition_first_at", 5),
+    "repartition_every":    ("protocol", "repartition_every", 15),
+    "detect_timeout":       ("protocol", "detect_timeout", 0.5),
+    "refit_hysteresis":     ("protocol", "refit_hysteresis", None),
+    # ---- live (LiveConfig) ----------------------------------------------
+    "workers":              ("live", "num_workers", 3),
+    "batches":              ("live", "num_batches", 40),
+    "lr":                   ("live", "lr", 0.1),
+    "momentum":             ("live", "momentum", 0.0),
+    "aggregate_every":      ("live", "aggregate_every", 0),
+    "capacity_source":      ("live", "capacity_source", "measured"),
+    "emulate":              ("live", "emulate_capacity", False),
+    "uncompiled":           ("live", "compiled", False),   # inverted below
+    "wire_codec":           ("live", "wire_codec", False),
+    "wire_compress":        ("live", "wire_compress", "off"),
+    "wire_compress_replica": ("live", "wire_compress_replica", None),
+    "join_wait":            ("live", "join_wait", 20.0),
+    "reliable_wire":        ("live", "reliable_data", False),
+    "run_dir":              ("live", "run_dir", None),
+    "capacity_ema":         ("live", "capacity_ema", 0.0),
+    "static_partition":     ("live", "static_partition", False),
+    "netem":                ("live", "netem", None),       # parsed below
+    # ---- fleet (FleetConfig) --------------------------------------------
+    "chains":               ("fleet", "chains", 1),
+    "fleet_every":          ("fleet", "aggregate_every", 10),
+    # ---- run (RunConfig itself) -----------------------------------------
+    "transport":            ("run", "transport", "queue"),
+    "host":                 ("run", "host", "127.0.0.1"),
+}
+
+
 @dataclasses.dataclass
 class RunConfig:
     """Everything needed to launch (or relaunch) one training run.
@@ -65,10 +113,14 @@ class RunConfig:
     ``workload`` is the deterministic recipe every process rebuilds the
     model/data from (only tensors travel the wire); ``live`` carries the
     protocol + runtime knobs, including ``live.run_dir`` for durable
-    runs; ``transport`` picks the cluster substrate."""
+    runs; ``fleet`` adds the data axis (M replicated chains meeting at a
+    periodic weight-aggregation barrier — ``runtime/fleet.py``; the
+    default is a single chain, exactly the pre-fleet behavior);
+    ``transport`` picks the cluster substrate."""
 
     workload: WorkloadSpec = dataclasses.field(default_factory=WorkloadSpec)
     live: LiveConfig = dataclasses.field(default_factory=LiveConfig)
+    fleet: FleetConfig = dataclasses.field(default_factory=FleetConfig)
     transport: str = "queue"                    # "queue" | "tcp"
     host: str = "127.0.0.1"                     # tcp: bind/connect host
 
@@ -81,65 +133,56 @@ class RunConfig:
     @staticmethod
     def from_args(ns) -> "RunConfig":
         """Build from an argparse namespace (``launch/live_train.py``'s
-        flag set, underscores for dashes). Only attributes present on
-        ``ns`` are consulted, so partial namespaces (tests, embedding
-        CLIs) work; defaults mirror the CLI's. Fault injection (--kill /
-        --rejoin / --join-after) and per-host plumbing stay CLI-local —
-        they are applied on top and never serialized to a manifest."""
-        g = lambda name, default: getattr(ns, name, default)
-        kind = g("chain", "mlp")
-        workload = WorkloadSpec(
-            kind=kind, seed=g("seed", 0), num_layers=g("layers", 8),
-            batch_size=g("batch_size", 16),
-            num_data_batches=g("data_batches", 8 if kind == "mlp" else 4))
-        proto = protocol_mod.ProtocolConfig(
-            chain_every=g("chain_every", 10),
-            global_every=g("global_every", 20),
-            repartition_first_at=g("repartition_first_at", 5),
-            repartition_every=g("repartition_every", 15),
-            detect_timeout=g("detect_timeout", 0.5),
-            refit_hysteresis=g("refit_hysteresis", None))
-        live = LiveConfig(
-            num_workers=g("workers", 3), num_batches=g("batches", 40),
-            protocol=proto, lr=g("lr", 0.1), momentum=g("momentum", 0.0),
-            aggregate_every=g("aggregate_every", 0),
-            capacity_source=g("capacity_source", "measured"),
-            emulate_capacity=g("emulate", False),
-            compiled=not g("uncompiled", False),
-            wire_codec=g("wire_codec", False),
-            wire_compress=g("wire_compress", "off"),
-            wire_compress_replica=g("wire_compress_replica", None),
-            join_wait=g("join_wait", 20.0),
-            reliable_data=g("reliable_wire", False),
-            run_dir=g("run_dir", None),
-            capacity_ema=g("capacity_ema", 0.0),
-            static_partition=g("static_partition", False))
-        netem_arg = g("netem", None)
-        if netem_arg:
+        flag set, underscores for dashes) by walking ``_ARG_MAP``. Only
+        attributes present on ``ns`` are consulted, so partial namespaces
+        (tests, embedding CLIs) work; fallback defaults mirror the CLI's.
+        Fault injection (--kill / --rejoin / --join-after) and per-host
+        plumbing stay CLI-local — they are applied on top and never
+        serialized to a manifest."""
+        groups: dict = {"workload": {}, "protocol": {}, "live": {},
+                        "fleet": {}, "run": {}}
+        for dest, (group, field, default) in _ARG_MAP.items():
+            groups[group][field] = getattr(ns, dest, default)
+        # fixups — the few flags that are more than a rename:
+        w = groups["workload"]
+        if w.get("num_data_batches") is None:    # kind-dependent default
+            w["num_data_batches"] = 8 if w["kind"] == "mlp" else 4
+        lv = groups["live"]
+        lv["compiled"] = not lv["compiled"]      # dest is --uncompiled
+        if isinstance(lv.get("netem"), str):     # inline JSON or a path
             from repro.runtime.netem import NetemSpec
-            live = dataclasses.replace(
-                live, netem=(netem_arg if not isinstance(netem_arg, str)
-                             else NetemSpec.from_json(netem_arg)))
-        return RunConfig(workload=workload, live=live,
-                         transport=g("transport", "queue"),
-                         host=g("host", "127.0.0.1"))
+            lv["netem"] = NetemSpec.from_json(lv["netem"])
+        proto = protocol_mod.ProtocolConfig(**groups.pop("protocol"))
+        return RunConfig(workload=WorkloadSpec(**w),
+                         live=LiveConfig(protocol=proto, **lv),
+                         fleet=FleetConfig(**groups["fleet"]),
+                         **groups["run"])
 
     # ------------------------ manifest round-trip ------------------------
 
     def to_manifest(self) -> dict:
         """The plain-JSON ``config`` block of the run manifest — enough
         for ``from_manifest`` to rebuild an equivalent RunConfig in a
-        fresh process."""
-        return {"workload": dataclasses.asdict(self.workload),
+        fresh process. Block version 2 = fleet-aware (version 1 docs,
+        written before the ``fleet`` block existed, still load — they
+        mean a single-chain run)."""
+        return {"version": 2,
+                "workload": dataclasses.asdict(self.workload),
                 "live": _live_to_doc(self.live),
+                "fleet": self.fleet.to_doc(),
                 "transport": self.transport,
                 "host": self.host}
 
     @staticmethod
     def from_manifest(doc: dict) -> "RunConfig":
+        version = int(doc.get("version", 1))
+        if version not in (1, 2):
+            raise ValueError(
+                f"unsupported run-config version {version!r}")
         return RunConfig(
             workload=WorkloadSpec(**doc.get("workload", {})),
             live=_live_from_doc(doc.get("live", {})),
+            fleet=FleetConfig.from_doc(doc.get("fleet")),
             transport=doc.get("transport", "queue"),
             host=doc.get("host", "127.0.0.1"))
 
@@ -165,7 +208,8 @@ class Run:
         self.addr_of = addr_of
         self._thread: Optional[threading.Thread] = None
         self._coord: Optional[Coordinator] = None
-        self._result: Optional[LiveResult] = None
+        self._fleet = None               # FleetCoordinator (chains > 1)
+        self._result = None              # LiveResult | FleetResult
         self._error: Optional[BaseException] = None
         self._resume_state: Optional[dict] = None
         self._stop_wanted = False
@@ -205,7 +249,9 @@ class Run:
             self._thread.start()
         return self
 
-    def wait(self, timeout: Optional[float] = None) -> LiveResult:
+    def wait(self, timeout: Optional[float] = None):
+        """Join the run. Returns a ``LiveResult`` for single-chain runs,
+        a ``fleet.FleetResult`` when ``config.fleet.chains > 1``."""
         if self._thread is None:
             raise RuntimeError("run not started")
         self._thread.join(timeout)
@@ -224,7 +270,10 @@ class Run:
         with self._lock:
             self._stop_wanted = True
             coord = self._coord
-        if coord is not None:
+            fleet = self._fleet
+        if fleet is not None:
+            fleet.request_stop()
+        elif coord is not None:
             coord.request_stop()
 
     def _attach(self, coord: Coordinator) -> None:
@@ -235,30 +284,62 @@ class Run:
             coord.request_stop()
 
     def status(self) -> dict:
-        """Progress snapshot: lifecycle state, batches trained so far,
-        the coordinator transport's per-plane wire breakdown (``wire``:
-        total bytes plus act/grad/replica/control byte & message
-        counters), and — for durable runs — the manifest's last committed
-        batch (readable by ANY process, not just the owning one)."""
+        """Progress snapshot, in the nested fleet/chains schema
+        (docs/operations.md):
+
+            {"state", "transport",
+             "fleet":  {chains, live, rounds, aggregate_every, ...},
+             "chains": {chain_id: {"progress", "wire", "membership"}}}
+
+        A single-chain run is reported as a fleet of one (its chain id is
+        0). For durable runs the manifest's last committed batch rides in
+        ``chains[i]["progress"]["last_committed_manifest"]`` (readable by
+        ANY process, not just the owning one).
+
+        DEPRECATED top-level aliases — ``batches_done``, ``wire``,
+        ``last_committed`` — mirror chain 0 / the fleet max for one
+        release; read the nested schema instead."""
         if self._thread is None:
             state = "created"
         elif self._thread.is_alive():
             state = "running"
         else:
             state = "failed" if self._error is not None else "finished"
-        out = {"state": state, "transport": self.config.transport,
-               "batches_done": len(self._coord.loss_log)
-               if self._coord is not None else 0}
-        tstats = (getattr(self._coord.transport, "stats", None)
-                  if self._coord is not None else None)
-        if tstats is not None:
-            # Per-plane wire breakdown (act/grad/replica/control) — copies,
-            # so callers can't mutate the transport's live counters.
-            out["wire"] = {"bytes": tstats.get("bytes", 0),
-                           "kind_bytes": dict(tstats.get("kind_bytes", {})),
-                           "kind_msgs": dict(tstats.get("kind_msgs", {}))}
+        with self._lock:
+            coord, fleet = self._coord, self._fleet
+        out = {"state": state, "transport": self.config.transport}
+        if fleet is not None:
+            snap = fleet.status()
+        elif coord is not None:
+            snap = {"fleet": {"chains": 1, "live": [0],
+                              "aggregate_every": 0, "rounds": 0,
+                              "incarnations": {0: 1}},
+                    "chains": {0: coord.chain_status()}}
+        else:
+            snap = {"fleet": {"chains": self.config.fleet.chains,
+                              "live": [], "rounds": 0,
+                              "aggregate_every":
+                              self.config.fleet.aggregate_every,
+                              "incarnations": {}},
+                    "chains": {}}
+        out["fleet"] = snap["fleet"]
+        out["chains"] = snap["chains"]
         run_dir = self.config.live.run_dir
-        if run_dir:
+        if run_dir and self.config.fleet.chains == 1:
+            manifest = RunManifest.try_load(run_dir)
+            if 0 in out["chains"]:
+                out["chains"][0]["progress"]["last_committed_manifest"] = (
+                    manifest.last_committed if manifest is not None else -1)
+        # ---- deprecated flat aliases (one release; docs/operations.md) --
+        out["batches_done"] = max(
+            (c["progress"]["batches_done"] for c in out["chains"].values()),
+            default=0)
+        wire0 = out["chains"].get(0, {}).get("wire")
+        if wire0 is not None:
+            out["wire"] = {"bytes": wire0.get("bytes", 0),
+                           "kind_bytes": dict(wire0.get("kind_bytes", {})),
+                           "kind_msgs": dict(wire0.get("kind_msgs", {}))}
+        if run_dir and self.config.fleet.chains == 1:
             manifest = RunManifest.try_load(run_dir)
             out["last_committed"] = (manifest.last_committed
                                      if manifest is not None else -1)
@@ -274,8 +355,18 @@ class Run:
         except BaseException as exc:          # surfaced by wait()
             self._error = exc
 
-    def _run_impl(self) -> LiveResult:
+    def _run_impl(self):
         cfg = self.config
+        if cfg.fleet.chains > 1:
+            if self._resume_state is not None:
+                raise RuntimeError(
+                    "fleet resume is not supported yet — resume each "
+                    "chain's run_dir/chain<i> individually")
+            if self.addr_of is not None:
+                raise RuntimeError(
+                    "fleet runs manage their own clusters; --role "
+                    "attachment is single-chain only")
+            return self._run_fleet(cfg)
         if cfg.transport == "queue":
             return self._run_queue(cfg)
         if self._resume_state is not None:
@@ -283,6 +374,18 @@ class Run:
         if self.addr_of is not None:
             return self._run_tcp_attached(cfg, self.addr_of)
         return self._run_tcp_fresh(cfg)
+
+    def _run_fleet(self, cfg: RunConfig):
+        from repro.runtime.fleet import FleetCoordinator
+        fc = FleetCoordinator(cfg.workload, cfg.live, cfg.fleet,
+                              transport=cfg.transport, host=cfg.host,
+                              run_dir=cfg.live.run_dir)
+        with self._lock:
+            self._fleet = fc
+            wanted = self._stop_wanted
+        if wanted:
+            fc.request_stop()
+        return fc.run()
 
     def _run_queue(self, cfg: RunConfig) -> LiveResult:
         chain, batches = cfg.workload.build()

@@ -45,7 +45,6 @@ import time
 from typing import Any, Callable, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.manifest import RunManifest
@@ -60,12 +59,32 @@ from repro.core.redistribution import RedistributionPlan
 from repro.runtime import netem as netem_mod
 from repro.runtime import protocol
 from repro.runtime.devices import DeviceSpec, WorkloadProfile, uniform_bandwidth
-from repro.runtime.stage_executor import ChainLayout, StageExecutor
+from repro.runtime.stage_executor import (ChainLayout, StageExecutor,
+                                          aggregate_packed)
 from repro.runtime.transport import (FaultSpec, Heartbeat, Transport,
                                      TransportBase)
 from repro.runtime.workload import LayerChain
 
 COORD = -1          # coordinator control-plane node id on the transport
+
+
+class ChainCollapsedError(RuntimeError):
+    """A §III-F recovery would leave the chain below
+    ``LiveConfig.min_workers``: the chain fails FAST as a unit instead of
+    limping on as a straggler replica. Fleet runs (``runtime/fleet.py``)
+    catch this, degrade the fleet to the surviving chains, and re-admit a
+    relaunched chain at a later aggregation round; a single-chain run sees
+    it as a fatal error."""
+
+    def __init__(self, chain_id: int, survivors, dead):
+        super().__init__(
+            f"chain {chain_id} collapsed: survivors {sorted(survivors)} "
+            f"fell below the min_workers floor (dead: {sorted(dead)})")
+        self.chain_id = chain_id
+        self.survivors = sorted(survivors)
+        self.dead = sorted(dead)
+        self.worker_exitcodes: dict = {}     # filled by net.run_tcp_training
+        self.exitcode_history: dict = {}
 
 
 # ========================== vertical-sync stash ==========================
@@ -209,6 +228,20 @@ class LiveConfig:
     #   split at launch AND at every re-solve (recovery still re-splits
     #   over the survivor count) — the control arm the WAN heterogeneity
     #   bench compares the paper's dynamic partition against
+    # ---- fleet membership (data-parallel chains) ------------------------
+    min_workers: int = 1         # §III-F floor: a recovery that would leave
+    #   fewer live workers raises ChainCollapsedError instead of re-solving
+    #   — fleet chains fail fast as a unit (the fleet degrades to M-1 and
+    #   re-admits a fresh chain later) rather than limping as stragglers
+    kill_all_at: Optional[int] = None   # fault injection: kill EVERY
+    #   non-central worker when this batch commits — the whole-chain fault
+    #   of the fleet demo (works on both transports; over TCP each worker
+    #   process SIGKILLs itself)
+    collect_final: bool = False  # force a final global replication at the
+    #   end of the batch loop and snapshot the per-layer packed weights
+    #   into LiveResult.final_flats (fleet chains and the aggregation
+    #   bench need the finished model; off by default — one extra
+    #   replication round is not free)
 
     def wire_policy(self) -> wire_codec_mod.WirePolicy:
         """The compression tiers this config asks for, as the per-kind
@@ -245,6 +278,10 @@ class LiveResult:
     replica_report: dict = dataclasses.field(default_factory=dict)
     #   LayerReplicaStore.nbytes_report() of the coordinator's global
     #   store at teardown (includes the on-disk tier for durable runs)
+    final_flats: Optional[dict] = None
+    #   {layer -> packed flat f32 weights} of the finished model, snapshot
+    #   from the global store after a forced end-of-run replication —
+    #   only populated under ``LiveConfig.collect_final``
 
     @property
     def final_partition(self) -> tuple:
@@ -627,10 +664,10 @@ class Worker(threading.Thread):
                             stage, n, self.cfg.aggregate_every) == 0):
                     # paper §III-C: average the live concurrent versions and
                     # bump the counter (the Fig. 2 ver-3 -> ver-4 jump) —
-                    # on packed buffers this is one stacked mean
-                    mean = jnp.mean(jnp.stack(
+                    # the same packed-buffer mean the fleet barrier runs
+                    mean = aggregate_packed(
                         [self.stash.versions[v]
-                         for v in sorted(self.stash.versions)]), axis=0)
+                         for v in sorted(self.stash.versions)])
                     self.stash.push(self.stash.newest_v + 1, mean)
                 if stage > 0:
                     self.transport.send(self.dev, devs[stage - 1], "grad",
@@ -923,11 +960,21 @@ class Coordinator:
                  remote_devs: Optional[set] = None,
                  spawner: Optional[Callable[[int, int], None]] = None,
                  manifest_doc: Optional[dict] = None,
-                 resume_state: Optional[dict] = None):
+                 resume_state: Optional[dict] = None,
+                 aggregator=None, chain_id: int = 0,
+                 init_flats: Optional[dict] = None):
         self.chain = chain
         self.data_fn = data_fn
         self.cfg = cfg
         self.proto = cfg.protocol
+        # ---- fleet membership (data axis, runtime/fleet.py) -------------
+        self.aggregator = aggregator     # FleetAggregator barrier, or None
+        self.chain_id = chain_id         # this chain's id within the fleet
+        self.init_flats = init_flats     # {layer -> packed flat}: startup
+        #   weights for a chain re-admitted mid-run (seeded from the last
+        #   published fleet mean instead of init params)
+        self.final_flats: Optional[dict] = None
+        self._kill_all = cfg.kill_all_at
         N = cfg.num_workers
         self.specs = list(cfg.device_specs
                           or [DeviceSpec(f"dev-{i}") for i in range(N)])
@@ -957,6 +1004,8 @@ class Coordinator:
         # failures/joins); a fresh run starts with the launch set
         self._startup_ids = ([int(d) for d in ids] if ids
                              else list(range(N)))
+        self.worker_view = list(self._startup_ids)   # current membership,
+        #   mirrored from the batch loop for status()/kill_all targeting
         self.transport.register(COORD)
         for dev in set(range(N)) | set(self._startup_ids):
             self.transport.register(dev)
@@ -1030,6 +1079,27 @@ class Coordinator:
 
     def _log(self, text: str):
         self.events.append((time.monotonic() - self._t0, text))
+
+    def membership(self) -> dict:
+        """Live membership snapshot (nested ``Run.status()`` schema)."""
+        return {"workers": [int(d) for d in self.worker_view],
+                "incarnations": {int(d): int(self._inc.get(d, 0))
+                                 for d in self.worker_view},
+                "recoveries": len(self.recoveries),
+                "admissions": len(self.admissions)}
+
+    def chain_status(self) -> dict:
+        """This chain's block of the nested ``Run.status()`` schema
+        (``{"progress", "wire", "membership"}`` — docs/operations.md)."""
+        return {
+            "progress": {
+                "batches_done": len({b for b, _ in self.loss_log}),
+                "last_committed": int(self._committed),
+                "num_batches": int(self.cfg.num_batches),
+                "start_batch": int(self.cfg.start_batch)},
+            "wire": self.transport.stats_snapshot(),
+            "membership": self.membership(),
+        }
 
     def _send_all(self, worker_ids, kind, payload_fn):
         for i, dev in enumerate(worker_ids):
@@ -1109,6 +1179,16 @@ class Coordinator:
                     self._log(f"KILL worker dev{dev} @batch {msg.payload}")
                     self._kill_worker(dev)
                     del self._kill[dev]
+            if self._kill_all is not None and msg.payload >= self._kill_all:
+                # whole-chain fault injection (fleet demo): every worker
+                # except the central one dies at once — §III-F then trips
+                # the min_workers floor and the chain collapses as a unit
+                targets = [d for d in self.worker_view if d != 0]
+                self._kill_all = None
+                self._log(f"KILL chain: devs {targets} "
+                          f"@batch {msg.payload}")
+                for dev in targets:
+                    self._kill_worker(dev)
             for dev, rb in list(self._respawn.items()):
                 if msg.payload >= rb:
                     self._request_spawn(dev)
@@ -1451,6 +1531,17 @@ class Coordinator:
                             "stage_devs": list(worker_ids),
                             "need": plans[i].need, "local": plans[i].local,
                             "version": version, "addrs": addrs})
+        pending = self._await_ready(version, worker_ids)
+        missing = self._ready_missing.get(version, [])
+        if missing:
+            raise RuntimeError(f"redistribution left layers unserved: "
+                               f"{sorted(set(missing))}")
+        return pending
+
+    def _await_ready(self, version: int, worker_ids: list) -> list:
+        """Collect version-keyed ``ready`` acks with fail-fast probing
+        (shared by ``_redistribute`` and the fleet ``_install_all``).
+        Returns the devices that did NOT ack in time."""
         deadline = time.monotonic() + self.cfg.segment_timeout
 
         def _pending():
@@ -1475,11 +1566,68 @@ class Coordinator:
                     break                       # hand shortfall to caller
                 for d in stale:                 # transient: keep waiting
                     self._last_hb[d] = time.monotonic()
-        missing = self._ready_missing.get(version, [])
-        if missing:
-            raise RuntimeError(f"redistribution left layers unserved: "
-                               f"{sorted(set(missing))}")
         return _pending()
+
+    # ------------------- fleet aggregation (data axis) --------------------
+
+    def _install_all(self, flats: dict, part: PartitionResult,
+                     worker_ids: list, version: int) -> list:
+        """Rebroadcast fleet-aggregated weights through the existing
+        install path: every worker gets its stage's per-layer packed
+        slices and re-acks ``ready`` at ``version`` (installs are
+        idempotent per (range, version), so duplicates are safe). Returns
+        the devices that never acked — same contract as
+        ``_redistribute``, so callers reuse the shortfall machinery."""
+        self._ready_acks[version] = set()
+        self._ready_missing[version] = []
+        addrs = self._addrs_payload(worker_ids)
+        for i, dev in enumerate(worker_ids):
+            a, e = part.ranges[i]
+            self.transport.send(
+                COORD, dev, "install",
+                {"range": (a, e),
+                 "layers": {j: flats[j] for j in range(a, e + 1)},
+                 "version": version, "stage": i,
+                 "wire": self.wire.to_payload(), "addrs": addrs})
+        return self._await_ready(version, worker_ids)
+
+    def _fleet_sync(self, b0: int, part: PartitionResult, worker_ids: list,
+                    fresh_global: bool) -> list:
+        """Fleet weight-aggregation barrier (ROADMAP direction 2, see
+        docs/protocol.md §9). At a ``fleet_due`` boundary: (1) force a
+        global replication unless this boundary's cadence just did one —
+        per-sender FIFO guarantees the ``global_put``s precede their acks,
+        so the store now holds this chain's full post-b0 snapshot; (2)
+        contribute the per-layer packed slices to the fleet barrier and
+        block until it publishes (all live chains arrived, or the deadline
+        degraded the stragglers); (3) install the fleet mean back onto
+        every worker at ``version=b0``. Returns the install shortfall
+        (empty when nothing had to be installed)."""
+        if not fresh_global:
+            self._replicate(b0, False, True, part, worker_ids)
+        L = self.chain.num_layers
+        snap = {}
+        for j in range(L):
+            got = self.global_store.get(j, tier=LayerReplicaStore.GLOBAL)
+            if got is not None:
+                snap[j] = np.asarray(got[1])
+        if len(snap) < L:
+            # possible only if the forced replication above lost layers to
+            # a mid-boundary death; the liveness sweep will handle the
+            # corpse — contribute nothing rather than a partial model
+            self._log(f"fleet sync @batch {b0}: store covers "
+                      f"{len(snap)}/{L} layers — sitting this round out")
+            return []
+        agg = self.aggregator.aggregate(self.chain_id, b0, snap)
+        if agg is None:
+            # solo round (every other chain degraded/absent) or barrier
+            # closed: this chain's weights ARE the fleet state already
+            self._log(f"fleet sync @batch {b0}: solo round")
+            return []
+        pending = self._install_all(agg, part, worker_ids, version=b0)
+        if not pending:
+            self._log(f"fleet mean installed @batch {b0}")
+        return pending
 
     def _run_segment(self, b0: int, nb: int, part: PartitionResult,
                      worker_ids: list):
@@ -1571,6 +1719,17 @@ class Coordinator:
         teardown, manifest intact) — the ``Run.stop()`` entry point.
         Thread-safe; idempotent."""
         self._stop_requested.set()
+
+    def _startup_flats(self, a: int, e: int) -> dict:
+        """Fresh-run initial weights for layers [a, e]: the chain's init
+        params, unless this chain is being re-admitted to a fleet mid-run
+        (``init_flats``: the last published fleet mean — a rebooted chain
+        must rejoin the fleet's trajectory, not restart from scratch)."""
+        if self.init_flats is not None:
+            return {j: np.asarray(self.init_flats[j])
+                    for j in range(a, e + 1)}
+        return {j: self.layout.pack_layer(j, self.chain.params[j])
+                for j in range(a, e + 1)}
 
     def _resume_flats(self, a: int, e: int) -> dict:
         """Initial slice weights for layers [a, e] on a resumed run: the
@@ -1678,18 +1837,14 @@ class Coordinator:
             for i, dev in enumerate(worker_ids):
                 a, e = part.ranges[i]
                 if dev in self.workers:
-                    flats = (self._resume_flats(a, e) if cfg.resume else
-                             {j: self.layout.pack_layer(j,
-                                                        self.chain.params[j])
-                              for j in range(a, e + 1)})
+                    flats = (self._resume_flats(a, e) if cfg.resume
+                             else self._startup_flats(a, e))
                     self.workers[dev].install((a, e), flats, version=v0)
                 elif not cfg.resume:
-                    flats = {j: self.layout.pack_layer(j,
-                                                       self.chain.params[j])
-                             for j in range(a, e + 1)}
                     self.transport.send(COORD, dev, "install",
-                                        {"range": (a, e), "layers": flats,
-                                         "version": 0, "stage": i,
+                                        {"range": (a, e),
+                                         "layers": self._startup_flats(a, e),
+                                         "version": v0, "stage": i,
                                          "wire": self.wire.to_payload()})
             for w in self.workers.values():
                 w.start()
@@ -1732,7 +1887,8 @@ class Coordinator:
             transport_stats=self.transport.stats_snapshot(),
             stash_high_water=dict(self.stash_high_water),
             recoveries=self.recoveries, admissions=self.admissions,
-            replica_report=self.global_store.nbytes_report())
+            replica_report=self.global_store.nbytes_report(),
+            final_flats=self.final_flats)
 
     def _run_protocol(self, est, part, partitions, worker_ids, profile,
                       state):
@@ -1745,6 +1901,7 @@ class Coordinator:
         B = cfg.num_batches
         stall_at, stalls = -1, 0          # no-progress guard for restarts
         while b0 < B:
+            self.worker_view = list(worker_ids)
             if self._stop_requested.is_set():
                 self._log(f"stop requested @batch {b0}")
                 break
@@ -1870,6 +2027,19 @@ class Coordinator:
             if do_chain or do_global:
                 self._replicate(b0, do_chain, do_global, part, worker_ids)
 
+            # ---- fleet aggregation barrier (data axis) ------------------
+            if self.aggregator is not None and proto.fleet_due(b0):
+                shortfall = self._fleet_sync(b0, part, worker_ids,
+                                             fresh_global=do_global)
+                if shortfall:
+                    # a worker died while the fleet mean was being
+                    # installed: standard shortfall -> probe -> §III-F
+                    state.enter_recovery()
+                    worker_ids, part, est, b0 = self._handle_shortfall(
+                        shortfall, worker_ids, part, est, profile,
+                        state, partitions)
+                    continue
+
             # ---- dynamic re-partition (§III-D) --------------------------
             if proto.repartition_due(b0):
                 new_part = protocol.solve_from_estimates(
@@ -1896,6 +2066,21 @@ class Coordinator:
                         continue
                     part = new_part
                     partitions.append((b0, part.points))
+        self.worker_view = list(worker_ids)
+        if cfg.collect_final:
+            # one last global replication so the store holds the FINISHED
+            # weights, then snapshot them into the result (fleet chains
+            # average these into the fleet's final model; the aggregation
+            # bench evaluates accuracy on them)
+            self._replicate(b0, False, True, part, worker_ids)
+            L = self.chain.num_layers
+            snap = {}
+            for j in range(L):
+                got = self.global_store.get(j,
+                                            tier=LayerReplicaStore.GLOBAL)
+                if got is not None:
+                    snap[j] = np.asarray(got[1])
+            self.final_flats = snap if len(snap) == L else None
         return est, partitions
 
     def _handle_shortfall(self, shortfall, worker_ids, part, est, profile,
@@ -1924,6 +2109,18 @@ class Coordinator:
         self._log(f"failure detected: devs {sorted(dead)}; probing done")
         for dev in dead:      # ensure a non-responder is truly gone
             self._fence_worker(dev)
+        survivors = [d for d in worker_ids if d not in dead]
+        if len(survivors) < max(1, self.cfg.min_workers):
+            # whole-chain loss: recovering below the floor would leave a
+            # straggler replica, so the chain collapses as a unit — the
+            # fleet degrades to M-1 contributors and re-admits a fresh
+            # chain at a later aggregation round (runtime/fleet.py)
+            self._log(f"chain collapsed: {len(survivors)} survivors < "
+                      f"min_workers={self.cfg.min_workers}")
+            if self.aggregator is not None:
+                self.aggregator.chain_dead(self.chain_id)
+            raise ChainCollapsedError(self.chain_id, survivors,
+                                      sorted(dead))
         for dev in worker_ids:      # release anyone mid-refit fetching from
             if dev not in dead:     # the corpse — abandon, don't backstop
                 self.transport.send(COORD, dev, "refit_abort", {})

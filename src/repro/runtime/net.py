@@ -679,7 +679,9 @@ def coordinator_main(spec, cfg, addr_of: Dict[int, Addr],
 def run_tcp_training(spec, cfg, *, host: str = "127.0.0.1",
                      join_timeout: float = 15.0,
                      manifest_doc: Optional[dict] = None,
-                     on_coordinator=None):
+                     on_coordinator=None, aggregator=None, chain_id: int = 0,
+                     init_flats: Optional[dict] = None,
+                     addr_of: Optional[Dict[int, Addr]] = None):
     """Train over real OS processes: coordinator + worker 0 here, workers
     1..N-1 spawned as separate interpreters, all talking TCP through
     ``SocketTransport``. Returns the usual ``LiveResult`` with
@@ -693,12 +695,22 @@ def run_tcp_training(spec, cfg, *, host: str = "127.0.0.1",
     hot-joined one (its ``hello`` teaches the coordinator the route).
     ``LiveResult.exitcode_history`` then lists every incarnation's exit
     code in launch order (e.g. ``{1: [-9, 0]}`` for SIGKILL-then-rejoin);
-    ``worker_exitcodes`` keeps the LAST incarnation per device."""
+    ``worker_exitcodes`` keeps the LAST incarnation per device.
+
+    Fleet hooks (``runtime/fleet.py``): ``aggregator``/``chain_id``/
+    ``init_flats`` flow straight into the ``Coordinator`` so this cluster
+    can run as ONE CHAIN of a data-parallel fleet; ``addr_of`` lets the
+    fleet pre-allocate every chain's port map in one thread (free-port
+    probing races when chains launch concurrently). When the chain
+    collapses below ``cfg.min_workers`` the raised ``ChainCollapsedError``
+    is annotated with the worker exit codes before propagating, so the
+    fleet monitor sees the same post-mortem a ``LiveResult`` would carry."""
     import multiprocessing as mp
 
-    from repro.runtime.live import COORD, Coordinator
+    from repro.runtime.live import (COORD, ChainCollapsedError, Coordinator)
 
-    addr_of = cluster_addresses(cfg.num_workers, host)
+    if addr_of is None:
+        addr_of = cluster_addresses(cfg.num_workers, host)
     ctx = mp.get_context("spawn")
     history: Dict[int, list] = {
         dev: [ctx.Process(target=worker_main,
@@ -725,21 +737,38 @@ def run_tcp_training(spec, cfg, *, host: str = "127.0.0.1",
                                 netem=cfg.netem)
     coord = Coordinator(chain, lambda gb: batches[gb % len(batches)], cfg,
                         transport=transport, remote_devs=set(history),
-                        spawner=spawner, manifest_doc=manifest_doc)
+                        spawner=spawner, manifest_doc=manifest_doc,
+                        aggregator=aggregator, chain_id=chain_id,
+                        init_flats=init_flats)
     if on_coordinator is not None:
         on_coordinator(coord)            # hand the Run facade its handle
     try:
         res = coord.run()
+    except ChainCollapsedError as err:
+        _reap(history, join_timeout)
+        transport.close()
+        err.worker_exitcodes = {dev: ps[-1].exitcode
+                                for dev, ps in history.items()}
+        err.exitcode_history = {dev: [p.exitcode for p in ps]
+                                for dev, ps in history.items()}
+        raise
     finally:
-        for ps in history.values():
-            for p in ps:
-                p.join(timeout=join_timeout)
-                if p.is_alive():
-                    p.terminate()
-                    p.join(timeout=5.0)
+        _reap(history, join_timeout)
         transport.close()
     res.worker_exitcodes = {dev: ps[-1].exitcode
                             for dev, ps in history.items()}
     res.exitcode_history = {dev: [p.exitcode for p in ps]
                             for dev, ps in history.items()}
     return res
+
+
+def _reap(history: Dict[int, list], join_timeout: float) -> None:
+    """Join (then terminate) every spawned worker process. Idempotent —
+    the collapse path runs it before annotating the error, and the
+    ``finally`` runs it again as a no-op."""
+    for ps in history.values():
+        for p in ps:
+            p.join(timeout=join_timeout)
+            if p.is_alive():
+                p.terminate()
+                p.join(timeout=5.0)

@@ -50,6 +50,11 @@ class ProtocolConfig:
     # suppressed while a genuine capacity shift still refits at the
     # first due batch.
     refit_hysteresis: Optional[float] = None
+    # Fleet weight-aggregation barrier cadence (data-parallel chains,
+    # ROADMAP direction 2): every ``fleet_every`` committed batches the
+    # chain syncs its global replica and contributes it to the fleet-wide
+    # per-layer average. 0 = single-chain run, no barrier.
+    fleet_every: int = 0
 
     def replication_due(self, batch: int) -> tuple[bool, bool]:
         """(chain, global) replication due at this batch boundary."""
@@ -59,6 +64,11 @@ class ProtocolConfig:
     def repartition_due(self, batch: int) -> bool:
         return (batch == self.repartition_first_at
                 or (batch > 0 and batch % self.repartition_every == 0))
+
+    def fleet_due(self, batch: int) -> bool:
+        """Fleet aggregation barrier due at this batch boundary."""
+        return (self.fleet_every > 0 and batch > 0
+                and batch % self.fleet_every == 0)
 
     def control_points(self, num_batches: int, *, dynamic: bool = True,
                        extra: Sequence[int] = ()) -> list[int]:
@@ -70,6 +80,9 @@ class ProtocolConfig:
             pts.add(k * self.chain_every)
         for k in range(1, num_batches // self.global_every + 1):
             pts.add(k * self.global_every)      # global need not align w/ chain
+        if self.fleet_every > 0:
+            for k in range(1, num_batches // self.fleet_every + 1):
+                pts.add(k * self.fleet_every)   # fleet barriers drain too
         if dynamic:
             pts.add(self.repartition_first_at)
             for k in range(1, num_batches // self.repartition_every + 1):
@@ -78,6 +91,27 @@ class ProtocolConfig:
 
 
 # --------------------------- decision helpers ----------------------------
+
+def aggregation_ready(live: Sequence[int], arrived: Sequence[int],
+                      waited: float,
+                      deadline: float) -> tuple[bool, frozenset]:
+    """Fleet-barrier readiness (data-parallel chains): should the round
+    publish NOW, and which live chains get degraded for missing it?
+
+    * every live chain arrived                 -> publish, degrade nobody;
+    * deadline elapsed and >= 1 chain arrived  -> publish over the arrivals,
+      degrade the stragglers (the fleet runs at M-1 until they re-admit);
+    * otherwise                                -> keep waiting.
+
+    Pure so both transports (and the tests) share one decision — parity
+    between queue and TCP fleets falls out of this function.
+    """
+    live_s, arrived_s = frozenset(live), frozenset(arrived)
+    if live_s and live_s <= arrived_s:
+        return True, frozenset()
+    if waited >= deadline and arrived_s:
+        return True, live_s - arrived_s
+    return False, frozenset()
 
 def _estimated_caps(worker_ids: Sequence[int],
                     est: CapacityEstimator) -> np.ndarray:

@@ -36,6 +36,12 @@ class AsyncTrainingExecutor:
     update_fn: Callable[[list, list, Any], tuple[list, Any]]
     opt_state: Any
     aggregate_every: int = 0                 # 0 = off (PipeDream semantics)
+    aggregate_op: Optional[Callable[[int, list], Any]] = None
+    #   (layer, [candidate pytrees]) -> mean pytree. None = plain
+    #   ``tree_mean`` over the pytree leaves; ``fleet.layer_aggregate_op``
+    #   routes it through the live runtime's packed-flat-buffer mean
+    #   (``stage_executor.aggregate_packed``) instead, so this oracle and
+    #   the live/fleet runtimes aggregate with the SAME arithmetic.
 
     def __post_init__(self):
         n = self.num_stages
@@ -43,6 +49,11 @@ class AsyncTrainingExecutor:
         self._layer_stage = []
         for s, c in enumerate(self.assignment):
             self._layer_stage += [s] * c
+
+    def _mean_layer(self, layer: int, trees: list):
+        if self.aggregate_op is not None:
+            return self.aggregate_op(layer, trees)
+        return tree_mean(trees)
 
     def _aggregate(self, params: list) -> list:
         """Per-stage windowed mean over the last (n - i) live versions."""
@@ -52,8 +63,8 @@ class AsyncTrainingExecutor:
         for layer, s in enumerate(self._layer_stage):
             k = max(1, min(n - s, len(live)))
             versions = live[-k:]
-            out[layer] = tree_mean(
-                [self.stash.versions[v][layer] for v in versions])
+            out[layer] = self._mean_layer(
+                layer, [self.stash.versions[v][layer] for v in versions])
         return out
 
     def run(self, params: list, batches: list, *,

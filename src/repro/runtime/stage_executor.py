@@ -53,6 +53,16 @@ from repro.optim.sgd import sgd_update
 from repro.runtime.qtensor import DeviceQuantized
 
 
+def aggregate_packed(bufs) -> jnp.ndarray:
+    """Mean of same-shape packed flat f32 buffers — THE weight-aggregation
+    op of the runtime, shared by §III-C stash averaging
+    (``runtime/live.Worker``), the semantics oracle's pluggable aggregate
+    hook, and the fleet barrier (``runtime/fleet.py``): one stacked ``jnp``
+    mean over the flat layout, so data-parallel averaging costs a couple of
+    vector ops regardless of the layer's pytree structure."""
+    return jnp.mean(jnp.stack([jnp.asarray(b) for b in bufs]), axis=0)
+
+
 # ============================ packed layouts =============================
 
 @dataclasses.dataclass(frozen=True)

@@ -123,7 +123,22 @@ class WorkloadSpec:
     num_classes: int = 4             # mlp default; mobilenet uses 10
     num_data_batches: int = 8        # distinct batches, cycled over
     batch_size: int = 16
+    noise: float = 0.3               # class-template noise scale (higher =
+    #                                  harder task; Fig. 4 uses ~1.0)
     image_hw: int = 16               # mobilenet input resolution
+    # Data-parallel fleet sharding: chain m of an M-chain fleet trains on
+    # batches[shard_index::shard_count] — disjoint strided shards of the
+    # same deterministic stream, identical model init (seed is shared).
+    # Defaults keep single-chain specs (and old manifests) byte-identical.
+    shard_index: int = 0
+    shard_count: int = 1
+
+    def shard(self, index: int, count: int) -> "WorkloadSpec":
+        """This spec restricted to shard ``index`` of ``count`` (fleet
+        chains): same model, disjoint slice of the batch stream."""
+        assert 0 <= index < count, (index, count)
+        return dataclasses.replace(self, shard_index=index,
+                                   shard_count=count)
 
     def build(self) -> tuple[LayerChain, list]:
         """(chain, batches) — identical on every process for equal specs."""
@@ -136,7 +151,7 @@ class WorkloadSpec:
             batches = classification_batches(
                 "mlp", self.num_data_batches, batch=self.batch_size,
                 seed=self.seed, in_dim=self.in_dim,
-                num_classes=self.num_classes)
+                num_classes=self.num_classes, noise=self.noise)
         elif self.kind == "mobilenet":
             chain = mobilenet_chain(key, num_classes=10)
             batches = classification_batches(
@@ -144,6 +159,12 @@ class WorkloadSpec:
                 seed=self.seed, image_hw=self.image_hw, num_classes=10)
         else:
             raise ValueError(f"unknown workload kind {self.kind!r}")
+        if self.shard_count > 1:
+            batches = batches[self.shard_index::self.shard_count]
+            if not batches:
+                raise ValueError(
+                    f"shard {self.shard_index}/{self.shard_count} of "
+                    f"{self.num_data_batches} data batches is empty")
         return chain, batches
 
 
@@ -191,7 +212,8 @@ def mobilenet_chain(key, num_classes: int = 10) -> LayerChain:
 
 def classification_batches(chain_kind: str, num_batches: int, batch: int,
                            seed: int = 0, image_hw: int = 16,
-                           in_dim: int = 8, num_classes: int = 4):
+                           in_dim: int = 8, num_classes: int = 4,
+                           noise: float = 0.3):
     """Deterministic learnable batches (class-template + noise, mirroring
     data/synthetic.py). Returns list of {"x", "labels"} dicts."""
     rng = np.random.default_rng(seed)
@@ -203,7 +225,7 @@ def classification_batches(chain_kind: str, num_batches: int, batch: int,
     out = []
     for _ in range(num_batches):
         labels = rng.integers(0, num_classes, batch)
-        x = templates[labels] + 0.3 * rng.normal(
+        x = templates[labels] + noise * rng.normal(
             0, 1, (batch,) + templates.shape[1:]).astype(np.float32)
         out.append({"x": jnp.asarray(x, jnp.float32),
                     "labels": jnp.asarray(labels, jnp.int32)})

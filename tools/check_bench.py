@@ -46,6 +46,12 @@ process), so there is no committed baseline to drift:
 Unlike the relative gates below, a metric missing from a --wan result is
 a FAILURE: the WAN gates are this benchmark's entire reason to run.
 
+Fleet-scaling mode (``--fleet FILE``, likewise baseline-free): gates a
+fresh ``bench_fleet.py`` result — the 2-chain data-parallel fleet must
+reach >= 1.5x the single chain's samples/s on the same box, and must
+have crossed the weight-aggregation barrier at least once while doing
+it. A metric missing from a --fleet result is a FAILURE.
+
 Usage (what CI runs)::
 
     python benchmarks/bench_live_throughput.py --quick --out bench_current.json
@@ -54,6 +60,9 @@ Usage (what CI runs)::
 
     python benchmarks/bench_wan_validation.py --quick --out wan_current.json
     python tools/check_bench.py --wan wan_current.json
+
+    python benchmarks/bench_fleet.py --quick --out fleet_current.json
+    python tools/check_bench.py --fleet fleet_current.json
 
 If the regression is REAL and intended (e.g. a correctness fix that costs
 throughput), refresh the baseline locally and commit it::
@@ -189,6 +198,44 @@ def check_wan(current: dict) -> list[str]:
     return failures
 
 
+# Fleet gates: same shape as WAN_GATES. Machine-independent by
+# construction (the 1-chain and 2-chain fleets ran on the same box in the
+# same process, with the same sleep-emulated device speeds), so there is
+# no committed baseline. Missing metric = FAILURE.
+FLEET_GATES = [
+    ("fleet_samples_per_s_2chain", "fleet_samples_per_s_1chain", 1.50,
+     "2-chain data-parallel fleet throughput over a single chain"),
+    ("fleet_rounds_2chain", None, 1.0,
+     "the 2-chain run must cross the aggregation barrier at least once "
+     "(otherwise the speedup is measured without the fleet's sync cost)"),
+]
+
+
+def check_fleet(current: dict) -> list[str]:
+    """Failure messages for the fleet-scaling gates (empty = pass)."""
+    failures = []
+    for num, den, floor, meaning in FLEET_GATES:
+        missing = [k for k in (num, den) if k and k not in current]
+        if missing:
+            failures.append(
+                f"{'/'.join(missing)}: missing from results — the fleet "
+                f"benchmark did not run to completion")
+            continue
+        if den is None:
+            val = float(current[num])
+            if val < floor:
+                failures.append(f"{num} ({meaning}): {val:.3f} "
+                                f"< floor {floor:.2f}")
+            continue
+        ratio = float(current[num]) / max(float(current[den]), 1e-12)
+        if ratio < floor:
+            failures.append(
+                f"{num}/{den} ({meaning}): {float(current[num]):.1f} / "
+                f"{float(current[den]):.1f} = {ratio:.2f}x "
+                f"< floor {floor:.2f}x")
+    return failures
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(
         description="Fail on live-throughput perf regressions vs the "
@@ -204,7 +251,32 @@ def main() -> int:
     ap.add_argument("--wan", metavar="FILE",
                     help="gate a bench_wan_validation.py result instead "
                          "(absolute gates, no baseline)")
+    ap.add_argument("--fleet", metavar="FILE",
+                    help="gate a bench_fleet.py result instead "
+                         "(relative gates within one run, no baseline)")
     args = ap.parse_args()
+
+    if args.fleet:
+        try:
+            with open(args.fleet) as f:
+                current = json.load(f)
+        except (OSError, ValueError) as e:
+            print(f"check_bench: cannot read fleet results "
+                  f"{args.fleet}: {e}")
+            return 2
+        failures = check_fleet(current)
+        if failures:
+            print(f"check_bench: {len(failures)} fleet gate failure(s):")
+            for msg in failures:
+                print("  " + msg)
+            return 1
+        speedup = (float(current["fleet_samples_per_s_2chain"])
+                   / float(current["fleet_samples_per_s_1chain"]))
+        print(f"check_bench: fleet OK — 2-chain speedup {speedup:.2f}x "
+              f"(floor 1.50x) across "
+              f"{int(current['fleet_rounds_2chain'])} aggregation "
+              f"round(s)")
+        return 0
 
     if args.wan:
         try:
