@@ -23,3 +23,21 @@ def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
     from jax.experimental.shard_map import shard_map as legacy
     return legacy(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                   check_rep=check_vma)
+
+
+def cost_analysis(compiled) -> dict:
+    """``Compiled.cost_analysis()`` as a flat dict. Modern jax returns the
+    dict directly; 0.4.x returns a one-element list of per-program dicts."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)
+
+
+def shard_map_is_legacy() -> bool:
+    """True when we fall back to ``jax.experimental.shard_map``. Its
+    transpose rule mis-partitions residuals when a *secondary* output is
+    param-dependent in the linearized jaxpr (raises a raw ``_SpecError``),
+    so callers must keep auxiliary outputs out of the differentiated graph
+    on such installs."""
+    return getattr(jax, "shard_map", None) is None

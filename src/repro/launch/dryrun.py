@@ -68,7 +68,8 @@ def lower_combo(arch: str, shape_id: str, multi_pod: bool, overrides=None):
         t_compile = time.time() - t0 - t_lower
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    from repro import compat
+    cost = compat.cost_analysis(compiled)
     coll_hlo = analysis.collective_bytes(compiled.as_text())
 
     # roofline from the analytic per-device cost model (raw HLO counts each

@@ -118,6 +118,20 @@ def build_parser() -> argparse.ArgumentParser:
                          "(chain_put/global_put); default: follow "
                          "--wire-compress. §III-F redistribution payloads "
                          "are always exact f32 regardless")
+    ap.add_argument("--overlap-replication", action="store_true",
+                    help="overlap-everything scheduler: §III-E replica "
+                         "shipments (and admission capacity probes) leave "
+                         "the control point as a snapshot + immediate ack "
+                         "and the bytes ride the NEXT segment's compute; "
+                         "seeding and barrier rounds still drain "
+                         "(docs/protocol.md §10). Off = drain mode, the "
+                         "control arm of the WAN bench")
+    ap.add_argument("--repl-delta", default="counters",
+                    choices=["counters", "bytes"],
+                    help="§III-E delta-skip detector: 'counters' uses the "
+                         "StageExecutor's O(1) per-layer change counters; "
+                         "'bytes' keeps the legacy per-layer byte compare "
+                         "against shadow copies")
     ap.add_argument("--netem", default=None, metavar="JSON|FILE",
                     help="WAN emulation: a NetemSpec as inline JSON or a "
                          "path to a JSON file (schema in docs/operations.md "

@@ -77,6 +77,14 @@ def pipeline_forward(mesh, cfg: ModelConfig, blocks, x, pad_mask, *,
                                dtype=dtype, causal=causal, window=window,
                                kv_source=kv_in, active=pad_row[j])
                 xx, a = BLOCKS[t].apply(slots[j], xx, ctx)
+                if compat.shard_map_is_legacy():
+                    # Legacy shard_map cannot transpose a shard_map whose
+                    # secondary output (or scan carry feeding it) is
+                    # param-dependent — residual misalignment in jax<0.5
+                    # raises a raw _SpecError. Report the load-balance aux
+                    # without a grad path; aux-loss training needs modern
+                    # jax.
+                    a = jax.lax.stop_gradient(a)
                 aux = aux + a
             return xx, aux
 

@@ -96,6 +96,8 @@ _ARG_MAP = {
     "run_dir":              ("live", "run_dir", None),
     "capacity_ema":         ("live", "capacity_ema", 0.0),
     "static_partition":     ("live", "static_partition", False),
+    "overlap_replication":  ("live", "overlap_replication", False),
+    "repl_delta":           ("live", "repl_delta", "counters"),
     "netem":                ("live", "netem", None),       # parsed below
     # ---- fleet (FleetConfig) --------------------------------------------
     "chains":               ("fleet", "chains", 1),

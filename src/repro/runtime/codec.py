@@ -80,7 +80,13 @@ TIERS = ("off", "fp16", "int8", "int8-fused")
 
 # message-kind classes a WirePolicy assigns tiers to (docs/protocol.md §3)
 DATA_KINDS = frozenset({"act", "grad"})          # activations + cotangents
-REPLICA_KINDS = frozenset({"chain_put", "global_put"})   # §III-E snapshots
+# §III-E snapshots. The ov_ variants are the overlap scheduler's deferred
+# shipments (identical payload + store semantics, sent during the next
+# segment's compute instead of inside the control-point drain) — a
+# distinct wire kind so transport stats can attribute the overlapped
+# bytes separately (transport.KIND_CLASSES "replica_ov").
+REPLICA_KINDS = frozenset({"chain_put", "global_put",
+                           "ov_chain_put", "ov_global_put"})
 
 # data-plane kinds covered by the transports' seq/ack retransmit window
 # (docs/protocol.md §7): a reliable sender wraps the payload as

@@ -242,6 +242,20 @@ class LiveConfig:
     #   into LiveResult.final_flats (fleet chains and the aggregation
     #   bench need the finished model; off by default — one extra
     #   replication round is not free)
+    # ---- overlap-everything scheduler (ROADMAP direction 5) -------------
+    overlap_replication: bool = False   # §III-E replication (and §III-D
+    #   admission capacity probes) leave the control point as a snapshot
+    #   + immediate ack; the replica bytes ship DURING the next segment's
+    #   compute instead of inside the drain. Seeding rounds (batch 0,
+    #   post-admission re-seed) and barrier rounds (fleet sync, final
+    #   collect) always drain. Off = drain mode, the control arm the WAN
+    #   bench compares against (docs/protocol.md §10)
+    repl_delta: str = "counters"        # §III-E delta-skip detector:
+    #   "counters" consults the StageExecutor's O(1) per-layer change
+    #   counters (a layer whose counter matches the last ship is skipped
+    #   without touching its bytes); "bytes" keeps the legacy per-layer
+    #   byte compare against a shadow copy (exact, but O(bytes) per layer
+    #   per peer at every control point)
 
     def wire_policy(self) -> wire_codec_mod.WirePolicy:
         """The compression tiers this config asks for, as the per-kind
@@ -282,6 +296,11 @@ class LiveResult:
     #   {layer -> packed flat f32 weights} of the finished model, snapshot
     #   from the global store after a forced end-of-run replication —
     #   only populated under ``LiveConfig.collect_final``
+    shipped_gens: dict = dataclasses.field(default_factory=dict)
+    #   dev -> newest replication generation (batch stamp) that device
+    #   reported FULLY shipped (its overlap queue drained) — the
+    #   coordinator's in-flight-replication bookkeeping, piggybacked on
+    #   seg_done; empty in drain mode
 
     @property
     def final_partition(self) -> tuple:
@@ -345,8 +364,23 @@ class Worker(threading.Thread):
         self._execs: dict[tuple, StageExecutor] = {}
         # §III-E delta-plus-skip: per-peer shadow of the packed layer
         # slices last shipped there, keyed by (tier, peer node) — unchanged
-        # layers are named instead of resent (see _delta_layers)
+        # layers are named instead of resent (see _delta_layers). In
+        # counters mode the shadow holds (batch, change-counter) pairs
+        # instead of byte copies.
         self._repl_shadow: dict[tuple, dict[int, np.ndarray]] = {}
+        self._gen_shadow: dict[tuple, dict[int, tuple[int, int]]] = {}
+        # overlap scheduler: replica shipments deferred past the control
+        # point — (dest, kind, payload, commit) tuples drained one per op
+        # during the next segment's compute (and in idle loop gaps). The
+        # payload arrays are snapshots taken at the control point, so
+        # training ahead of the queue cannot tear them.
+        self._pending_ship: list[tuple] = []
+        self._ship_gen = -1       # generation of the queued shipments
+        self._shipped_gen = -1    # newest generation fully on the wire
+        # change-counter bumps for writes that bypass the fused step
+        # (aggregation's stash push); added on top of the executors'
+        # per-step counters by _gen_of
+        self._extra_gen = 0
         self._acts: dict[int, Any] = {}
         self._grads: dict[int, Any] = {}
         # acts/grads that arrived for a segment we have not ENTERED yet:
@@ -397,6 +431,13 @@ class Worker(threading.Thread):
         # the slice (and possibly the membership around it) changed: every
         # delta-skip shadow is stale — the next replication resends in full
         self._repl_shadow.clear()
+        self._gen_shadow.clear()
+        # overlap: un-shipped replica snapshots predate this install's
+        # topology (their chain_to / store routing is from the old epoch) —
+        # drop them. Receivers simply keep their last COMPLETE generation;
+        # the coordinator re-seeds in full after every recovery/admission.
+        self._pending_ship.clear()
+        self._extra_gen += 1       # installed weights differ from any shadow
         # boundary shapes may have changed with the slice; quantization
         # error carried against the old boundary is meaningless now
         self._act_res = None
@@ -466,6 +507,9 @@ class Worker(threading.Thread):
                     last_hello = now
             msg = self.transport.recv(self.dev, timeout=self.cfg.poll)
             if msg is None:
+                # idle gap between segments: drain any replica shipments
+                # the overlap scheduler deferred past the control point
+                self._ship_pending()
                 continue
             greeted = True
             k = msg.kind
@@ -483,7 +527,7 @@ class Worker(threading.Thread):
                 self._do_install(msg.payload)
             elif k == "fetch_req":
                 self._serve_fetch(msg)
-            elif k == "chain_put":
+            elif k in ("chain_put", "ov_chain_put"):
                 self._store_chain(msg.payload)
             elif k == "probe":
                 self.transport.send(self.dev, COORD, "probe_ack",
@@ -518,7 +562,7 @@ class Worker(threading.Thread):
         elif k == "probe":
             self.transport.send(self.dev, COORD, "probe_ack",
                                 {"status": "ok"})
-        elif k == "chain_put":
+        elif k in ("chain_put", "ov_chain_put"):
             self._store_chain(msg.payload)
         elif k == "fetch_req":
             self._serve_fetch(msg)
@@ -594,6 +638,10 @@ class Worker(threading.Thread):
         for idx, op in enumerate(ops):
             if self.stop_event.is_set() or self.abort_event.is_set():
                 break
+            # overlap scheduler: interleave ONE deferred replica shipment
+            # per op, so the §III-E bytes ride this segment's compute
+            # instead of a control-point drain
+            self._ship_pending(limit=1)
             gb = b0 + op.batch
             if op.kind == "fwd":
                 if stage == 0:
@@ -669,6 +717,8 @@ class Worker(threading.Thread):
                         [self.stash.versions[v]
                          for v in sorted(self.stash.versions)])
                     self.stash.push(self.stash.newest_v + 1, mean)
+                    self._extra_gen += 1   # stash write outside the fused
+                    #                        step: keep change counters honest
                 if stage > 0:
                     self.transport.send(self.dev, devs[stage - 1], "grad",
                                         (self._seg_id, op.batch, g_x))
@@ -682,12 +732,18 @@ class Worker(threading.Thread):
                     b0 + nb if nf is None else nf, n))
             done_ops += 1
         self.stash.prune(sched.version_for_batch(b0 + nb, n))
+        # flush whatever overlap shipments the segment's ops did not cover:
+        # the control point that follows may replicate again (superseding
+        # these) or enter recovery — either way the queue must be empty by
+        # seg_done so fault-path behavior is deterministic
+        self._ship_pending()
         self.transport.send(self.dev, COORD, "seg_done",
                             {"stage": stage, "busy": busy, "nb": nb,
                              "batch_times": sorted(batch_times.values()),
                              "seg_id": self._seg_id,
                              "ops_done": done_ops, "aborted":
                              done_ops < len(ops),
+                             "shipped_gen": self._shipped_gen,
                              "stash_high_water": self.stash.high_water})
 
     # --------------------------- control plane ---------------------------
@@ -755,29 +811,109 @@ class Worker(threading.Thread):
 
         return changed, same, commit
 
+    def _gen_of(self, j: int) -> int:
+        """Monotonic change generation of layer ``j``'s packed weights:
+        the executors' per-step counters plus the worker-level bumps for
+        writes outside the fused step (aggregation, install). Counters
+        from retired executors (old slices) only ever add a frozen base —
+        monotonicity is all the delta-skip needs."""
+        g = self._extra_gen
+        for ex in self._execs.values():
+            g += ex.change_counts.get(j, 0)
+        return g
+
+    def _delta_counters(self, peer_key: tuple, snap: dict, batch: int,
+                        full: bool):
+        """Counters-mode delta-skip (``LiveConfig.repl_delta``): same
+        contract as ``_delta_layers`` but a layer is proven unchanged by
+        its change counter matching the one shadowed at the last ship —
+        O(1) per layer, no byte copy, no compare. Conservative in the
+        safe direction: a step that happened to rewrite identical bytes
+        still bumps the counter and re-ships."""
+        if full:
+            self._gen_shadow.pop(peer_key, None)
+        shadow = self._gen_shadow.setdefault(peer_key, {})
+        changed, same, pending = {}, {}, {}
+        for j, arr in snap.items():
+            gen = self._gen_of(j)
+            prev = shadow.get(j)
+            if prev is not None and prev[1] == gen:
+                same[j] = prev[0]
+            else:
+                changed[j] = arr
+            pending[j] = (batch, gen)
+
+        def commit():
+            shadow.update(pending)
+
+        return changed, same, commit
+
+    def _ship_pending(self, limit: Optional[int] = None) -> None:
+        """Send up to ``limit`` (None = all) queued overlap shipments.
+        Each shipment is ONE message per (tier, peer) — atomic on the
+        wire, so a receiver only ever stores complete snapshot
+        generations (torn-write rule, docs/protocol.md §10). A send
+        refused by a dead peer is dropped WITHOUT committing its shadow:
+        the next round re-ships those layers."""
+        sent = 0
+        while self._pending_ship:
+            dest, kind, payload, commit = self._pending_ship.pop(0)
+            if self.transport.send(self.dev, dest, kind, payload):
+                commit()
+            sent += 1
+            if limit is not None and sent >= limit:
+                break
+        if not self._pending_ship:
+            self._shipped_gen = max(self._shipped_gen, self._ship_gen)
+
     def _do_replicate(self, spec: dict):
         if self.stash is None:
             return            # admitted but not yet installed: nothing to
             #                   snapshot; the coordinator's short ack window
             #                   tolerates the missing ack
+        # a previous overlapped round still queued (very tight cadence or
+        # an aborted segment): flush it first — per-peer compare-and-stamp
+        # chains assume ships arrive in commit order
+        self._ship_pending()
         snap = self._snapshot()
         full = bool(spec.get("full"))
+        overlap = bool(spec.get("overlap"))
+        delta = (self._delta_counters if self.cfg.repl_delta == "counters"
+                 else self._delta_layers)
+        ships = []
         if spec["chain"]:
-            changed, same, commit = self._delta_layers(
+            changed, same, commit = delta(
                 ("chain", spec["chain_to"]), snap, spec["batch"], full)
-            if self.transport.send(self.dev, spec["chain_to"], "chain_put",
-                                   {"batch": spec["batch"],
-                                    "layers": changed, "same": same}):
-                commit()
+            ships.append((spec["chain_to"],
+                          "ov_chain_put" if overlap else "chain_put",
+                          {"batch": spec["batch"],
+                           "layers": changed, "same": same}, commit))
         if spec["global"]:
-            changed, same, commit = self._delta_layers(
+            changed, same, commit = delta(
                 ("global", COORD), snap, spec["batch"], full)
-            if self.transport.send(self.dev, COORD, "global_put",
-                                   {"batch": spec["batch"],
-                                    "layers": changed, "same": same}):
-                commit()
+            ships.append((COORD,
+                          "ov_global_put" if overlap else "global_put",
+                          {"batch": spec["batch"],
+                           "layers": changed, "same": same}, commit))
+        if overlap:
+            # the snapshot views are immutable jax buffers retained by the
+            # payloads (training pushes NEW buffers; only momentum is ever
+            # donated) — queuing them is torn-write-safe without a copy.
+            # Ack NOW: the control point's job was the snapshot, the bytes
+            # ride the next segment (_run_segment / idle-loop _ship_pending)
+            self._pending_ship.extend(ships)
+            self._ship_gen = spec["batch"]
+            if not ships:
+                self._shipped_gen = max(self._shipped_gen, spec["batch"])
+        else:
+            for dest, kind, payload, commit in ships:
+                if self.transport.send(self.dev, dest, kind, payload):
+                    commit()
+            self._ship_gen = spec["batch"]
+            self._shipped_gen = max(self._shipped_gen, spec["batch"])
         self.transport.send(self.dev, COORD, "replicated",
-                            {"stage": spec["stage"]})
+                            {"stage": spec["stage"], "overlap": overlap,
+                             "gen": spec["batch"]})
 
     def _store_chain(self, payload: dict):
         self.replicas.put_many(payload["batch"], payload["layers"],
@@ -966,7 +1102,16 @@ class Coordinator:
         self.chain = chain
         self.data_fn = data_fn
         self.cfg = cfg
+        # LiveConfig.overlap_replication mirrors into the shared protocol
+        # decision layer, so the simulator run with the same
+        # ProtocolConfig predicts exactly the control points live executes
         self.proto = cfg.protocol
+        if cfg.overlap_replication and not self.proto.overlap_replication:
+            self.proto = dataclasses.replace(self.proto,
+                                             overlap_replication=True)
+        self.shipped_gens: dict[int, int] = {}   # dev -> newest FULLY
+        #   shipped replication generation (from seg_done piggyback) —
+        #   in-flight-replication bookkeeping for the overlap scheduler
         # ---- fleet membership (data axis, runtime/fleet.py) -------------
         self.aggregator = aggregator     # FleetAggregator barrier, or None
         self.chain_id = chain_id         # this chain's id within the fleet
@@ -1151,7 +1296,10 @@ class Coordinator:
             self._ready_acks.setdefault(v, set()).add(msg.src)
             self._ready_missing.setdefault(v, []).extend(
                 msg.payload.get("missing", []))
-        elif msg.kind == "global_put":
+        elif msg.kind in ("global_put", "ov_global_put"):
+            # ov_global_put is the overlap scheduler's deferred shipment —
+            # same store semantics, distinct wire kind so transport stats
+            # attribute the overlapped bytes (kind class "replica_ov")
             self.global_store.put_many(msg.payload["batch"],
                                        msg.payload["layers"])
             # delta-skip: layers the sender verified unchanged since its
@@ -1161,6 +1309,10 @@ class Coordinator:
         elif msg.kind == "hb":
             self._last_hb[msg.src] = time.monotonic()
         elif msg.kind == "seg_done":
+            sg = msg.payload.get("shipped_gen", -1)
+            if sg >= 0:
+                self.shipped_gens[msg.src] = max(
+                    self.shipped_gens.get(msg.src, -1), sg)
             if msg.payload.get("seg_id") == self._cur_seg:
                 self._done[msg.src] = msg.payload
                 self.stash_high_water[msg.src] = max(
@@ -1217,6 +1369,21 @@ class Coordinator:
         cur = self._pending_joins.get(dev)
         if cur is None or inc > cur["inc"]:
             self._pending_joins[dev] = {"inc": inc, "addr": addr}
+            if (self.proto.overlap_replication
+                    and self.cfg.capacity_source != "spec"):
+                # overlap scheduler: launch the §III-D capacity probe at
+                # hello time, so the joiner measures DURING the current
+                # segment and `_joiner_capacity` finds the ack already
+                # waiting instead of stalling admission on a fresh probe
+                if addr is not None:
+                    self.transport.add_route(dev, addr)
+                self.transport.register(dev)
+                self.transport.revive(dev)
+                self._cap_acks.pop(dev, None)
+                self.transport.send(
+                    COORD, dev, "cap_probe",
+                    {"range": (0, self.chain.num_layers - 1),
+                     "repeats": 3})
 
     def _kill_worker(self, dev: int) -> None:
         """Inject a fatal fault. In-process workers crash directly (queue
@@ -1307,15 +1474,19 @@ class Coordinator:
         if self.cfg.capacity_source == "spec":
             c0 = self.specs[0].capacity_at(b0)
             return self.specs[dev].capacity_at(b0) / max(c0, 1e-12)
-        self._cap_acks.pop(dev, None)
-        L = self.chain.num_layers
-        self.transport.send(COORD, dev, "cap_probe",
-                            {"range": (0, L - 1), "repeats": 3})
-        deadline = time.monotonic() + max(2.0, 5 * self.proto.detect_timeout)
-        while dev not in self._cap_acks and time.monotonic() < deadline:
-            msg = self.transport.recv(COORD, timeout=self.cfg.poll)
-            if msg is not None:
-                self._absorb(msg)
+        if dev not in self._cap_acks:
+            # no hello-time probe answered yet (drain mode, or the early
+            # probe raced the joiner's bring-up): probe now and wait
+            L = self.chain.num_layers
+            self.transport.send(COORD, dev, "cap_probe",
+                                {"range": (0, L - 1), "repeats": 3})
+            deadline = time.monotonic() + max(2.0,
+                                              5 * self.proto.detect_timeout)
+            while dev not in self._cap_acks \
+                    and time.monotonic() < deadline:
+                msg = self.transport.recv(COORD, timeout=self.cfg.poll)
+                if msg is not None:
+                    self._absorb(msg)
         ack = self._cap_acks.pop(dev, None)
         if ack is None:
             self._log(f"cap_probe dev{dev}: no answer, assuming C=1.0")
@@ -1449,17 +1620,22 @@ class Coordinator:
 
     def _replicate(self, batch: int, do_chain: bool, do_global: bool,
                    part: PartitionResult, worker_ids: list,
-                   full: bool = False):
+                   full: bool = False, barrier: bool = False):
         """``full`` forces a whole-slice resend (delta-skip shadows
         discarded): set at batch 0 and when re-seeding after an elastic
         admission — a peer with a fresh (empty) store must never be
-        'skipped' into a coverage hole."""
+        'skipped' into a coverage hole. ``barrier`` marks a round whose
+        caller needs the receiving store complete on return (fleet sync,
+        final collect): it drains even under ``overlap_replication`` —
+        the shared ``ProtocolConfig.replication_mode`` decision."""
         n = len(worker_ids)
+        mode = self.proto.replication_mode(seeding=full, barrier=barrier)
+        overlap = mode == "overlap"
         self._send_all(worker_ids, "replicate",
                        lambda i, dev: {"batch": batch, "chain": do_chain,
                                        "global": do_global, "stage": i,
                                        "chain_to": worker_ids[(i + 1) % n],
-                                       "full": full})
+                                       "full": full, "overlap": overlap})
         # short ack window: a worker that died right at the segment boundary
         # (its seg_done already sent) must not stall the control plane for
         # segment_timeout — the NEXT segment's heartbeat monitor will catch
@@ -1468,11 +1644,13 @@ class Coordinator:
                             timeout=max(1.0, 2 * self.proto.detect_timeout))
         kind = ("chain+global" if do_chain and do_global
                 else "chain" if do_chain else "global")
+        tag = " (overlapped)" if overlap else ""
         if got < n:
-            self._log(f"{kind} replication @batch {batch}: only {got}/{n} "
-                      f"acks — continuing, failure detection will follow")
+            self._log(f"{kind} replication @batch {batch}{tag}: only "
+                      f"{got}/{n} acks — continuing, failure detection "
+                      f"will follow")
         else:
-            self._log(f"{kind} replication @batch {batch}")
+            self._log(f"{kind} replication @batch {batch}{tag}")
         if do_global:
             # per-sender FIFO puts every worker's global_put ahead of its
             # "replicated" ack, so by now the store holds this round's
@@ -1604,7 +1782,10 @@ class Coordinator:
         every worker at ``version=b0``. Returns the install shortfall
         (empty when nothing had to be installed)."""
         if not fresh_global:
-            self._replicate(b0, False, True, part, worker_ids)
+            # barrier: the aggregate below reads the store NOW, so this
+            # round must drain even under the overlap scheduler
+            self._replicate(b0, False, True, part, worker_ids,
+                            barrier=True)
         L = self.chain.num_layers
         snap = {}
         for j in range(L):
@@ -1888,7 +2069,8 @@ class Coordinator:
             stash_high_water=dict(self.stash_high_water),
             recoveries=self.recoveries, admissions=self.admissions,
             replica_report=self.global_store.nbytes_report(),
-            final_flats=self.final_flats)
+            final_flats=self.final_flats,
+            shipped_gens=dict(self.shipped_gens))
 
     def _run_protocol(self, est, part, partitions, worker_ids, profile,
                       state):
@@ -2029,8 +2211,12 @@ class Coordinator:
 
             # ---- fleet aggregation barrier (data axis) ------------------
             if self.aggregator is not None and proto.fleet_due(b0):
+                # an OVERLAPPED cadence round above has not landed in the
+                # store yet — the barrier must run its own drained round
+                fresh = (do_global
+                         and proto.replication_mode() == "drain")
                 shortfall = self._fleet_sync(b0, part, worker_ids,
-                                             fresh_global=do_global)
+                                             fresh_global=fresh)
                 if shortfall:
                     # a worker died while the fleet mean was being
                     # installed: standard shortfall -> probe -> §III-F
@@ -2071,8 +2257,10 @@ class Coordinator:
             # one last global replication so the store holds the FINISHED
             # weights, then snapshot them into the result (fleet chains
             # average these into the fleet's final model; the aggregation
-            # bench evaluates accuracy on them)
-            self._replicate(b0, False, True, part, worker_ids)
+            # bench evaluates accuracy on them). Barrier: the snapshot
+            # below reads the store immediately, so never overlap it
+            self._replicate(b0, False, True, part, worker_ids,
+                            barrier=True)
             L = self.chain.num_layers
             snap = {}
             for j in range(L):

@@ -55,6 +55,37 @@ class ProtocolConfig:
     # chain syncs its global replica and contributes it to the fleet-wide
     # per-layer average. 0 = single-chain run, no barrier.
     fleet_every: int = 0
+    # Overlap-everything scheduler (ROADMAP direction 5): a due replication
+    # leaves the control point as a SNAPSHOT plus an immediate ack; the
+    # replica bytes ship during the next segment's compute instead of
+    # inside the drain. Seeding rounds (batch 0, post-admission re-seed)
+    # and barrier rounds (fleet sync, final collect) still drain — their
+    # callers need the receiving store complete before the next decision.
+    overlap_replication: bool = False
+
+    def replication_mode(self, *, seeding: bool = False,
+                         barrier: bool = False) -> str:
+        """``'overlap' | 'drain'`` for a replication at a control point.
+        ONE decision point shared by the live coordinator and the
+        simulator, so the simulator keeps predicting what live executes
+        when ``overlap_replication`` is on."""
+        if self.overlap_replication and not (seeding or barrier):
+            return "overlap"
+        return "drain"
+
+    def replication_blocking_cost(self, chain_c: float,
+                                  global_c: float, *,
+                                  seeding: bool = False,
+                                  barrier: bool = False) -> float:
+        """Wall-clock a replication round holds the pipeline drained for.
+        Drain mode pays the full serialized transfer; overlap mode pays
+        only the snapshot + ack round trip (the bytes ride the next
+        segment) — capped at the drain cost, since snapshotting a slice
+        can never hold the pipeline longer than also shipping it."""
+        if self.replication_mode(seeding=seeding,
+                                 barrier=barrier) == "overlap":
+            return min(self.commit_rtt, chain_c + global_c)
+        return chain_c + global_c
 
     def replication_due(self, batch: int) -> tuple[bool, bool]:
         """(chain, global) replication due at this batch boundary."""

@@ -52,6 +52,7 @@ class SimConfig:
     probe_rtt: float = 0.05
     commit_rtt: float = 0.05
     comm_factor: float = 2.0              # fwd activation + bwd gradient
+    overlap_replication: bool = False     # §III-E off the critical path
 
     @property
     def protocol(self) -> protocol.ProtocolConfig:
@@ -60,7 +61,8 @@ class SimConfig:
             repartition_first_at=self.repartition_first_at,
             repartition_every=self.repartition_every,
             detect_timeout=self.detect_timeout, probe_rtt=self.probe_rtt,
-            commit_rtt=self.commit_rtt, comm_factor=self.comm_factor)
+            commit_rtt=self.commit_rtt, comm_factor=self.comm_factor,
+            overlap_replication=self.overlap_replication)
 
 
 @dataclasses.dataclass
@@ -250,16 +252,21 @@ class PipelineSimulator:
             # ---- replication -------------------------------------------
             do_chain, do_global = proto.replication_due(b0)
             if do_chain or do_global:
-                c = 0.0
-                if do_chain:
-                    c += protocol.chain_cost(cfg.profile, cfg.bandwidth,
-                                             part, worker_ids)
-                if do_global:
-                    c += protocol.global_cost(cfg.profile, cfg.bandwidth,
-                                              part, worker_ids)
+                cc = (protocol.chain_cost(cfg.profile, cfg.bandwidth,
+                                          part, worker_ids)
+                      if do_chain else 0.0)
+                gc = (protocol.global_cost(cfg.profile, cfg.bandwidth,
+                                           part, worker_ids)
+                      if do_global else 0.0)
+                # same decision point live consults: overlapped rounds only
+                # hold the drain for the snapshot+ack round trip — the
+                # bytes ride the next segment's compute
+                c = proto.replication_blocking_cost(cc, gc)
+                mode = proto.replication_mode()
                 kind = ("chain+global" if do_chain and do_global
                         else "chain" if do_chain else "global")
-                events.append((t, f"{kind} replication {c:.3f}s"))
+                suffix = " (overlapped)" if mode == "overlap" else ""
+                events.append((t, f"{kind} replication {c:.3f}s{suffix}"))
                 t += c
 
             # ---- dynamic re-partition ----------------------------------

@@ -189,6 +189,15 @@ class StageExecutor:
         self.last = last
         self.compiled = compiled
         ids = slice_layout.layer_ids
+        # §III-E overlap scheduler: O(1) per-layer change counters, bumped
+        # by every fused step (the whole packed slice is rewritten by
+        # fused_sgd). The worker snapshots these alongside the weight
+        # buffer; a counter equal to the one shadowed at the last ship
+        # proves the layer unchanged WITHOUT the byte compare
+        # (``Worker._delta_layers`` counters mode). Monotonic — external
+        # writes that bypass the step (aggregation, install) are counted
+        # by the worker on top.
+        self.change_counts: dict[int, int] = {j: 0 for j in ids}
         if interpret is None:
             interpret = default_interpret()
 
@@ -341,7 +350,12 @@ class StageExecutor:
         x = self._coerce(x)
         if ct is not None:
             ct = self._coerce(ct)
+        self._bump_counts()
         return self._step(fwd_buf, new_buf, mom_buf, x, ct, batch)
+
+    def _bump_counts(self) -> None:
+        for j in self.slice.layer_ids:
+            self.change_counts[j] += 1
 
     def step_q(self, fwd_buf, new_buf, mom_buf, x, ct=None, batch=None,
                res=None):
@@ -353,6 +367,7 @@ class StageExecutor:
         x = self._coerce(x)
         if ct is not None:
             ct = self._coerce(ct)
+        self._bump_counts()
         q, lo, scale, res2, ok, z, p_new, m_new = self._step_q(
             fwd_buf, new_buf, mom_buf, x, ct, res, batch)
         if bool(ok):

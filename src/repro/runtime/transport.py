@@ -94,8 +94,11 @@ def payload_bytes(payload: Any) -> int:
 #: Message-kind classes used by the per-kind stats breakdown. ``act`` and
 #: ``grad`` are singled out (they are the two data-plane directions whose
 #: compression tier differs per run); everything in ``codec.REPLICA_KINDS``
-#: is ``replica``; the rest of the protocol catalog is ``control``.
-KIND_CLASSES = ("act", "grad", "replica", "control")
+#: is ``replica`` — except the overlap scheduler's deferred shipments
+#: (``ov_chain_put``/``ov_global_put``), attributed to ``replica_ov`` so
+#: stats show which replica bytes rode a segment instead of a drain; the
+#: rest of the protocol catalog is ``control``.
+KIND_CLASSES = ("act", "grad", "replica", "replica_ov", "control")
 
 
 def kind_class(kind: str) -> str:
@@ -103,7 +106,7 @@ def kind_class(kind: str) -> str:
     if kind in ("act", "grad"):
         return kind
     if kind in wire.REPLICA_KINDS:
-        return "replica"
+        return "replica_ov" if kind.startswith("ov_") else "replica"
     return "control"
 
 

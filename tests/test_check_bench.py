@@ -127,7 +127,17 @@ WAN_HEALTHY = {
     "wan_fidelity_min": 0.97,
     "wan_static_batch_ms": 1500.0,
     "wan_dynamic_batch_ms": 420.0,     # 3.6x speedup
+    "wan_drain_batch_ms": 220.0,
+    "wan_overlap_batch_ms": 160.0,     # 1.375x overlap speedup
 }
+
+
+def test_wan_gate_fires_below_overlap_floor():
+    slow = dict(WAN_HEALTHY)
+    slow["wan_overlap_batch_ms"] = 200.0     # only 1.10x
+    failures = check_bench.check_wan(slow)
+    assert len(failures) == 1
+    assert "wan_drain_batch_ms" in failures[0] and "1.10x" in failures[0]
 
 
 def test_wan_gate_passes_on_healthy_results():

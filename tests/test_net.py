@@ -307,7 +307,8 @@ class TestPerKindStats:
             for _ in range(5):
                 assert b.recv(1, timeout=5.0) is not None
             km, kb = b.stats["kind_msgs"], b.stats["kind_bytes"]
-            assert km == {"act": 1, "grad": 2, "replica": 1, "control": 1}
+            assert km == {"act": 1, "grad": 2, "replica": 1,
+                          "replica_ov": 0, "control": 1}
             assert kb["grad"] > kb["act"] > 0
             assert kb["replica"] > 0 and kb["control"] > 0
             assert sum(kb.values()) == b.stats["bytes"]
@@ -330,12 +331,15 @@ class TestPerKindStats:
             t.send(0, 1, kind, (0, 0, x))
             assert t.recv(1, timeout=1.0) is not None
         km = t.stats["kind_msgs"]
-        assert km == {"act": 1, "grad": 1, "replica": 1, "control": 2}
+        assert km == {"act": 1, "grad": 1, "replica": 1,
+                      "replica_ov": 0, "control": 2}
         assert sum(t.stats["kind_bytes"].values()) == t.stats["bytes"]
         # kind_class is the single source of the mapping
         assert kind_class("act") == "act" and kind_class("grad") == "grad"
         assert kind_class("chain_put") == kind_class("global_put") \
             == "replica"
+        assert kind_class("ov_chain_put") == kind_class("ov_global_put") \
+            == "replica_ov"
         for k in ("install", "fetch_res", "hello", "hb", "commit"):
             assert kind_class(k) == "control"
 
@@ -361,7 +365,7 @@ class TestPerKindStats:
         wire = status["wire"]
         assert wire["bytes"] > 0
         assert set(wire["kind_bytes"]) \
-            == {"act", "grad", "replica", "control"}
+            == {"act", "grad", "replica", "replica_ov", "control"}
         assert wire["kind_bytes"]["act"] > 0
         assert wire["kind_msgs"]["control"] > 0
         # mutating the copy must not touch the transport's counters

@@ -1,0 +1,402 @@
+"""Overlap-everything scheduler (docs/protocol.md §10): replication and
+capacity probes off the critical path.
+
+Property pass: an overlapped run's replica stores — the coordinator's
+global tier and every worker's chain tier — hold EXACTLY the drain-mode
+contents at every committed generation (same layer sets, same bytes, same
+delta/compare-and-stamp decisions), queue-vs-TCP decision parity holds for
+the overlap path under the same NetemSpec, and the simulator still
+predicts the live decision trace with overlap enabled.
+
+Chaos pass: SIGKILL a worker while its replication shipment is in flight
+(queue and TCP transports) and once mid-``cap_probe`` — §III-F recovery
+restores from the last complete snapshot generation, never a torn one:
+every message a store absorbed covers one contiguous stage range at one
+batch stamp (the §10 atomicity rule), and training completes finite.
+"""
+import zlib
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint.replication_store import LayerReplicaStore
+from repro.runtime import live as live_mod
+from repro.runtime.devices import (DeviceSpec, WorkloadProfile,
+                                   uniform_bandwidth)
+from repro.runtime.live import Coordinator, LiveConfig, run_live_training
+from repro.runtime.net import run_tcp_training
+from repro.runtime.netem import NetemSpec
+from repro.runtime.protocol import ProtocolConfig
+from repro.runtime.simulator import PipelineSimulator, SimConfig
+from repro.runtime.workload import (WorkloadSpec, classification_batches,
+                                    mlp_chain)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _chain_and_data(num_layers=8, num_batches=8, batch=16):
+    chain = mlp_chain(KEY, num_layers=num_layers)
+    data = classification_batches("mlp", num_batches, batch=batch, seed=0)
+    return chain, data
+
+
+def _fixed_profile(num_layers=8):
+    """Synthetic profile + capacity_source='spec' make every control
+    decision a pure function of the config — overlap/drain and queue/TCP
+    runs must then agree exactly."""
+    return WorkloadProfile(fwd_times=np.full(num_layers, 1e-3),
+                           bwd_times=np.full(num_layers, 2e-3),
+                           out_bytes=np.full(num_layers, 1024.0),
+                           weight_bytes=np.full(num_layers, 2048.0))
+
+
+def _det_cfg(**kw):
+    d = dict(
+        num_workers=3, num_batches=12,
+        protocol=ProtocolConfig(chain_every=4, global_every=8,
+                                repartition_first_at=10_000,
+                                repartition_every=10_000,
+                                detect_timeout=1.0),
+        lr=0.1,
+        device_specs=[DeviceSpec("central", 1.0), DeviceSpec("peer", 1.0),
+                      DeviceSpec("slow", 2.0)],
+        bandwidth=uniform_bandwidth(3, 1e9),
+        profile=_fixed_profile(), capacity_source="spec")
+    d.update(kw)
+    return LiveConfig(**d)
+
+
+# ================= recording store (per-generation history) ==============
+
+def _digest(params) -> int:
+    h = 0
+    for leaf in jax.tree_util.tree_leaves(params):
+        a = np.ascontiguousarray(np.asarray(leaf))
+        h = zlib.crc32(a.tobytes(), h)
+    return h
+
+
+class _RecordingStore(LayerReplicaStore):
+    """LayerReplicaStore that journals every absorbed message. One wire
+    message = one ``put_many`` followed by one ``refresh`` (live.py's
+    ``_absorb`` / ``_store_chain``), so the history is strictly paired —
+    the torn-write audit below leans on that."""
+
+    def __init__(self):
+        super().__init__()
+        self.history = []        # ("put", batch, tier, {layer: crc32})
+        #                        # ("refresh", batch, tier, {layer: prev})
+
+    def put_many(self, batch, layers, tier=LayerReplicaStore.GLOBAL):
+        self.history.append(("put", int(batch), tier,
+                             {int(j): _digest(p)
+                              for j, p in layers.items()}))
+        super().put_many(batch, layers, tier)
+
+    def refresh(self, batch, same, tier=LayerReplicaStore.GLOBAL):
+        self.history.append(("refresh", int(batch), tier,
+                             {int(j): int(b) for j, b in same.items()}))
+        return super().refresh(batch, same, tier)
+
+
+def _by_generation(history):
+    """{batch stamp -> sorted multiset of events} — message ORDER within a
+    generation is transport timing (threads race), the CONTENT per
+    generation is protocol."""
+    out = {}
+    for op, batch, tier, summary in history:
+        out.setdefault(batch, []).append(
+            (op, tier, tuple(sorted(summary.items()))))
+    return {g: sorted(v) for g, v in out.items()}
+
+
+def _recorded_run(chain, data, cfg, monkeypatch):
+    """Run live training with every replica store journaling; returns
+    (result, coordinator-global-store, {dev: worker-chain-store})."""
+    monkeypatch.setattr(live_mod, "LayerReplicaStore", _RecordingStore)
+    coord = Coordinator(chain, lambda gb: data[gb % len(data)], cfg)
+    res = coord.run()
+    return res, coord.global_store, {d: w.replicas
+                                     for d, w in coord.workers.items()}
+
+
+def _audit_untorn(store, num_layers):
+    """§10 atomicity: every absorbed message — its put plus its
+    compare-and-stamp refresh — carries ONE batch stamp and covers one
+    CONTIGUOUS layer range (a complete stage snapshot). A receiver can
+    therefore never observe a torn generation."""
+    h = store.history
+    assert len(h) % 2 == 0, "unpaired put/refresh — message not atomic"
+    for put, ref in zip(h[::2], h[1::2]):
+        assert put[0] == "put" and ref[0] == "refresh"
+        assert put[1] == ref[1] and put[2] == ref[2], \
+            "put and its refresh disagree on generation/tier"
+        covered = sorted(set(put[3]) | set(ref[3]))
+        if covered:
+            lo, hi = covered[0], covered[-1]
+            assert covered == list(range(lo, hi + 1)), \
+                f"torn snapshot: non-contiguous layer set {covered}"
+            assert 0 <= lo and hi < num_layers
+
+
+# ====================== property: overlap == drain =======================
+
+@pytest.mark.live
+@settings(max_examples=3, deadline=None)
+@given(ce=st.integers(2, 4), gmul=st.integers(1, 2),
+       nb=st.integers(9, 13))
+def test_overlap_store_matches_drain_at_every_generation(ce, gmul, nb):
+    """The §10 guarantee, as a property over cadences and horizons: for
+    EVERY committed generation, the overlapped run's replica stores absorb
+    exactly the messages the drain run's do — same layer sets, same
+    payload bytes (crc), same delta/compare-and-stamp choices — on the
+    global tier and on every worker's chain tier. Overlap moves bytes off
+    the critical path; it must not change a single one of them."""
+    chain, data = _chain_and_data(num_batches=8)
+    runs = {}
+    for overlap in (False, True):
+        cfg = _det_cfg(num_batches=nb,
+                       protocol=ProtocolConfig(
+                           chain_every=ce, global_every=ce * gmul,
+                           repartition_first_at=10_000,
+                           repartition_every=10_000, detect_timeout=1.0),
+                       overlap_replication=overlap)
+        with pytest.MonkeyPatch.context() as mp:
+            runs[overlap] = _recorded_run(chain, data, cfg, mp)
+
+    (res_d, gstore_d, chains_d) = runs[False]
+    (res_o, gstore_o, chains_o) = runs[True]
+
+    # identical losses (the ISSUE's 0.001 parity bound; in practice exact)
+    np.testing.assert_allclose(res_o.losses, res_d.losses,
+                               rtol=1e-6, atol=1e-3)
+
+    # global tier: message-for-message equal at every generation
+    gens_d = _by_generation(gstore_d.history)
+    gens_o = _by_generation(gstore_o.history)
+    assert sorted(gens_d) == sorted(gens_o), "different committed gens"
+    for g in gens_d:
+        assert gens_d[g] == gens_o[g], f"global tier diverges @gen {g}"
+
+    # chain tier, per receiving worker
+    assert sorted(chains_d) == sorted(chains_o)
+    for dev in chains_d:
+        cd = _by_generation(chains_d[dev].history)
+        co = _by_generation(chains_o[dev].history)
+        assert cd == co, f"chain tier diverges on dev{dev}"
+
+    # the final stores agree too (stamps AND bytes)
+    assert gstore_d.batches() == gstore_o.batches()
+    for j, (b, p) in ((j, gstore_o.get(j)) for j in gstore_o.batches()):
+        assert _digest(p) == _digest(gstore_d.get(j)[1])
+
+    # the overlapped run really overlapped: ov_* wire class carried the
+    # replica bytes, and the in-flight bookkeeping drained fully
+    kb_o = res_o.transport_stats["kind_bytes"]
+    kb_d = res_d.transport_stats["kind_bytes"]
+    assert kb_o["replica_ov"] > 0 and kb_d["replica_ov"] == 0
+    last_gen = max(gens_o)
+    assert res_o.shipped_gens and \
+        all(v >= last_gen for v in res_o.shipped_gens.values())
+
+
+# ============== queue vs TCP decision parity, overlapped =================
+
+@pytest.mark.live
+@pytest.mark.slow
+def test_overlap_queue_tcp_decision_parity_under_netem():
+    """The overlap path crosses a real process boundary under the same
+    NetemSpec without changing a single decision: partition-points
+    sequences match the queue transport's exactly, losses match to float
+    tolerance, and both transports carried overlapped replica traffic."""
+    netem = NetemSpec.wan(latency=0.003, jitter=0.001, rate=40e6, seed=3)
+    spec = WorkloadSpec(kind="mlp", seed=0, num_layers=8)
+    chain, batches = spec.build()
+
+    def cfg():
+        return _det_cfg(num_batches=22,
+                        protocol=ProtocolConfig(
+                            chain_every=8, global_every=16,
+                            repartition_first_at=5,
+                            repartition_every=10_000,
+                            detect_timeout=0.8),
+                        overlap_replication=True, netem=netem)
+
+    queue_res = run_live_training(chain, batches, cfg())
+    tcp_res = run_tcp_training(spec, cfg())
+
+    assert tcp_res.worker_exitcodes == {1: 0, 2: 0}
+    q_pts = [tuple(int(p) for p in pts) for _, pts in queue_res.partitions]
+    t_pts = [tuple(int(p) for p in pts) for _, pts in tcp_res.partitions]
+    assert q_pts == t_pts
+    np.testing.assert_allclose(tcp_res.losses, queue_res.losses,
+                               rtol=1e-4, atol=1e-5)
+    assert queue_res.transport_stats["kind_bytes"]["replica_ov"] > 0
+    assert tcp_res.transport_stats["kind_bytes"]["replica_ov"] > 0
+
+
+# ================= simulator predicts live, overlapped ===================
+
+def test_simulator_overlap_cheapens_replication_rounds():
+    """Sim-side pricing of §10: overlapped rounds hold the drain only for
+    the snapshot+ack round trip (commit_rtt), so the overlapped virtual
+    clock finishes strictly earlier while every partition decision stays
+    identical — same decision layer, cheaper event."""
+    devs = [DeviceSpec("c", 1.0), DeviceSpec("a", 1.2), DeviceSpec("b", 2.0)]
+    # slow links: shipping a slice costs well over commit_rtt, so the
+    # overlapped rounds' savings show up in the virtual clock
+    kw = dict(devices=devs, profile=_fixed_profile(),
+              bandwidth=uniform_bandwidth(3, 1e5), num_batches=60,
+              chain_every=5, global_every=10, repartition_first_at=10,
+              repartition_every=20)
+    drain = PipelineSimulator(SimConfig(**kw)).run()
+    over = PipelineSimulator(
+        SimConfig(overlap_replication=True, **kw)).run()
+    assert over.partitions == drain.partitions
+    assert over.total_time < drain.total_time
+    assert any("(overlapped)" in e for _, e in over.events)
+    assert not any("(overlapped)" in e for _, e in drain.events)
+
+
+@pytest.mark.live
+def test_simulator_predicts_live_recovery_with_overlap_enabled():
+    """Acceptance: with overlap on BOTH sides, the live runtime's
+    post-failure partition still equals the PipelineSimulator's prediction
+    — the shared runtime/protocol.py decision layer is untouched by
+    moving the bytes off the critical path."""
+    chain, data = _chain_and_data()
+    specs = [DeviceSpec("central", 1.0), DeviceSpec("peer", 1.0),
+             DeviceSpec("slow", 4.0)]
+    bw = uniform_bandwidth(3, 1e9)
+    profile = chain.measure_profile(data[0], repeats=2)
+    B = 30
+    proto = ProtocolConfig(chain_every=10, global_every=20,
+                           repartition_first_at=5, repartition_every=15,
+                           detect_timeout=0.4,
+                           overlap_replication=True)
+
+    live = run_live_training(chain, data, LiveConfig(
+        num_workers=3, num_batches=B, protocol=proto, lr=0.1,
+        device_specs=specs, bandwidth=bw, profile=profile,
+        capacity_source="spec", kill=(1, 12)))
+
+    sim = PipelineSimulator(SimConfig(
+        devices=specs, profile=profile, bandwidth=bw, num_batches=B,
+        chain_every=proto.chain_every, global_every=proto.global_every,
+        repartition_first_at=proto.repartition_first_at,
+        repartition_every=proto.repartition_every,
+        overlap_replication=True))
+    pred = sim.run(fail=(1, 15))
+
+    assert len(live.recoveries) == 1
+    live_points = [tuple(int(p) for p in pts) for _, pts in live.partitions]
+    sim_points = [tuple(int(p) for p in pts) for _, pts in pred.partitions]
+    assert live_points[-1] == sim_points[-1]
+    assert tuple(int(p) for p in live.recoveries[0]["partition"]) \
+        == sim_points[-1]
+    assert any("(overlapped)" in e for _, e in live.events)
+
+
+# ============================ chaos pass =================================
+
+@pytest.mark.live
+def test_sigkill_during_overlap_shipment_recovers_untorn(monkeypatch):
+    """Queue transport: kill a worker one batch after a cadence point —
+    its queued ov_* shipments are (at most partially) drained when it
+    dies. §III-F must restore from the last COMPLETE snapshot generation:
+    the store audit proves no absorbed message was ever torn, and
+    training completes finite with one clean recovery."""
+    chain, data = _chain_and_data()
+    cfg = _det_cfg(num_batches=16,
+                   protocol=ProtocolConfig(chain_every=4, global_every=4,
+                                           repartition_first_at=10_000,
+                                           repartition_every=10_000,
+                                           detect_timeout=0.4),
+                   overlap_replication=True, kill=(1, 5))
+    res, gstore, chain_stores = _recorded_run(chain, data, cfg,
+                                              monkeypatch)
+
+    assert len(res.recoveries) == 1
+    assert res.recoveries[0]["failed"] == [1]
+    assert not np.isnan(res.losses).any()
+    # recovery restored trained weights, not garbage: the tail beats the
+    # untrained head
+    untrained = float(np.median(res.losses[:3]))
+    assert float(np.median(res.losses[-4:])) < 0.8 * untrained
+
+    # never torn, on any receiver, including messages cut short by the kill
+    _audit_untorn(gstore, chain.num_layers)
+    for store in chain_stores.values():
+        _audit_untorn(store, chain.num_layers)
+    # every stamp the store serves is a generation some complete message
+    # carried (restore-from-complete-generation, §10)
+    put_gens = {b for op, b, _, _ in gstore.history if op == "put"}
+    refr_gens = {b for op, b, _, _ in gstore.history if op == "refresh"}
+    for j, b in gstore.batches().items():
+        assert b in put_gens | refr_gens
+
+
+@pytest.mark.live
+@pytest.mark.slow
+def test_tcp_sigkill_mid_shipment_overlap_recovers():
+    """Own-process workers under shaped WAN links: SIGKILL lands one batch
+    after a cadence point, while the dead worker's overlapped shipment can
+    still be in flight on a rate-limited link. The cluster detects,
+    recovers once, evicts exactly the killed device, and converges."""
+    spec = WorkloadSpec(kind="mlp", seed=0, num_layers=8)
+    cfg = _det_cfg(num_batches=22,
+                   protocol=ProtocolConfig(chain_every=8, global_every=8,
+                                           repartition_first_at=10_000,
+                                           repartition_every=10_000,
+                                           detect_timeout=0.8),
+                   overlap_replication=True, kill=(1, 9),
+                   netem=NetemSpec.wan(latency=0.002, jitter=0.001,
+                                       rate=20e6, seed=1))
+    res = run_tcp_training(spec, cfg)
+
+    assert res.worker_exitcodes[1] == -9       # really died by SIGKILL
+    assert res.worker_exitcodes[2] == 0
+    assert len(res.recoveries) == 1
+    assert res.recoveries[0]["failed"] == [1]
+    assert not np.isnan(res.losses).any()
+    assert res.transport_stats["kind_bytes"]["replica_ov"] > 0
+    untrained = float(np.median(res.losses[:3]))
+    assert float(np.median(res.losses[-4:])) < 0.8 * untrained
+
+
+@pytest.mark.live
+def test_sigkill_joiner_mid_cap_probe_does_not_wedge(monkeypatch):
+    """Overlap fires the §III-D capacity probe at hello time; the
+    hot-joiner dies MID-probe (one timing rep done, ack never sent). The
+    coordinator's probe window must expire cleanly, the dead joiner's
+    admission must fall into the standard shortfall -> §III-F machinery,
+    and the run completes finite on the survivors."""
+    probed = []
+    orig = live_mod.Worker._do_cap_probe
+
+    def dying_probe(self, spec):
+        if self.dev >= 2:                 # the hot-joiner (id = launch N)
+            probed.append(self.dev)
+            x0 = self.chain.input_of(self.data_fn(0))
+            self.chain.apply_layer(0, self.chain.params[0], x0)
+            self.crash()                  # device death mid-measurement:
+            return                        # cap_probe_ack never sent
+        orig(self, spec)
+
+    monkeypatch.setattr(live_mod.Worker, "_do_cap_probe", dying_probe)
+    chain, data = _chain_and_data()
+    cfg = LiveConfig(num_workers=2, num_batches=16,
+                     protocol=ProtocolConfig(chain_every=4, global_every=8,
+                                             repartition_first_at=10_000,
+                                             repartition_every=10_000,
+                                             detect_timeout=0.5),
+                     lr=0.1, join_after=6, join_wait=3.0,
+                     overlap_replication=True, capacity_source="measured")
+    res = run_live_training(chain, data, cfg)
+
+    assert probed == [2]                  # the hello-time probe DID fire
+    assert not np.isnan(res.losses).any()
+    # the dead joiner never ends up serving layers
+    assert len(res.final_partition) == 2

@@ -147,6 +147,7 @@ def test_flash_kernel_q_offset_property():
                                    np.asarray(ref), atol=1e-5)
 
 
+@pytest.mark.slow
 def test_bf16_grads_training_still_learns(mesh):
     from repro.data.synthetic import SyntheticLM, lm_batches
     cfg = get_config("qwen2-1.5b").reduced(pipeline_stages=2,

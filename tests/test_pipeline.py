@@ -34,6 +34,7 @@ ARCHS = [("qwen2-1.5b", 2), ("olmoe-1b-7b", 2), ("xlstm-125m", 2),
          ("zamba2-7b", 1), ("chatglm3-6b", 2)]
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch,tp", ARCHS)
 def test_pipeline_loss_and_grads_match_sequential(mesh, arch, tp):
     cfg = get_config(arch).reduced(pipeline_stages=2, tensor_parallel=tp,
@@ -57,6 +58,7 @@ def test_pipeline_loss_and_grads_match_sequential(mesh, arch, tp):
                                    np.asarray(b, np.float32), atol=5e-4)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch,tp", [("qwen2-1.5b", 2), ("zamba2-7b", 1),
                                      ("xlstm-125m", 2)])
 def test_pipeline_decode_matches_sequential(mesh, arch, tp):
@@ -98,6 +100,7 @@ def test_whisper_pipeline_matches_sequential(mesh):
     assert float(metrics["loss"]) == pytest.approx(float(ref), abs=2e-4)
 
 
+@pytest.mark.slow
 def test_microbatch_count_invariance(mesh):
     """Pipelined loss must not depend on the microbatch split."""
     cfg = get_config("qwen2-1.5b").reduced(pipeline_stages=2,
@@ -115,6 +118,7 @@ def test_microbatch_count_invariance(mesh):
     assert max(losses) - min(losses) < 1e-4, losses
 
 
+@pytest.mark.slow
 def test_train_step_stash_and_aggregation(mesh):
     """stash_depth=2: forward runs on one-step-stale weights; aggregation
     blends (new, stash) on all but the last stage every `aggregate_every`."""

@@ -69,6 +69,7 @@ def _check_contract(x, res, levels, block=32):
     return np.asarray(q), np.asarray(res2)
 
 
+@pytest.mark.slow
 @settings(max_examples=25, deadline=None)
 @given(rows=st.integers(1, 5), cols=st.integers(1, 70),
        levels=st.sampled_from([4, 255]),
@@ -164,6 +165,7 @@ def test_device_quantized_codec_round_trip_preserves_bits():
         np.asarray(dequantize(q, lo, scale, block=32)))
 
 
+@pytest.mark.slow
 def test_error_feedback_beats_naive_requantization():
     """Coarse (levels=4) quantized SGD on a noisy quadratic: with a
     persistent gradient range (fixed minibatch-noise sequence, shared by

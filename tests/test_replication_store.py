@@ -60,7 +60,8 @@ class TestTierByteAccounting:
         assert s.nbytes() == 0
         assert s.nbytes(CHAIN) == 0
         assert s.nbytes_report() == {"per_tier": {}, "deduped": 0,
-                                     "duplicated": 0}
+                                     "duplicated": 0, "in_memory": 0,
+                                     "on_disk": 0}
         assert not s.has(0)
         assert s.get(0) is None
 

@@ -73,10 +73,17 @@ def test_multi_stage_converges():
 
 
 def test_aggregation_stabilizes_high_lr():
-    """Paper Fig. 4 mechanism: aggregation extends the stable lr range."""
-    _, base = _run(3, 0, lr=0.05, n=120)
-    _, agg = _run(3, 3, lr=0.05, n=120)
-    assert np.mean(agg[-20:]) < np.mean(base[-20:])
+    """Paper Fig. 4 mechanism: aggregation extends the stable lr range.
+
+    The regime is chosen so the outcome is deterministic (fixed seeds, no
+    threading): at lr=0.3 the plain 3-stage async run diverges to
+    non-finite loss and never recovers, while periodic aggregation pulls
+    the same run back to a bounded tail."""
+    _, base = _run(3, 0, lr=0.3, n=120)
+    _, agg = _run(3, 3, lr=0.3, n=120)
+    assert not np.isfinite(np.mean(base[-20:]))
+    agg_tail = np.mean(agg[-20:])
+    assert np.isfinite(agg_tail) and agg_tail < 5.0
 
 
 def test_versions_are_stale_by_pipeline_depth():

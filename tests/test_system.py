@@ -40,6 +40,7 @@ def _train(mesh, cfg, steps=40, lr=0.02, opt="adam"):
     return losses
 
 
+@pytest.mark.slow
 def test_pipelined_training_learns(mesh):
     cfg = get_config("qwen2-1.5b").reduced(pipeline_stages=2,
                                            tensor_parallel=2, num_layers=4,
@@ -49,6 +50,7 @@ def test_pipelined_training_learns(mesh):
     assert np.mean(losses[-8:]) < np.mean(losses[:8]) - 0.1
 
 
+@pytest.mark.slow
 def test_training_with_stash_and_aggregation_learns(mesh):
     cfg = get_config("qwen2-1.5b").reduced(
         pipeline_stages=2, tensor_parallel=2, num_layers=4, vocab_size=256,
@@ -78,6 +80,7 @@ def test_full_ftpipehd_protocol_with_failure():
     assert len(pts) == 2 and pts[-1] == sim.cfg.profile.num_layers - 1
 
 
+@pytest.mark.slow
 def test_checkpoint_recovery_roundtrip(mesh, tmp_path):
     """Train, checkpoint, 'lose' state, restore, verify bit-equality."""
     from repro.checkpoint import CheckpointStore

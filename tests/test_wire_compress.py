@@ -67,7 +67,7 @@ def test_live_config_wire_policy_tiers():
 
 # ===================== delta-plus-skip replication =======================
 
-def _worker_pair():
+def _worker_pair(**cfg_kw):
     """A real Worker wired to a queue transport, installed on layers 0..3,
     with node 1 as its chain neighbor (no threads started)."""
     chain = mlp_chain(jax.random.PRNGKey(0), num_layers=4)
@@ -77,7 +77,7 @@ def _worker_pair():
         t.register(n)
     data = classification_batches("mlp", 4, batch=8, seed=0)
     w = Worker(0, chain, lambda gb: data[gb % len(data)], t,
-               LiveConfig(num_workers=2), threading.Event(),
+               LiveConfig(num_workers=2, **cfg_kw), threading.Event(),
                DeviceSpec("dev-0"), layout)
     flats = {j: layout.pack_layer(j, chain.params[j]) for j in range(4)}
     w.install((0, 3), flats)
@@ -90,7 +90,10 @@ def _replicate(w, batch, full=False):
 
 
 def test_delta_skip_ships_only_changed_layers():
-    w, t = _worker_pair()
+    # bytes mode compares packed slices, so a direct stash write to ONE
+    # layer is detected per-layer (counters mode is coarser for writes
+    # outside the fused step — covered below)
+    w, t = _worker_pair(repl_delta="bytes")
     _replicate(w, 0, full=True)
     first = t.recv(1, timeout=0.5)
     assert sorted(first.payload["layers"]) == [0, 1, 2, 3]
@@ -113,6 +116,31 @@ def test_delta_skip_ships_only_changed_layers():
     third = t.recv(1, timeout=0.5)
     assert sorted(third.payload["layers"]) == [2]
     assert third.payload["same"] == {0: 1, 1: 1, 3: 1}
+
+
+def test_counters_delta_skips_without_byte_compare():
+    """Default counters mode: unchanged layers are skipped by their
+    change generation alone, and a stash write OUTSIDE the fused step
+    (aggregation, install) bumps the worker-level counter — conservative
+    in the safe direction, the whole snapshot re-ships."""
+    w, t = _worker_pair(repl_delta="counters")
+    _replicate(w, 0, full=True)
+    first = t.recv(1, timeout=0.5)
+    assert sorted(first.payload["layers"]) == [0, 1, 2, 3]
+
+    _replicate(w, 1)
+    second = t.recv(1, timeout=0.5)
+    assert second.payload["layers"] == {}
+    assert second.payload["same"] == {0: 0, 1: 0, 2: 0, 3: 0}
+
+    buf = np.array(w.stash.newest())
+    buf[w.slice_layout.offsets[2]] += 1.0
+    w.stash.push(w.stash.newest_v + 1, buf)
+    w._extra_gen += 1          # what every out-of-step stash write does
+    _replicate(w, 2)
+    third = t.recv(1, timeout=0.5)
+    assert sorted(third.payload["layers"]) == [0, 1, 2, 3]
+    assert third.payload["same"] == {}
 
 
 def test_full_flag_discards_shadow():

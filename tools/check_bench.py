@@ -42,6 +42,9 @@ process), so there is no committed baseline to drift:
   * ``wan_static_batch_ms >= 1.5 * wan_dynamic_batch_ms`` — the paper's
     headline: dynamic partition beats the static equal split by >= 1.5x
     per steady-state batch on the heterogeneous trio under shaped links
+  * ``wan_drain_batch_ms >= 1.2 * wan_overlap_batch_ms`` — overlapped
+    replication (snapshot at the control point, ship during compute)
+    beats drain-mode replication by >= 1.2x per steady-state batch
 
 Unlike the relative gates below, a metric missing from a --wan result is
 a FAILURE: the WAN gates are this benchmark's entire reason to run.
@@ -170,6 +173,8 @@ WAN_GATES = [
      "worst shaper fidelity (latency+rate, queue+tcp) vs LinkSpec"),
     ("wan_static_batch_ms", "wan_dynamic_batch_ms", 1.50,
      "dynamic-partition speedup over static equal split under WAN links"),
+    ("wan_drain_batch_ms", "wan_overlap_batch_ms", 1.20,
+     "overlapped-replication speedup over drain mode under WAN links"),
 ]
 
 
@@ -293,9 +298,12 @@ def main() -> int:
             return 1
         speedup = (float(current["wan_static_batch_ms"])
                    / float(current["wan_dynamic_batch_ms"]))
+        ov = (float(current["wan_drain_batch_ms"])
+              / float(current["wan_overlap_batch_ms"]))
         print(f"check_bench: WAN OK — fidelity_min="
               f"{float(current['wan_fidelity_min']):.3f} (floor 0.80), "
-              f"dynamic speedup {speedup:.2f}x (floor 1.50x)")
+              f"dynamic speedup {speedup:.2f}x (floor 1.50x), "
+              f"overlap speedup {ov:.2f}x (floor 1.20x)")
         return 0
 
     if not args.current:
